@@ -1,0 +1,100 @@
+"""Benchmark: communication volume of the compressed allreduce
+(paper Fig. 3 / Sec. 6 / the "5x less end-to-end volume" claim).
+
+Measures the bytes that actually cross the interconnect by compiling the
+optimizer exchange on an 8-way mesh and parsing the collective operand
+bytes out of the optimized HLO — the wire format (packed uint8 + f32
+scales) is real, so the reduction shows up in the compiled artifact, not
+in a simulation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from repro.core.compression import CompressionConfig, wire_bytes
+
+_MEASURE_CODE = """
+import json
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.analysis.roofline import analyze_compiled
+from repro.core.compression import CompressionConfig
+from repro.core.comm import compressed_allreduce
+from repro.launch.mesh import make_mesh
+
+d, n, block = {d}, {n}, {block}
+out = {{}}
+for kind in ("identity", "onebit"):
+    mesh = make_mesh((n,), ("data",))
+    cfg = CompressionConfig(kind=kind, block_size=block)
+
+    def body(x, we, se):
+        o, nw, ns = compressed_allreduce(x[0], we[0], se[0], ("data",), cfg)
+        return o[None], nw[None], ns[None]
+
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh, in_specs=(P("data", None),) * 3,
+        out_specs=(P("data", None),) * 3, check_vma=False))
+    args = (jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d // n), jnp.float32))
+    rep = analyze_compiled(f.lower(*args).compile())
+    out[kind] = {{"bytes": rep.coll_bytes, "kinds": dict(rep.coll_by_kind)}}
+print(json.dumps(out))
+"""
+
+
+def volume_for(d: int, n: int = 8, block: int = 4096):
+    """Measure compiled collective bytes in a subprocess with n forced host
+    devices (benchmarks themselves keep seeing the real single device)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", _MEASURE_CODE.format(d=d, n=n, block=block)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def endtoend_volume_ratio(warmup_ratio: float, compression: float = 32.0):
+    """Paper Sec. 7.1: 1 / (w + (1-w)/16) for fp16; we report the fp32
+    analogue with the measured wire compression."""
+    return 1.0 / (warmup_ratio + (1.0 - warmup_ratio) / compression)
+
+
+def run(verbose: bool = True):
+    d = 1 << 20  # 1M params
+    results = {}
+    vols = volume_for(d)
+    b_id = vols["identity"]["bytes"]
+    b_1b = vols["onebit"]["bytes"]
+    ratio = b_id / b_1b
+    results["uncompressed_bytes_per_dev"] = int(b_id)
+    results["onebit_bytes_per_dev"] = int(b_1b)
+    results["wire_compression_x"] = round(ratio, 2)
+    # paper's end-to-end claim with BERT-Large warmup ratio 23K/152K
+    w = 23_000 / 152_000
+    results["paper_endtoend_volume_x_fp16"] = round(
+        endtoend_volume_ratio(w, 16.0), 2)   # paper computes ~5x with 1/16
+    results["our_endtoend_volume_x_fp32"] = round(
+        endtoend_volume_ratio(w, ratio), 2)
+    # analytic wire bytes cross-check
+    cfg = CompressionConfig(block_size=4096)
+    results["analytic_payload_ratio"] = round(4 * d / wire_bytes(d, cfg), 2)
+    if verbose:
+        print("== comm_volume (Fig. 3 / Sec. 6) ==")
+        for k, v in results.items():
+            print(f"  {k}: {v}")
+        ok = ratio > 10.0
+        print(f"  [{'PASS' if ok else 'FAIL'}] compiled wire compression "
+              f"{ratio:.1f}x > 10x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Benchmark: compression-kernel microbenchmark.
+
+On this CPU container the Pallas kernels run in interpret mode (Python),
+so wall-clock numbers are meaningless for the TPU target; what we measure:
+  * correctness drift between kernel / jnp reference across sizes,
+  * wire bytes per scheme,
+  * host throughput of the jit'd jnp path (the fallback path's real cost).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import (CompressionConfig, compress_onebit,
+                                    decompress_onebit, wire_bytes)
+from repro.kernels.onebit import ops as kops
+from repro.kernels.onebit import ref as kref
+
+
+def run(verbose: bool = True) -> Dict:
+    results = {}
+    rng = np.random.default_rng(0)
+    for d in (1 << 16, 1 << 20):
+        x = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        e = jnp.asarray(rng.normal(size=(d,)).astype(np.float32)) * 0.1
+        pk_k, sc_k, ne_k = kops.ef_compress_fused(x, e, block_size=4096)
+        pk_r, sc_r, ne_r = kref.ef_compress_fused(x, e, block_size=4096)
+        drift = float(jnp.max(jnp.abs(ne_k - ne_r)))
+        cfg = CompressionConfig()
+        results[f"d={d}"] = {
+            "kernel_vs_ref_err": drift,
+            "wire_bytes": wire_bytes(d, cfg),
+            "fp32_bytes": 4 * d,
+            "ratio": round(4 * d / wire_bytes(d, cfg), 1),
+        }
+        # host throughput of the jnp path
+        f = jax.jit(lambda x: compress_onebit(x, 4096))
+        f(x)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            f(x)[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / 10
+        results[f"d={d}"]["jnp_compress_gbps"] = round(4 * d / dt / 1e9, 2)
+    if verbose:
+        print("== kernel_micro ==")
+        for k, v in results.items():
+            print(f"  {k}: {v}")
+        ok = all(v["kernel_vs_ref_err"] == 0.0 for v in results.values())
+        print(f"  [{'PASS' if ok else 'FAIL'}] Pallas kernel bit-exact "
+              f"vs jnp oracle")
+    return results
+
+
+if __name__ == "__main__":
+    run()

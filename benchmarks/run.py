@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  comm_volume         Fig. 3 / Sec. 6  (compiled wire bytes, 32x)
+  comm_fraction       Table 1          (allreduce share of step time)
+  convergence         Fig. 1/4/6       (1-bit Adam ~ Adam; naive fails)
+  resnet_convergence  Sec. 7.2/supp    (5-optimizer ResNet comparison)
+  dcgan_convergence   Sec. 7.3/Fig. 8  (GAN equilibrium under 1-bit)
+  variance_stability  Fig. 2           (v stabilizes; auto-warmup rule)
+  throughput_scaling  Fig. 5 / Fig. 9  (scalability / bandwidth sweep)
+  kernel_micro        (system)         (Pallas kernel vs oracle + wire)
+  block_size_ablation (ablation)       (scale granularity vs error/bits)
+
+Run all: PYTHONPATH=src python -m benchmarks.run
+One:     PYTHONPATH=src python -m benchmarks.run --only convergence
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks import (block_size_ablation, comm_fraction, comm_volume,
+                        convergence, dcgan_convergence, kernel_micro,
+                        resnet_convergence, throughput_scaling,
+                        variance_stability)
+
+ALL = {
+    "comm_volume": comm_volume.run,
+    "comm_fraction": comm_fraction.run,
+    "variance_stability": variance_stability.run,
+    "convergence": convergence.run,
+    "resnet_convergence": resnet_convergence.run,
+    "dcgan_convergence": dcgan_convergence.run,
+    "throughput_scaling": throughput_scaling.run,
+    "kernel_micro": kernel_micro.run,
+    "block_size_ablation": block_size_ablation.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=list(ALL), default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+    names = [args.only] if args.only else list(ALL)
+    out = {}
+    for name in names:
+        t0 = time.time()
+        out[name] = ALL[name](verbose=True)
+        print(f"  ({time.time() - t0:.1f}s)\n")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+    print(f"ran {len(names)} benchmarks")
+
+
+if __name__ == "__main__":
+    main()

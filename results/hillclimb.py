@@ -1,0 +1,40 @@
+"""§Perf hillclimb driver: named experiments over lower_one."""
+import json, sys
+sys.path.insert(0, "/root/repo/src")
+from repro.launch.dryrun import lower_one
+
+EXPS = [
+    # Pair A: granite-34b x train_4k (most collective-bound)
+    ("A1_sp",          dict(arch="granite-34b", shape_name="train_4k", seq_parallel=True)),
+    ("A2_tp8",         dict(arch="granite-34b", shape_name="train_4k", mesh_override=((32, 8), ("data", "model")))),
+    ("A3_tp8_sp",      dict(arch="granite-34b", shape_name="train_4k", mesh_override=((32, 8), ("data", "model")), seq_parallel=True)),
+    # Pair B: mixtral-8x22b x train_4k (compute-bound, worst useful-FLOP ratio)
+    ("B1_remat_dots",  dict(arch="mixtral-8x22b", shape_name="train_4k", cfg_overrides={"remat_policy": "dots"})),
+    ("B2_cap10",       dict(arch="mixtral-8x22b", shape_name="train_4k", cfg_overrides={"capacity_factor": 1.0})),
+    ("B3_dots_cap10",  dict(arch="mixtral-8x22b", shape_name="train_4k", cfg_overrides={"remat_policy": "dots", "capacity_factor": 1.0})),
+    # Pair C: internlm2-1.8b x train_4k (paper-representative: dp comm)
+    ("C1_tp4",         dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((64, 4), ("data", "model")))),
+    ("C1w_tp4_warmup", dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((64, 4), ("data", "model")), stage="warmup")),
+    ("C2_tp4_sp",      dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((64, 4), ("data", "model")), seq_parallel=True)),
+    ("C3_tp2",         dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((128, 2), ("data", "model")))),
+    # round 2
+    ("A4_tp8_dots",    dict(arch="granite-34b", shape_name="train_4k", mesh_override=((32, 8), ("data", "model")), cfg_overrides={"remat_policy": "dots"})),
+    ("B4_gather",      dict(arch="mixtral-8x22b", shape_name="train_4k", cfg_overrides={"moe_dispatch": "gather"})),
+    ("B5_gather_dots_cap10", dict(arch="mixtral-8x22b", shape_name="train_4k", cfg_overrides={"moe_dispatch": "gather", "remat_policy": "dots", "capacity_factor": 1.0})),
+    ("C4_tp2_sp",      dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((128, 2), ("data", "model")), seq_parallel=True)),
+    ("C5_tp4_hier_multipod", dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((2, 64, 2), ("pod", "data", "model")), stage="compressed_hier")),
+    ("C5w_warmup_multipod",  dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((2, 64, 2), ("pod", "data", "model")), stage="warmup")),
+    ("C5c_flat_multipod",    dict(arch="internlm2-1.8b", shape_name="train_4k", mesh_override=((2, 64, 2), ("pod", "data", "model")), stage="compressed")),
+]
+
+with open("/root/repo/results/hillclimb.jsonl", "a") as f:
+    for name, kw in EXPS:
+        try:
+            r = lower_one(**kw)
+            r["exp"] = name
+            rl = r["roofline"]
+            print(f"{name:16s} t=(c {rl['t_compute_s']:.3e}, m {rl['t_memory_s']:.3e}, x {rl['t_collective_s']:.3e}) "
+                  f"bneck={rl['bottleneck']} temp={r['memory']['temp_bytes']/2**30:.1f}GB", flush=True)
+            f.write(json.dumps(r) + "\n")
+        except Exception as e:
+            print(f"{name} FAIL {type(e).__name__}: {e}", flush=True)

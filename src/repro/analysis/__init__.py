@@ -1,0 +1,2 @@
+from repro.analysis.roofline import (RooflineReport, analyze_compiled,  # noqa
+                                     parse_hlo_costs)

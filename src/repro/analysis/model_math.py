@@ -1,0 +1,64 @@
+"""Analytic model FLOPs (the 6·N·D yardstick) per (arch, input shape).
+
+Used in EXPERIMENTS.md §Roofline as the "useful compute" numerator: the
+ratio MODEL_FLOPS / HLO_dot_FLOPs exposes remat recompute, padded-head
+waste, MoE dispatch overhead, and attention score FLOPs (which 6ND
+ignores by convention — they are reported separately).
+
+Conventions:
+  N        = active parameters EXCLUDING the input embedding table
+             (lookups are gathers, not matmuls); the unembedding matmul IS
+             counted via its parameters.
+  train    : 6 * N * tokens   (fwd 2ND + bwd 4ND)
+  prefill  : 2 * N * tokens
+  decode   : 2 * N * batch    (one token per sequence) — KV-cache reads
+             are memory traffic, not matmul FLOPs.
+  attention scores (train/prefill): 12 * L_attn * H * hd * S^2 * B / 2
+             causal (6 * ... * S^2) fwd+bwd, reported as `attn_flops`.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _embed_params(cfg: ArchConfig, tp: int = 1) -> int:
+    if cfg.embed_kind in ("tokens", "prefix"):
+        return cfg.padded_vocab(tp) * cfg.d_model
+    return 0
+
+
+def active_params_no_embed(cfg: ArchConfig, tp: int = 1) -> int:
+    return cfg.active_param_count(tp) - _embed_params(cfg, tp)
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape, tp: int = 1
+                ) -> Dict[str, float]:
+    n = active_params_no_embed(cfg, tp)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        core = 6.0 * n * b * s
+    elif shape.kind == "prefill":
+        core = 2.0 * n * b * s
+    else:  # decode: one token per sequence
+        core = 2.0 * n * b
+
+    # attention score/value matmul FLOPs (not in 6ND)
+    n_attn = sum(cfg.is_attn_layer(i) for i in range(cfg.n_layers))
+    hq = cfg.padded_heads(tp)
+    hd = cfg.head_dim
+    if n_attn and hq:
+        if shape.kind == "train":
+            # causal: S^2/2 scores; qk^T + att*v = 4*hd flops per score pair
+            # fwd; x3 with backward
+            attn = 12.0 * n_attn * b * (s ** 2) / 2 * hq * hd
+        elif shape.kind == "prefill":
+            attn = 4.0 * n_attn * b * (s ** 2) / 2 * hq * hd
+        else:
+            ctx_len = min(s, cfg.window) if cfg.window else s
+            attn = 4.0 * n_attn * b * ctx_len * hq * hd
+    else:
+        attn = 0.0
+    return {"model_flops": core, "attn_flops": attn,
+            "n_active_no_embed": float(n)}

@@ -1,0 +1,339 @@
+"""Roofline analysis from the compiled (optimized) HLO.
+
+XLA's ``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+silently undercounts scanned layer stacks by the trip count. This module
+parses the optimized HLO text into its computation call graph, extracts
+
+  * dot FLOPs (matmul-dominated compute),
+  * dot/convolution operand+result bytes (HBM traffic estimate),
+  * collective operand bytes per op kind (wire traffic),
+  * while trip counts (from the loop condition's compare-against-constant),
+
+and aggregates them bottom-up with multiplicities (while body x trip count,
+fusions/calls x 1). All quantities are PER DEVICE because the HLO is the
+SPMD per-device program.
+
+The three roofline terms (seconds, TPU v5e):
+  compute    = dot_flops / 197e12
+  memory     = hbm_bytes / 819e9
+  collective = wire_bytes / 50e9
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_CALLED_RE = re.compile(
+    r"(?:calls|body|condition|to_apply|branch_computations)="
+    r"(?:\{([^}]*)\}|(%?[\w\.\-]+))")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _all_shapes(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+@dataclasses.dataclass
+class CompCost:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0          # sum of collective operand bytes
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    calls: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # (called computation, kind) where kind in {"call", "while_body"}
+    while_trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    body: List[str] = []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if cur is None:
+            m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$",
+                         stripped)
+            if m and not stripped.startswith("//"):
+                cur = m.group(1)
+                body = []
+            continue
+        if stripped == "}" or stripped.startswith("} "):
+            comps[cur] = body
+            cur = None
+        else:
+            body.append(stripped)
+    return comps
+
+
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\]")
+_ARGS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _sym_table(body: List[str]) -> Dict[str, Tuple[str, Tuple[int, ...]]]:
+    """name -> (dtype, shape) for every non-tuple-typed op definition."""
+    table = {}
+    for line in body:
+        m = _DEF_RE.match(line)
+        if m and m.group(2) in _DTYPE_BYTES:
+            dims = m.group(3)
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            table[m.group(1)] = (m.group(2), shape)
+    return table
+
+
+def _operand_shapes(line: str, table) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Shapes of the %name operands inside the op's parens."""
+    p = line.find("(")
+    if p < 0:
+        return []
+    inner = line[p + 1:line.find(")", p) if ")" in line[p:] else len(line)]
+    out = []
+    for m in _ARGS_RE.finditer(inner):
+        ent = table.get(m.group(1))
+        if ent:
+            out.append(ent)
+    return out
+
+
+def _bytes_of(ent: Tuple[str, Tuple[int, ...]]) -> int:
+    dt, shape = ent
+    n = 1
+    for d in shape:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _line_cost(line: str, table, cost: CompCost):
+    mdef = _DEF_RE.match(line)
+    res = None
+    if mdef and mdef.group(2) in _DTYPE_BYTES:
+        dims = mdef.group(3)
+        res = (mdef.group(2),
+               tuple(int(d) for d in dims.split(",")) if dims else ())
+    if re.search(r"\bdot\(", line):
+        args = _operand_shapes(line, table)
+        res_elems = float(np.prod(res[1])) if res and res[1] else 1.0
+        cd = 1.0
+        lhs_m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if lhs_m and args:
+            lhs_shape = args[0][1]
+            for i in lhs_m.group(1).split(","):
+                if i != "" and int(i) < len(lhs_shape):
+                    cd *= lhs_shape[int(i)]
+        cost.dot_flops += 2.0 * res_elems * cd
+        cost.hbm_bytes += sum(_bytes_of(a) for a in args)
+        if res:
+            cost.hbm_bytes += _bytes_of(res)
+        return
+    for kind in _COLLECTIVES:
+        m = re.search(rf"\b{kind}(?:-start)?\(", line)
+        if m:
+            # result bytes: every typed shape between '=' and the op name
+            # (handles tuple results of combined/multi-operand collectives)
+            eq = line.find("=")
+            type_region = line[eq + 1:m.start()] if eq >= 0 else ""
+            res_b = sum(_shape_bytes(dt, ",".join(map(str, s)))
+                        for dt, s in _all_shapes(type_region))
+            # operand bytes: %name refs inside the op's own parens
+            arg_region = line[m.end():]
+            arg_region = arg_region[:arg_region.find(")")]
+            opb = sum(_bytes_of(table[a.group(1)])
+                      for a in _ARGS_RE.finditer(arg_region)
+                      if a.group(1) in table)
+            if opb == 0:
+                opb = res_b
+            # wire bytes per device (ring algorithms, (n-1)/n ~ 1):
+            #   all-reduce       2x operand   (reduce-scatter + all-gather)
+            #   all-gather       1x result    (operand is the 1/n shard)
+            #   reduce-scatter   1x operand
+            #   all-to-all       1x operand
+            #   collective-permute 1x operand
+            if kind == "all-reduce":
+                wire = 2.0 * opb
+            elif kind == "all-gather":
+                wire = float(res_b) if res_b else float(opb)
+            else:
+                wire = float(opb)
+            cost.coll_bytes += wire
+            cost.coll_by_kind[kind] += wire
+            return
+
+
+def parse_hlo_costs(hlo: str) -> Dict[str, CompCost]:
+    """Per-computation raw costs + call edges + while trip counts."""
+    comps = _split_computations(hlo)
+    costs: Dict[str, CompCost] = {}
+    # trip counts: a while condition compares the induction var against a
+    # constant; take the max integer constant in the condition computation.
+    max_const: Dict[str, int] = {}
+    for name, body in comps.items():
+        consts = [int(m.group(1)) for line in body
+                  for m in re.finditer(r"constant\((\d+)\)", line)]
+        if consts:
+            max_const[name] = max(consts)
+
+    for name, body in comps.items():
+        cost = CompCost()
+        table = _sym_table(body)
+        for line in body:
+            _line_cost(line, table, cost)
+            if re.search(r"\bwhile\(", line):
+                bm = re.search(r"body=%?([\w\.\-]+)", line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", line)
+                if bm:
+                    trips = max_const.get(cm.group(1), 1) if cm else 1
+                    cost.calls.append((bm.group(1), "while_body"))
+                    cost.while_trips[bm.group(1)] = max(trips, 1)
+            else:
+                for m in _CALLED_RE.finditer(line):
+                    targets = m.group(1) or m.group(2)
+                    for t in targets.split(","):
+                        t = t.strip().lstrip("%")
+                        if t and t in comps:
+                            cost.calls.append((t, "call"))
+        costs[name] = cost
+    return costs
+
+
+def _aggregate(costs: Dict[str, CompCost], root: str,
+               memo: Dict[str, Tuple[float, float, float, Dict[str, float]]]
+               ) -> Tuple[float, float, float, Dict[str, float]]:
+    if root in memo:
+        return memo[root]
+    memo[root] = (0.0, 0.0, 0.0, {})   # cycle guard
+    c = costs.get(root)
+    if c is None:
+        return memo[root]
+    fl, hb, cb = c.dot_flops, c.hbm_bytes, c.coll_bytes
+    by_kind = dict(c.coll_by_kind)
+    for callee, kind in c.calls:
+        mult = c.while_trips.get(callee, 1) if kind == "while_body" else 1
+        f2, h2, c2, k2 = _aggregate(costs, callee, memo)
+        fl += mult * f2
+        hb += mult * h2
+        cb += mult * c2
+        for k, v in k2.items():
+            by_kind[k] = by_kind.get(k, 0.0) + mult * v
+    memo[root] = (fl, hb, cb, by_kind)
+    return memo[root]
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    # per-device quantities
+    dot_flops: float
+    hbm_bytes: float                 # dot operand/result traffic (estimate)
+    coll_bytes: float                # collective operand bytes
+    coll_by_kind: Dict[str, float]
+    # xla's own (while-bodies-once) numbers, for cross-checking
+    xla_flops: Optional[float] = None
+    xla_bytes: Optional[float] = None
+    # memory capacity per device
+    arg_bytes: Optional[int] = None
+    out_bytes: Optional[int] = None
+    temp_bytes: Optional[int] = None
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.dot_flops / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        """No-overlap-free lower bound = max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "dot_flops_per_dev": self.dot_flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_by_kind": dict(self.coll_by_kind),
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "arg_bytes": self.arg_bytes,
+            "temp_bytes": self.temp_bytes,
+        }
+
+
+def analyze_compiled(compiled, entry: Optional[str] = None
+                     ) -> RooflineReport:
+    """Roofline terms from a jax Compiled object (per-device)."""
+    hlo = compiled.as_text()
+    costs = parse_hlo_costs(hlo)
+    root = entry
+    if root is None:
+        m = re.search(r"ENTRY\s+%?([\w\.\-]+)", hlo)
+        root = m.group(1) if m else max(
+            costs, key=lambda k: costs[k].dot_flops)
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+    fl, hb, cb, kinds = _aggregate(costs, root, memo)
+
+    xf = xb = None
+    try:
+        ca = compiled.cost_analysis()
+        if ca:
+            xf = float(ca.get("flops", 0.0))
+            xb = float(ca.get("bytes accessed", 0.0))
+    except Exception:
+        pass
+    ab = ob = tb = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            ab = int(ma.argument_size_in_bytes)
+            ob = int(ma.output_size_in_bytes)
+            tb = int(ma.temp_size_in_bytes)
+    except Exception:
+        pass
+    return RooflineReport(dot_flops=fl, hbm_bytes=hb, coll_bytes=cb,
+                          coll_by_kind=kinds, xla_flops=xf, xla_bytes=xb,
+                          arg_bytes=ab, out_bytes=ob, temp_bytes=tb)

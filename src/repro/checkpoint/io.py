@@ -1,0 +1,57 @@
+"""Minimal npz-based pytree checkpointing.
+
+Leaves are gathered to host (works for sharded arrays via
+``jax.device_get``), keyed by their tree path, and stored with the
+treedef's structure encoded in the keys. Atomic via write-to-temp + rename.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten_with_paths(tree: Any):
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)
+    flat, treedef = leaves_with_paths
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[key or "_root"] = np.asarray(jax.device_get(leaf))
+    return out, treedef
+
+
+def save_pytree(path: str, tree: Any, step: int = 0) -> None:
+    arrays, _ = _flatten_with_paths(tree)
+    arrays["__step__"] = np.asarray(step)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_pytree(path: str, like: Any):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with np.load(path) as data:
+        step = int(data["__step__"]) if "__step__" in data else 0
+        arrays = {k: data[k] for k in data.files if k != "__step__"}
+    ref, treedef = _flatten_with_paths(like)
+    missing = set(ref) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+    leaves = [arrays[k] for k in ref]
+    restored = jax.tree_util.tree_unflatten(treedef, leaves)
+    return restored, step

@@ -1,0 +1,9 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``."""
+from repro.configs.base import (ArchConfig, InputShape, SHAPES, get_config,
+                                input_specs, list_archs, register)  # noqa: F401
+
+# import for registration side-effects
+from repro.configs import (bert_large, deepseek_7b, falcon_mamba_7b,  # noqa
+                           granite_34b, internlm2_1_8b, internvl2_2b,
+                           jamba_1_5_large, llama3_2_3b, llama4_scout,
+                           mixtral_8x22b, musicgen_large)

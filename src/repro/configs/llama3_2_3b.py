@@ -1,0 +1,10 @@
+"""llama3.2-3b — small Llama-3 dense decoder with GQA.
+[hf:meta-llama/Llama-3.2-1B family card; dims per assignment]"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama3.2-3b", family="dense",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab=128256, rope_theta=500_000.0,
+    source="hf:meta-llama/Llama-3.2-1B",
+))

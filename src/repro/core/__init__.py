@@ -1,0 +1,15 @@
+"""Core of the reproduction: 1-bit compression, compressed collectives,
+and the 1-bit Adam optimizer family."""
+from repro.core.compression import (CompressionConfig, compress_onebit,
+                                    decompress_onebit, ef_compress,
+                                    ef_decompress, pack_signs, padded_length,
+                                    unpack_signs, wire_bytes)
+from repro.core.comm import (allreduce_mean, compressed_allreduce,
+                             compressed_allreduce_hierarchical)
+from repro.core.adam import AdamConfig, AdamState
+from repro.core.adam import init as adam_init
+from repro.core.adam import update as adam_update
+from repro.core.onebit_adam import (OneBitAdamConfig, OneBitAdamState,
+                                    compressed_update, warmup_update)
+from repro.core.onebit_adam import init as onebit_adam_init
+from repro.core.variance import VarianceMonitor

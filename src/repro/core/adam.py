@@ -1,0 +1,54 @@
+"""Baseline Adam (BertAdam-style) on flat float32 vectors.
+
+The paper's uncompressed baseline disables bias correction (consistent with
+BertAdam / Devlin et al. 2019); ``bias_correction=True`` restores Kingma-Ba.
+Weight decay follows BertAdam: ``update = m/(sqrt(v)+eps) + wd * x``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    bias_correction: bool = False
+
+
+class AdamState(NamedTuple):
+    m: jax.Array      # (D,) f32
+    v: jax.Array      # (D,) f32
+    count: jax.Array  # () i32
+
+
+def init(d: int) -> AdamState:
+    return AdamState(m=jnp.zeros((d,), jnp.float32),
+                     v=jnp.zeros((d,), jnp.float32),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def update(g: jax.Array, state: AdamState, x: jax.Array, cfg: AdamConfig,
+           lr: jax.Array) -> Tuple[jax.Array, AdamState]:
+    """One Adam step. Returns (new_x, new_state). g is the (already
+    averaged) gradient; all f32 (D,)."""
+    count = state.count + 1
+    m = cfg.b1 * state.m + (1.0 - cfg.b1) * g
+    v = cfg.b2 * state.v + (1.0 - cfg.b2) * jnp.square(g)
+    if cfg.bias_correction:
+        t = count.astype(jnp.float32)
+        m_hat = m / (1.0 - cfg.b1 ** t)
+        v_hat = v / (1.0 - cfg.b2 ** t)
+    else:
+        m_hat, v_hat = m, v
+    upd = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+    if cfg.weight_decay:
+        upd = upd + cfg.weight_decay * x
+    new_x = x - lr * upd
+    return new_x, AdamState(m=m, v=v, count=count)

@@ -1,0 +1,89 @@
+"""Momentum SGD variants used as baselines in the paper's experiments.
+
+  * momentum SGD (paper Sec. 7.2 baseline)
+  * EF momentum SGD (Zheng et al. 2019; paper supplementary Fig. 11) —
+    1-bit-compressed momentum with error feedback, no Adam precondition
+  * naive compressed Adam (paper Fig. 1 / Sec. 3.2) — EF-compressed
+    *gradient* feeding full Adam with a live (non-frozen) variance; this is
+    the strategy the paper shows fails.
+
+All on flat float32 vectors, same conventions as ``onebit_adam``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import comm
+from repro.core.compression import CompressionConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentumConfig:
+    beta: float = 0.9
+    weight_decay: float = 0.0
+    compression: CompressionConfig = CompressionConfig(kind="identity")
+
+
+class MomentumState(NamedTuple):
+    m: jax.Array
+    worker_err: jax.Array
+    server_err: jax.Array
+    count: jax.Array
+
+
+def init(d: int, n_dp: int) -> MomentumState:
+    n = max(n_dp, 1)
+    return MomentumState(m=jnp.zeros((d,), jnp.float32),
+                         worker_err=jnp.zeros((d,), jnp.float32),
+                         server_err=jnp.zeros((d // n,), jnp.float32),
+                         count=jnp.zeros((), jnp.int32))
+
+
+def update(g_local: jax.Array, state: MomentumState, x: jax.Array,
+           cfg: MomentumConfig, lr: jax.Array,
+           dp_axes: Sequence[str] = ()) -> Tuple[jax.Array, MomentumState]:
+    """EF-compressed momentum SGD (identity compression = plain momentum)."""
+    m_local = cfg.beta * state.m + (1.0 - cfg.beta) * g_local
+    m_bar, w_err, s_err = comm.compressed_allreduce(
+        m_local, state.worker_err, state.server_err, dp_axes, cfg.compression)
+    upd = m_bar + (cfg.weight_decay * x if cfg.weight_decay else 0.0)
+    return x - lr * upd, state._replace(m=m_bar, worker_err=w_err,
+                                        server_err=s_err,
+                                        count=state.count + 1)
+
+
+class NaiveCompressedAdamState(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+    worker_err: jax.Array
+    server_err: jax.Array
+    count: jax.Array
+
+
+def naive_init(d: int, n_dp: int) -> NaiveCompressedAdamState:
+    n = max(n_dp, 1)
+    return NaiveCompressedAdamState(
+        m=jnp.zeros((d,), jnp.float32), v=jnp.zeros((d,), jnp.float32),
+        worker_err=jnp.zeros((d,), jnp.float32),
+        server_err=jnp.zeros((d // n,), jnp.float32),
+        count=jnp.zeros((), jnp.int32))
+
+
+def naive_compressed_adam_update(
+    g_local: jax.Array, state: NaiveCompressedAdamState, x: jax.Array,
+    b1: float, b2: float, eps: float, lr: jax.Array,
+    compression: CompressionConfig,
+    dp_axes: Sequence[str] = ()) -> Tuple[jax.Array, NaiveCompressedAdamState]:
+    """The strategy the paper shows does NOT converge (Fig. 1): compress the
+    gradient with EF and update both m and v from the compressed gradient."""
+    g_bar, w_err, s_err = comm.compressed_allreduce(
+        g_local, state.worker_err, state.server_err, dp_axes, compression)
+    m = b1 * state.m + (1.0 - b1) * g_bar
+    v = b2 * state.v + (1.0 - b2) * jnp.square(g_bar)
+    new_x = x - lr * m / (jnp.sqrt(v) + eps)
+    return new_x, state._replace(m=m, v=v, worker_err=w_err, server_err=s_err,
+                                 count=state.count + 1)

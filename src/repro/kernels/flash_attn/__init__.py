@@ -1,0 +1,1 @@
+from repro.kernels.flash_attn import ops, ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused elementwise Adam (BertAdam) update.
+
+The warmup-phase optimizer is pure elementwise work over four same-shaped
+f32 vectors (x, m, v, g). Unfused, XLA often materializes the m/v
+intermediates to HBM (6 reads + 5 writes per element); the fused kernel
+streams each tile through VMEM once: 4 reads + 3 writes — a ~1.6x cut on
+the memory-bound optimizer step.
+
+Tiling: 1-D grid over tiles of ``tile`` f32 (default 8192 = 32 KiB/operand,
+7 operands ~ 224 KiB of VMEM per grid step, well under ~16 MiB and lane
+aligned at 8x128). ``lr`` is a scalar operand placed in SMEM-like (1,1)
+layout so the schedule can vary it per step without recompiling.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE = 8192
+
+
+def _adam_kernel(b1: float, b2: float, eps: float, wd: float,
+                 lr_ref, x_ref, m_ref, v_ref, g_ref,
+                 nx_ref, nm_ref, nv_ref):
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    upd = m / (jnp.sqrt(v) + eps)
+    x = x_ref[...]
+    if wd:
+        upd = upd + wd * x
+    nx_ref[...] = x - lr_ref[0, 0] * upd
+    nm_ref[...] = m
+    nv_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps",
+                                             "weight_decay", "tile",
+                                             "interpret"))
+def adam_step(x: jax.Array, m: jax.Array, v: jax.Array, g: jax.Array,
+              lr: jax.Array, b1: float = 0.9, b2: float = 0.999,
+              eps: float = 1e-8, weight_decay: float = 0.0,
+              tile: int = DEFAULT_TILE, interpret: bool = True
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused BertAdam step on flat (d,) f32 vectors, d % tile == 0."""
+    d = x.shape[0]
+    assert d % tile == 0, (d, tile)
+    n = d // tile
+    lr2 = jnp.asarray(lr, jnp.float32).reshape(1, 1)
+    args = [a.reshape(n, tile) for a in (x, m, v, g)]
+    vec_spec = pl.BlockSpec((1, tile), lambda i: (i, 0))
+    out = pl.pallas_call(
+        functools.partial(_adam_kernel, b1, b2, eps, weight_decay),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0))] + [vec_spec] * 4,
+        out_specs=[vec_spec] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n, tile), jnp.float32)] * 3,
+        interpret=interpret,
+    )(lr2, *args)
+    return tuple(o.reshape(-1) for o in out)

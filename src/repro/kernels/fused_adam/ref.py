@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused Adam update (warmup-phase hot path)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_step(x: jax.Array, m: jax.Array, v: jax.Array, g: jax.Array,
+              lr: jax.Array, b1: float, b2: float, eps: float,
+              weight_decay: float = 0.0
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """BertAdam step (no bias correction). Returns (new_x, new_m, new_v)."""
+    new_m = b1 * m + (1.0 - b1) * g
+    new_v = b2 * v + (1.0 - b2) * jnp.square(g)
+    upd = new_m / (jnp.sqrt(new_v) + eps)
+    if weight_decay:
+        upd = upd + weight_decay * x
+    return x - lr * upd, new_m, new_v

@@ -1,0 +1,1 @@
+from repro.kernels.onebit import ops, ref  # noqa: F401

@@ -1,0 +1,113 @@
+"""Pallas TPU kernels for error-feedback 1-bit compression.
+
+The compression hot path is memory-bound: per element we read x and err,
+emit one *bit* + a shared scale, and write the new error. Unfused (as in
+``ref.py``) this is ~6 HBM passes over the data (read x, read err, write
+buf, read buf twice, write err, write deco...). The fused kernel below does
+it in a single pass: each grid step keeps one block of x/err resident in
+VMEM, computes the block scale with an on-chip reduction, packs the sign
+bitmap with integer lane ops, and writes (packed, scale, new_err) — 2 f32
+reads + 1 f32 write + ~1/32 f32 of compressed output per element.
+
+TPU adaptation notes (vs DeepSpeed's CUDA kernel):
+  * tiling is per scale-block (default 4096 f32 = 16 KiB), so a
+    (block,) tile plus its (block/8,) uint8 bitmap trivially fits VMEM;
+    the grid is 1-D over blocks, giving the compiler a clean double-buffered
+    HBM->VMEM pipeline;
+  * the pack uses an (block/8, 8) reshape + weighted lane reduction instead
+    of warp ballots (no TPU analogue of __ballot_sync); the wire format is
+    bit-for-bit identical to the pure-jnp path so compressed payloads can
+    cross implementations;
+  * scalars stay in f32; the bitmap is uint8 (TPU int8 lanes).
+
+Validated with ``interpret=True`` on CPU against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _ef_compress_kernel(x_ref, err_ref, packed_ref, scale_ref, new_err_ref):
+    """One grid step = one scale block resident in VMEM."""
+    buf = x_ref[...] + err_ref[...]                       # (1, block) f32
+    scale = jnp.mean(jnp.abs(buf))                        # on-chip reduction
+    scale_ref[0, 0] = scale
+    bits = (buf >= 0.0).astype(jnp.uint8).reshape(-1, 8)  # (block/8, 8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8))
+    packed = jnp.sum(bits * weights, axis=1, dtype=jnp.uint8)
+    packed_ref[...] = packed.reshape(packed_ref.shape)
+    deco = jnp.where(buf >= 0.0, scale, -scale)           # decompressed value
+    new_err_ref[...] = buf - deco                         # exact EF residual
+
+
+def _decompress_kernel(packed_ref, scale_ref, out_ref):
+    packed = packed_ref[...].reshape(-1, 1)               # (block/8, 1)
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed >> shifts) & jnp.uint8(1)              # (block/8, 8)
+    signs = bits.astype(jnp.float32) * 2.0 - 1.0
+    out_ref[...] = (signs * scale_ref[0, 0]).reshape(out_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def ef_compress_fused(x: jax.Array, err: jax.Array,
+                      block_size: int = DEFAULT_BLOCK,
+                      interpret: bool = True
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused EF-compress. x, err: (d,) f32 with d % block_size == 0.
+
+    Returns (packed (d/8,) u8, scales (d/block,) f32, new_err (d,) f32).
+    """
+    d = x.shape[0]
+    assert d % block_size == 0, (d, block_size)
+    nblocks = d // block_size
+    xb = x.reshape(nblocks, block_size)
+    eb = err.reshape(nblocks, block_size)
+    packed, scales, new_err = pl.pallas_call(
+        _ef_compress_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, block_size), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_size), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_size // 8), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, block_size), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nblocks, block_size // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((nblocks, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks, block_size), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xb, eb)
+    return packed.reshape(-1), scales.reshape(-1), new_err.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def decompress(packed: jax.Array, scales: jax.Array,
+               block_size: int = DEFAULT_BLOCK,
+               interpret: bool = True) -> jax.Array:
+    """(d/8,) u8 + (d/block,) f32 -> (d,) f32."""
+    nblocks = scales.shape[0]
+    pk = packed.reshape(nblocks, block_size // 8)
+    sc = scales.reshape(nblocks, 1)
+    out = pl.pallas_call(
+        _decompress_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, block_size // 8), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_size), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, block_size), jnp.float32),
+        interpret=interpret,
+    )(pk, sc)
+    return out.reshape(-1)

@@ -1,0 +1,208 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) combination against the production mesh and report memory/cost/
+roofline from the compiled artifact. No arrays are allocated — inputs are
+ShapeDtypeStructs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \\
+      --shape train_4k [--multi-pod] [--stage warmup|compressed|
+      compressed_hier] [--all] [--json out.json]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: the dry-run builds the production mesh out
+# of 512 placeholder host devices. Only this entry point does this — tests
+# and benchmarks see the real single device.
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.roofline import analyze_compiled
+from repro.configs import SHAPES, get_config, input_specs, list_archs
+from repro.core import onebit_adam as OB
+from repro.launch.mesh import HBM_BYTES, make_production_mesh
+from repro.models import transformer as T
+from repro.train.step import (TrainStepConfig, init_opt_state,
+                              make_serve_step, make_train_step, mesh_axes)
+
+ASSIGNED = [
+    "llama3.2-3b", "deepseek-7b", "granite-34b", "falcon-mamba-7b",
+    "jamba-1.5-large-398b", "internlm2-1.8b", "musicgen-large",
+    "llama4-scout-17b-a16e", "internvl2-2b", "mixtral-8x22b",
+]
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return ("full-attention KV over 524288 tokens is not sub-quadratic-"
+                "memory; skipped per DESIGN.md (run SSM/hybrid/SWA archs)")
+    if shape_name in ("decode_32k", "long_500k") and cfg.family == "encoder":
+        return "encoder-only model has no decode step"
+    return None
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
+              stage: str = "compressed", seq_parallel: bool = False,
+              mesh_override=None, cfg_overrides: Dict = None,
+              accum_steps: int = 1) -> Dict:
+    """Lower + compile one combination; returns the report dict.
+
+    mesh_override: (shape, axes) pair for §Perf hillclimb experiments,
+    e.g. ((64, 4), ("data", "model")); default is the production mesh.
+    cfg_overrides: ArchConfig field overrides (remat_policy, capacity
+    factor, attn_impl, ...) for §Perf iterations.
+    """
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if mesh_override is not None:
+        from repro.launch.mesh import make_mesh as _mk
+        mesh = _mk(*mesh_override)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        tsc = TrainStepConfig(stage=stage, seq_parallel=seq_parallel,
+                              accum_steps=accum_steps)
+        step = make_train_step(cfg, mesh, tsc, donate=False)
+        fn = step.build(specs)
+        params = jax.eval_shape(lambda k: T.init_params(cfg, k, tp=tp),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        if stage == "compressed_zero1":
+            # ZeRO-1 variant trains from a bf16 replica; masters are the
+            # dp-sharded f32 chunks inside the optimizer state
+            params = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
+                params)
+            from repro.train.step import init_zero1_opt_state
+            opt = init_zero1_opt_state(cfg, mesh, abstract=True)
+        else:
+            opt = init_opt_state(cfg, mesh, abstract=True,
+                                 hierarchical=(stage == "compressed_hier"))
+        lowered = fn.lower(params, opt, specs, jax.ShapeDtypeStruct(
+            (), jnp.float32))
+    elif shape.kind == "prefill":
+        step = make_serve_step(cfg, mesh, shape)
+        fn = step.build(specs)
+        params = jax.eval_shape(lambda k: T.init_params(cfg, k, tp=tp),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        lowered = fn.lower(params, specs)
+    else:  # decode
+        step = make_serve_step(cfg, mesh, shape)
+        fn = step.build(specs)
+        params = jax.eval_shape(lambda k: T.init_params(cfg, k, tp=tp),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        n_dp = 1
+        for s in dp_sizes:
+            n_dp *= s
+        caches = jax.eval_shape(
+            lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
+                                  tp, jnp.bfloat16,
+                                  n_dp if step.seq_sharded else 1))
+        lowered = fn.lower(params, specs, caches,
+                           jax.ShapeDtypeStruct((), jnp.int32))
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    rep = analyze_compiled(compiled)
+    mem = compiled.memory_analysis()
+    n_chips = mesh.devices.size
+    out = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        "stage": stage if shape.kind == "train" else shape.kind,
+        "seq_parallel": bool(seq_parallel),
+        "cfg_overrides": cfg_overrides or {},
+        "n_chips": int(n_chips),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "roofline": rep.summary(),
+        "memory": None,
+        "fits_hbm": None,
+    }
+    if mem is not None:
+        per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+        out["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "per_device_bytes": int(per_dev),
+        }
+        out["fits_hbm"] = bool(per_dev <= HBM_BYTES)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list_archs() + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--stage", default="compressed",
+                    choices=["warmup", "compressed", "compressed_hier",
+                             "compressed_zero1"])
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual stream (train shapes)")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh, e.g. 64x4 (dp x model)")
+    ap.add_argument("--json", default=None, help="append results to file")
+    args = ap.parse_args(argv)
+    mesh_override = None
+    if args.mesh:
+        dims = tuple(int(x) for x in args.mesh.split("x"))
+        axes = {2: ("data", "model"), 3: ("pod", "data", "model")}[len(dims)]
+        mesh_override = (dims, axes)
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    results, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            reason = skip_reason(arch, shape)
+            tag = f"{arch} x {shape} x {'2x16x16' if args.multi_pod else '16x16'}"
+            if reason:
+                print(f"SKIP {tag}: {reason}")
+                results.append({"arch": arch, "shape": shape,
+                                "skipped": reason})
+                continue
+            try:
+                r = lower_one(arch, shape, args.multi_pod, args.stage,
+                              seq_parallel=args.sp,
+                              mesh_override=mesh_override)
+                rl = r["roofline"]
+                print(f"OK   {tag}: compile {r['compile_s']}s "
+                      f"bottleneck={rl['bottleneck']} "
+                      f"t=(c {rl['t_compute_s']:.3e}, m {rl['t_memory_s']:.3e},"
+                      f" x {rl['t_collective_s']:.3e}) "
+                      f"fits_hbm={r['fits_hbm']}")
+                results.append(r)
+            except Exception as e:  # a failure here is a bug in the system
+                print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                failures.append((tag, str(e)))
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps(r) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print(f"\nall {len(results)} combinations OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Training driver: 2-stage 1-bit Adam with auto-warmup, checkpointing,
+and LR schedule. Runs on whatever devices exist (CPU smoke -> TPU pod).
+
+Usage (CPU-scale example — see examples/ for ready-made invocations):
+  PYTHONPATH=src python -m repro.launch.train --arch bert-base-smoke \\
+      --steps 200 --batch 8 --seq 128 --mesh 1x1 --lr 1e-3 --warmup-steps 40
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.base import InputShape
+from repro.core import onebit_adam as OB
+from repro.core.compression import CompressionConfig
+from repro.core.variance import VarianceMonitor
+from repro.data import SyntheticStream
+from repro.launch.mesh import make_mesh
+from repro.models import transformer as T
+from repro.train.step import (TrainStepConfig, init_opt_state,
+                              make_train_step, mesh_axes)
+
+
+def lr_schedule(step: int, base_lr: float, lr_warmup: int,
+                decay: float = 0.99, decay_every: int = 520) -> float:
+    """The paper's BERT schedule: linear warmup then step decay."""
+    if step < lr_warmup:
+        return base_lr * (step + 1) / max(lr_warmup, 1)
+    return base_lr * (decay ** ((step - lr_warmup) // decay_every))
+
+
+def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
+        base_lr: float = 1e-3, lr_warmup: int = 100,
+        warmup_steps: Optional[int] = None, block_size: int = 4096,
+        auto_warmup: bool = False, seed: int = 0, log_every: int = 10,
+        ckpt: Optional[str] = None, resume: Optional[str] = None,
+        stage_override: Optional[str] = None, log_file: Optional[str] = None):
+    cfg = get_config(arch)
+    axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
+        ("pod", "data", "model")
+    mesh = make_mesh(mesh_shape, axes)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+
+    shape = InputShape("custom", seq, batch, "train")
+    stream = SyntheticStream(cfg, shape, seed=seed)
+
+    comp = CompressionConfig(block_size=block_size)
+    ocfg = OB.OneBitAdamConfig(compression=comp)
+    key = jax.random.PRNGKey(seed)
+    params = T.init_params(cfg, key, tp=tp)
+    opt = init_opt_state(cfg, mesh, block=block_size)
+    start_step = 0
+    if resume:
+        (params, opt), start_step = load_pytree(resume, (params, opt))
+        print(f"resumed from {resume} at step {start_step}")
+
+    steps_fns = {}
+
+    def get_step(stage):
+        if stage not in steps_fns:
+            steps_fns[stage] = make_train_step(
+                cfg, mesh, TrainStepConfig(opt=ocfg, stage=stage),
+                donate=False)
+        return steps_fns[stage]
+
+    monitor = VarianceMonitor(b2=ocfg.b2, threshold=ocfg.var_freeze_threshold,
+                              lr_warmup_steps=lr_warmup)
+    frozen = False
+    history = []
+    t_start = time.time()
+    for step in range(start_step, steps):
+        if stage_override:
+            stage = stage_override
+        elif warmup_steps is not None and not auto_warmup:
+            stage = "warmup" if step < warmup_steps else "compressed"
+        else:
+            stage = "compressed" if frozen else "warmup"
+        batch_data = stream.batch_at(step)
+        lr = jnp.float32(lr_schedule(step, base_lr, lr_warmup))
+        params, opt, metrics = get_step(stage)(params, opt, batch_data, lr)
+        if auto_warmup and not frozen:
+            frozen = monitor.observe(step, float(metrics["v_l1"]))
+            if frozen:
+                print(f"[auto-warmup] variance frozen at step {step} "
+                      f"(ratio {monitor.ratio:.4f})")
+        rec = {"step": step, "stage": stage,
+               **{k: float(v) for k, v in metrics.items()}}
+        history.append(rec)
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t_start
+            print(f"step {step:5d} [{stage:10s}] loss {rec['loss']:.4f} "
+                  f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
+                  f"({dt:.1f}s)")
+        if ckpt and (step + 1) % 100 == 0:
+            save_pytree(ckpt, (params, opt), step + 1)
+    if ckpt:
+        save_pytree(ckpt, (params, opt), steps)
+    if log_file:
+        with open(log_file, "w") as f:
+            json.dump(history, f)
+    return params, opt, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="bert-base-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default="1x1",
+                    help="e.g. 1x1, 4x2 (dp x tp), 2x4x2 (pod x dp x tp)")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--lr-warmup", type=int, default=20)
+    ap.add_argument("--warmup-steps", type=int, default=None,
+                    help="1-bit Adam warmup steps (manual T_w)")
+    ap.add_argument("--auto-warmup", action="store_true",
+                    help="use the variance-ratio rule to pick T_w")
+    ap.add_argument("--block-size", type=int, default=4096)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--stage", default=None,
+                    choices=[None, "warmup", "compressed", "compressed_hier"])
+    ap.add_argument("--log-file", default=None)
+    args = ap.parse_args(argv)
+    mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
+    run(args.arch, args.steps, args.batch, args.seq, mesh_shape,
+        base_lr=args.lr, lr_warmup=args.lr_warmup,
+        warmup_steps=args.warmup_steps, auto_warmup=args.auto_warmup,
+        block_size=args.block_size, seed=args.seed, ckpt=args.ckpt,
+        resume=args.resume, stage_override=args.stage,
+        log_file=args.log_file)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: dense GQA / MoE / Mamba / hybrid transformer backbones with
+Megatron-style tensor parallelism expressed as explicit collectives inside
+``shard_map``."""
+from repro.models.common import ParallelCtx  # noqa: F401

@@ -1,0 +1,259 @@
+"""Tensor-parallel primitives and shared layers.
+
+All model code runs *per-rank* inside ``shard_map`` (check_vma=False), so
+autodiff sees plain local arrays and we place the Megatron collectives —
+and, crucially, their transposes — by hand via ``custom_vjp``:
+
+  ``g_copy``    identity fwd / psum(model) bwd   (Megatron's g operator;
+                placed where a tp-replicated activation enters
+                column-parallel compute)
+  ``f_reduce``  psum(model) fwd / identity bwd   (Megatron's f-bar; closes a
+                row-parallel matmul)
+  ``rep_param`` identity fwd / psum(model) bwd   (for parameters stored
+                replicated across the model axis: norm scales, routers)
+  ``grouped_param`` identity fwd / psum over model-axis *subgroups* bwd
+                (for KV projections duplicated across the ranks that share
+                one KV head when n_kv_heads < tp)
+
+With ``ParallelCtx(tp_axis=None)`` every collective is the identity, so the
+same model code runs single-device (smoke tests, examples) and under any
+mesh without modification.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    """Per-rank view of the mesh for model code.
+
+    tp_axis:  mesh axis name for tensor parallelism (None = no TP).
+    tp_size:  number of ranks on that axis.
+    dp_axes:  data-parallel axes (used by the optimizer, not the model).
+    """
+    tp_axis: Optional[str] = None
+    tp_size: int = 1
+    dp_axes: Tuple[str, ...] = ()
+    # Megatron-style sequence parallelism (beyond-paper optimization): the
+    # residual stream between blocks is sharded along SEQUENCE over the
+    # model axis; block boundaries become all-gather / reduce-scatter pairs
+    # (half the bytes of the all-reduce pair they replace) and norm /
+    # residual compute+memory shrink by tp.
+    sp: bool = False
+
+    @property
+    def tp(self) -> int:
+        return self.tp_size if self.tp_axis else 1
+
+
+# --- custom-vjp collectives -------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _g_copy(x, axis):
+    return x
+
+
+def _g_copy_fwd(x, axis):
+    return x, None
+
+
+def _g_copy_bwd(axis, _, ct):
+    return (jax.lax.psum(ct, axis),)
+
+
+_g_copy.defvjp(_g_copy_fwd, _g_copy_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _f_reduce(x, axis):
+    return jax.lax.psum(x, axis)
+
+
+def _f_reduce_fwd(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _f_reduce_bwd(axis, _, ct):
+    return (ct,)
+
+
+_f_reduce.defvjp(_f_reduce_fwd, _f_reduce_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _grouped(x, axis, groups):
+    return x
+
+
+def _grouped_fwd(x, axis, groups):
+    return x, None
+
+
+def _grouped_bwd(axis, groups, _, ct):
+    return (jax.lax.psum(ct, axis, axis_index_groups=groups),)
+
+
+_grouped.defvjp(_grouped_fwd, _grouped_bwd)
+
+
+def g_copy(x: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    """Identity fwd; bwd sums grad over the model axis. Place where a
+    replicated activation fans out into column-parallel branches."""
+    if ctx.tp_axis is None:
+        return x
+    return _g_copy(x, ctx.tp_axis)
+
+
+def f_reduce(x: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    """psum fwd over model axis; identity bwd. Closes row-parallel matmuls."""
+    if ctx.tp_axis is None:
+        return x
+    return _f_reduce(x, ctx.tp_axis)
+
+
+def rep_param(w: jax.Array, ctx: ParallelCtx) -> jax.Array:
+    """Parameter stored replicated over the model axis (norm scales,
+    routers).
+
+    Tensor-parallel (ctx.sp=False): NO gradient psum — every consumer of a
+    replicated activation re-enters sharded compute through ``g_copy``,
+    whose backward psum makes the residual-stream cotangent COMPLETE (and
+    identical) on every model rank before it reaches the replicated
+    parameter; summing again would double-count by a factor of tp
+    (verified by the TP-parity test).
+
+    Sequence-parallel (ctx.sp=True): the residual stream holds UNIQUE
+    tokens per rank, so each rank's cotangent for a replicated param is
+    PARTIAL (its token shard only) — here the grad psum IS required to
+    keep replicas identical and correct. Both regimes are pinned by the
+    SP-vs-TP parity test.
+    """
+    if ctx.tp_axis is None or not ctx.sp:
+        return w
+    return _grouped(w, ctx.tp_axis, None)
+
+
+def grouped_param(w: jax.Array, ctx: ParallelCtx, rep: int) -> jax.Array:
+    """Parameter duplicated across contiguous groups of ``rep`` model ranks
+    (KV projections when n_kv_heads < tp): grad is psum'd within each group.
+    """
+    if ctx.tp_axis is None or rep <= 1:
+        return w
+    n = ctx.tp_size
+    groups = [list(range(g * rep, (g + 1) * rep)) for g in range(n // rep)]
+    return _grouped(w, ctx.tp_axis, tuple(map(tuple, groups)))
+
+
+def tp_rank(ctx: ParallelCtx) -> jax.Array:
+    if ctx.tp_axis is None:
+        return jnp.zeros((), jnp.int32)
+    return jax.lax.axis_index(ctx.tp_axis)
+
+
+# --- sequence-parallel boundary collectives --------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _sp_gather(x, axis, dim):
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True)
+
+
+def _sp_gather_fwd(x, axis, dim):
+    return jax.lax.all_gather(x, axis, axis=dim, tiled=True), None
+
+
+def _sp_gather_bwd(axis, dim, _, ct):
+    return (jax.lax.psum_scatter(ct, axis, scatter_dimension=dim,
+                                 tiled=True),)
+
+
+_sp_gather.defvjp(_sp_gather_fwd, _sp_gather_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _sp_scatter(x, axis, dim):
+    return jax.lax.psum_scatter(x, axis, scatter_dimension=dim, tiled=True)
+
+
+def _sp_scatter_fwd(x, axis, dim):
+    return (jax.lax.psum_scatter(x, axis, scatter_dimension=dim,
+                                 tiled=True), None)
+
+
+def _sp_scatter_bwd(axis, dim, _, ct):
+    return (jax.lax.all_gather(ct, axis, axis=dim, tiled=True),)
+
+
+_sp_scatter.defvjp(_sp_scatter_fwd, _sp_scatter_bwd)
+
+
+def sp_gather(x: jax.Array, ctx: ParallelCtx, dim: int = 1) -> jax.Array:
+    """(…, S/tp, …) -> (…, S, …): all-gather fwd / reduce-scatter bwd."""
+    if ctx.tp_axis is None:
+        return x
+    return _sp_gather(x, ctx.tp_axis, dim)
+
+
+def sp_scatter(x: jax.Array, ctx: ParallelCtx, dim: int = 1) -> jax.Array:
+    """partial (…, S, …) -> reduced (…, S/tp, …): reduce-scatter fwd /
+    all-gather bwd. Replaces f_reduce at a sequence-parallel boundary —
+    same reduction, half the wire bytes."""
+    if ctx.tp_axis is None:
+        return x
+    return _sp_scatter(x, ctx.tp_axis, dim)
+
+
+def sp_slice(x: jax.Array, ctx: ParallelCtx, dim: int = 1) -> jax.Array:
+    """Slice this rank's sequence chunk out of a replicated array."""
+    if ctx.tp_axis is None:
+        return x
+    n = ctx.tp_size
+    size = x.shape[dim] // n
+    idx = jax.lax.axis_index(ctx.tp_axis) * size
+    return jax.lax.dynamic_slice_in_dim(x, idx, size, axis=dim)
+
+
+# --- shared layers ----------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def rope_tables(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embeddings at the given positions.
+
+    positions: (..., S) int32. Returns cos, sin of shape (..., S, head_dim/2).
+    """
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D). cos/sin: (..., S, D/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c],
+                           axis=-1).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x @ w with f32 accumulation (bf16-safe on TPU MXU)."""
+    return jnp.einsum("...d,df->...f", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_linear(key, d_in: int, d_out: int, scale: Optional[float] = None
+                ) -> jax.Array:
+    scale = scale if scale is not None else 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(jnp.float32)

@@ -1,0 +1,96 @@
+"""Small DCGAN (paper Sec. 7.3) in pure JAX: conv-transpose generator +
+conv discriminator, GroupNorm instead of BatchNorm (stateless; same
+deviation as the ResNet testbed — the optimizer behaviour under study is
+unchanged)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, stride=2):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _deconv(x, w, stride=2):
+    return jax.lax.conv_transpose(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn(x, s, b, groups=4, eps=1e-5):
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    return ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(n, h, w, c) \
+        * s + b
+
+
+def _w(key, k, cin, cout):
+    return jax.random.normal(key, (k, k, cin, cout)) * 0.05
+
+
+def init_generator(key, z_dim: int = 32, base: int = 32) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "fc": jax.random.normal(ks[0], (z_dim, 4 * 4 * base * 2)) * 0.05,
+        "d1": _w(ks[1], 4, base * 2, base),       # 4->8
+        "s1": jnp.ones((base,)), "b1": jnp.zeros((base,)),
+        "d2": _w(ks[2], 4, base, 3),              # 8->16
+    }
+
+
+def generator(p: Dict, z: jax.Array, base: int = 32) -> jax.Array:
+    h = (z @ p["fc"]).reshape(-1, 4, 4, base * 2)
+    h = jax.nn.relu(h)
+    h = jax.nn.relu(_gn(_deconv(h, p["d1"]), p["s1"], p["b1"]))
+    return jnp.tanh(_deconv(h, p["d2"]))          # (N, 16, 16, 3)
+
+
+def init_discriminator(key, base: int = 32) -> Dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "c1": _w(ks[0], 4, 3, base),              # 16->8
+        "c2": _w(ks[1], 4, base, base * 2),       # 8->4
+        "s2": jnp.ones((base * 2,)), "b2": jnp.zeros((base * 2,)),
+        "fc": jax.random.normal(ks[2], (4 * 4 * base * 2, 1)) * 0.05,
+    }
+
+
+def discriminator(p: Dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.leaky_relu(_conv(x, p["c1"]), 0.2)
+    h = jax.nn.leaky_relu(_gn(_conv(h, p["c2"]), p["s2"], p["b2"]), 0.2)
+    return (h.reshape(h.shape[0], -1) @ p["fc"])[:, 0]
+
+
+def d_loss(pd: Dict, pg: Dict, real: jax.Array, z: jax.Array) -> jax.Array:
+    """Non-saturating GAN losses (the DCGAN paper's objective)."""
+    fake = generator(pg, z)
+    lr_ = discriminator(pd, real)
+    lf = discriminator(pd, jax.lax.stop_gradient(fake))
+    return (jnp.mean(jax.nn.softplus(-lr_)) +
+            jnp.mean(jax.nn.softplus(lf)))
+
+
+def g_loss(pg: Dict, pd: Dict, z: jax.Array) -> jax.Array:
+    fake = generator(pg, z)
+    return jnp.mean(jax.nn.softplus(-discriminator(pd, fake)))
+
+
+def synthetic_faces(key, n: int, size: int = 16) -> jax.Array:
+    """Structured 'face-like' targets: smooth radial blobs with per-sample
+    position/colour variation (enough structure for a GAN to learn)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    cx = jax.random.uniform(k1, (n, 1, 1, 1), minval=0.3, maxval=0.7)
+    cy = jax.random.uniform(k2, (n, 1, 1, 1), minval=0.3, maxval=0.7)
+    col = jax.random.uniform(k3, (n, 1, 1, 3), minval=-0.8, maxval=0.8)
+    yy, xx = jnp.mgrid[0:size, 0:size] / size
+    r2 = ((xx[None, :, :, None] - cx) ** 2 +
+          (yy[None, :, :, None] - cy) ** 2)
+    return jnp.clip(col * jnp.exp(-r2 * 20.0) * 2.0 - 0.2, -1, 1)

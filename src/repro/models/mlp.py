@@ -1,0 +1,212 @@
+"""Feed-forward layers: SwiGLU (column/row parallel) and expert-parallel
+MoE with capacity-based dispatch.
+
+MoE sharding over the model axis (tp ranks, E experts):
+  * E >= tp: each rank owns E/tp whole experts;
+  * E <  tp: each expert is split across rep = tp/E ranks along d_ff
+    (expert-tensor-parallel).
+Activations are replicated across the model axis between blocks (Megatron
+TP), so every rank sees all local tokens: dispatch is a *local* gather of
+the tokens routed to this rank's expert block, and the single f_reduce
+psum("model") that closes the layer also sums the per-expert (and, for
+rep>1, per-slice) contributions. No all-to-all is needed — this is the
+TPU-native re-mapping of GPU-style expert-parallel all-to-all dispatch.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (ParallelCtx, dense, f_reduce, g_copy,
+                                 init_linear, rep_param, tp_rank)
+
+
+# --- dense SwiGLU -----------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, tp: int) -> Dict[str, jax.Array]:
+    kg, ku, kd = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {"wg": init_linear(kg, d, ff), "wd": init_linear(kd, ff, d)}
+    if cfg.mlp_kind == "swiglu":
+        p["wu"] = init_linear(ku, d, ff)
+    return p
+
+
+def mlp_param_specs(cfg: ArchConfig, axis: str) -> Dict[str, object]:
+    from jax.sharding import PartitionSpec as P
+    p = {"wg": P(None, axis), "wd": P(axis, None)}
+    if cfg.mlp_kind == "swiglu":
+        p["wu"] = P(None, axis)
+    return p
+
+
+def mlp_forward(p, x: jax.Array, cfg: ArchConfig, ctx: ParallelCtx,
+                outer: str = "tp") -> jax.Array:
+    xin = x if outer == "none" else g_copy(x, ctx)
+    dt = x.dtype
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(dense(xin, p["wg"].astype(dt)))
+    else:
+        h = jax.nn.silu(dense(xin, p["wg"].astype(dt))) * dense(
+            xin, p["wu"].astype(dt))
+    out = dense(h, p["wd"].astype(dt))
+    return f_reduce(out, ctx) if outer != "none" else out
+
+
+# --- MoE ----------------------------------------------------------------
+
+
+def moe_layout(cfg: ArchConfig, tp: int):
+    """(experts_per_rank, ff_slices_per_expert rep, local d_ff)."""
+    e = cfg.n_experts
+    if e >= tp:
+        assert e % tp == 0, (e, tp)
+        return e // tp, 1, cfg.d_ff
+    assert tp % e == 0, (e, tp)
+    rep = tp // e
+    assert cfg.d_ff % rep == 0
+    return 1, rep, cfg.d_ff // rep
+
+
+def init_moe(key, cfg: ArchConfig, tp: int) -> Dict[str, jax.Array]:
+    """Global tensors. Expert blocks are stacked on a leading axis of size
+    tp * e_per_rank; block b = (rank, j) holds expert (b // rep)'s ff-slice
+    (b % rep) when rep > 1, or whole expert b when rep == 1."""
+    e_per, rep, ff_l = moe_layout(cfg, tp)
+    nblocks = tp * e_per
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    d = cfg.d_model
+    sg = 1.0 / math.sqrt(d)
+    sd = 1.0 / math.sqrt(cfg.d_ff)
+    return {
+        "router": init_linear(kr, d, cfg.n_experts, scale=0.02),
+        "wg": jax.random.normal(kg, (nblocks, d, ff_l)) * sg,
+        "wu": jax.random.normal(ku, (nblocks, d, ff_l)) * sg,
+        "wd": jax.random.normal(kd, (nblocks, ff_l, d)) * sd,
+    }
+
+
+def moe_param_specs(cfg: ArchConfig, axis: str) -> Dict[str, object]:
+    from jax.sharding import PartitionSpec as P
+    return {"router": P(None, None), "wg": P(axis, None, None),
+            "wu": P(axis, None, None), "wd": P(axis, None, None)}
+
+
+def moe_forward(p, x: jax.Array, cfg: ArchConfig, ctx: ParallelCtx,
+                outer: str = "tp", x_shard: jax.Array = None):
+    """x: (B, S, d) -> ((B, S, d), aux) where aux is the Switch-style
+    load-balance loss E * sum_e f_e * p_e for this layer.
+
+    outer="none" (sequence parallelism): x is the ALREADY-GATHERED full
+    sequence and x_shard is this rank's (B, S/tp, d) chunk. The router
+    runs on the shard (unique tokens per rank -> naturally partial
+    cotangents) and its logits are sp-gathered, so backward's
+    reduce-scatter sums the partial gate cotangents — the SP analogue of
+    the g_copy-on-logits pattern below. Output is the partial sum.
+    """
+    from repro.models.common import sp_gather
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    k = cfg.moe_top_k
+    e_per, rep, ff_l = moe_layout(cfg, ctx.tp)
+    dt = x.dtype
+
+    router = rep_param(p["router"], ctx).astype(jnp.float32)
+    if outer == "none":
+        assert x_shard is not None
+        xin = x.reshape(t, d)
+        ts = x_shard.shape[0] * x_shard.shape[1]
+        logits_shard = x_shard.reshape(ts, -1).astype(jnp.float32) @ router
+        logits = sp_gather(logits_shard.reshape(b, -1, e), ctx,
+                           dim=1).reshape(t, e)
+        probs = jax.nn.softmax(logits, axis=-1)
+        aux_logits = logits_shard
+    else:
+        xin = g_copy(x, ctx).reshape(t, d)
+        # Router runs as REPLICATED compute on x (not on the g_copy'd
+        # xin): the per-rank gate cotangents are partial (each rank only
+        # sees its experts' terms), so the complete-cotangent invariant of
+        # rep_param is restored by a g_copy on the *logits* — backward
+        # psums the partials into one complete, rank-identical router
+        # gradient.
+        logits = x.reshape(t, d).astype(jnp.float32) @ router   # (t, e)
+        probs = jax.nn.softmax(g_copy(logits, ctx), axis=-1)
+        aux_logits = logits
+    gate, idx = jax.lax.top_k(probs, k)                     # (t, k)
+    gate = gate / jnp.maximum(jnp.sum(gate, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(int(math.ceil(t * k / e * cfg.capacity_factor)), 4)
+
+    # position of each (token, choice) in its expert's capacity buffer
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)        # (t, k, e)
+    flat = onehot.reshape(t * k, e)
+    pos = jnp.cumsum(flat, axis=0) - flat                   # (t*k, e)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(t, k)        # slot per choice
+    keep = pos < capacity
+
+    out = jnp.zeros((t, d), jnp.float32)
+    r = tp_rank(ctx)
+    tok_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k))
+    for j in range(e_per):
+        block = r * e_per + j if ctx.tp_axis is not None else j
+        my_expert = (block // rep) if rep > 1 else block
+        sel = (idx == my_expert) & keep                     # (t, k)
+        slot = jnp.where(sel, pos, capacity)                # OOB -> dropped
+        wg, wu, wd = p["wg"][j], p["wu"][j], p["wd"][j]
+        if cfg.moe_dispatch == "gather":
+            # index-based dispatch: no (t x capacity) dot FLOPs
+            slot_tok = jnp.zeros((capacity,), jnp.int32).at[
+                slot.reshape(-1)].set(tok_ids.reshape(-1), mode="drop")
+            slot_used = jnp.zeros((capacity,), dt).at[
+                slot.reshape(-1)].set(1.0, mode="drop")
+            slot_gate = jnp.zeros((capacity,), jnp.float32).at[
+                slot.reshape(-1)].set(
+                    jnp.where(sel, gate, 0.0).reshape(-1), mode="drop")
+            xe = jnp.take(xin.astype(dt), slot_tok, axis=0)  # (cap, d)
+            xe = xe * slot_used[:, None]
+            h = jax.nn.silu(dense(xe, wg.astype(dt))) * dense(
+                xe, wu.astype(dt))
+            ye = dense(h, wd.astype(dt)).astype(jnp.float32)
+            out = out.at[slot_tok].add(ye * slot_gate[:, None],
+                                       mode="drop")
+        else:
+            # one-hot dispatch matmuls (t, k, cap) -> (t, cap)
+            slot_oh = jax.nn.one_hot(slot, capacity, dtype=dt)
+            disp = jnp.sum(slot_oh, axis=1)                 # (t, cap)
+            xe = jnp.einsum("tc,td->cd", disp, xin.astype(dt))
+            h = jax.nn.silu(dense(xe, wg.astype(dt))) * dense(
+                xe, wu.astype(dt))
+            ye = dense(h, wd.astype(dt))                    # (cap, d)
+            g = jnp.sum(jnp.where(sel, gate, 0.0).astype(jnp.float32),
+                        axis=1)
+            comb = jnp.einsum("tc,cd->td", disp.astype(jnp.float32),
+                              ye.astype(jnp.float32))
+            out = out + comb * g[:, None]
+
+    if outer != "none":
+        out = f_reduce(out.astype(dt), ctx)
+    else:
+        out = out.astype(dt)
+    # load-balance aux: fraction routed (top-1) vs mean router prob.
+    # TP: from the replicated (pre-g_copy) logits — cotangent complete and
+    # identical on every rank. SP: from the rank's own token shard (then
+    # averaged over the model axis), so cotangents stay partial.
+    probs_aux = jax.nn.softmax(aux_logits, axis=-1)
+    if outer == "none":
+        ts = probs_aux.shape[0]
+        _, idx_s = jax.lax.top_k(probs_aux, k)
+        frac = jnp.mean(jax.nn.one_hot(idx_s[:, 0], e, dtype=jnp.float32),
+                        axis=0)
+        aux = e * jnp.sum(frac * jnp.mean(probs_aux, axis=0))
+        if ctx.tp_axis:
+            aux = jax.lax.pmean(aux, ctx.tp_axis)
+    else:
+        frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32),
+                        axis=0)
+        aux = e * jnp.sum(frac * jnp.mean(probs_aux, axis=0))
+    return out.reshape(b, s, d), aux

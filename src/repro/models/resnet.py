@@ -1,0 +1,101 @@
+"""Small CIFAR ResNet in pure JAX (the paper's Sec. 7.2 / supplementary
+optimizer-comparison testbed).
+
+Deviations from the paper's ResNet-18 (noted in DESIGN.md): depth is
+configurable (default ResNet-8-ish for CPU), GroupNorm replaces BatchNorm
+(stateless — keeps the optimizer study free of running-stat plumbing).
+Neither changes the optimizer-communication behaviour under study.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x: jax.Array, w: jax.Array, stride: int = 1) -> jax.Array:
+    """NHWC conv with HWIO weights, SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _group_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                groups: int = 8, eps: float = 1e-5) -> jax.Array:
+    n, h, w, c = x.shape
+    g = min(groups, c)
+    xg = x.reshape(n, h, w, g, c // g)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(n, h, w, c) * scale + bias
+
+
+def _init_conv(key, k: int, cin: int, cout: int) -> jax.Array:
+    fan = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout)) * (2.0 / fan) ** 0.5
+
+
+def init_resnet(key, widths=(16, 32, 64), n_classes: int = 10,
+                in_ch: int = 3) -> Dict:
+    ks = jax.random.split(key, 3 * len(widths) + 2)
+    p: Dict = {"stem": _init_conv(ks[0], 3, in_ch, widths[0]),
+               "stem_s": jnp.ones((widths[0],)),
+               "stem_b": jnp.zeros((widths[0],))}
+    cin = widths[0]
+    for i, cout in enumerate(widths):
+        kb = jax.random.split(ks[i + 1], 4)
+        p[f"b{i}"] = {
+            "c1": _init_conv(kb[0], 3, cin, cout),
+            "s1": jnp.ones((cout,)), "g1": jnp.zeros((cout,)),
+            "c2": _init_conv(kb[1], 3, cout, cout),
+            "s2": jnp.ones((cout,)), "g2": jnp.zeros((cout,)),
+            "sc": _init_conv(kb[2], 1, cin, cout),
+        }
+        cin = cout
+    p["fc"] = jax.random.normal(ks[-1], (cin, n_classes)) * (1 / cin) ** 0.5
+    p["fc_b"] = jnp.zeros((n_classes,))
+    return p
+
+
+def resnet_apply(p: Dict, x: jax.Array, widths=(16, 32, 64)) -> jax.Array:
+    """x: (N, H, W, C) -> logits (N, n_classes)."""
+    h = jax.nn.relu(_group_norm(_conv(x, p["stem"]), p["stem_s"],
+                                p["stem_b"]))
+    for i in range(len(widths)):
+        b = p[f"b{i}"]
+        stride = 1 if i == 0 else 2
+        y = jax.nn.relu(_group_norm(_conv(h, b["c1"], stride), b["s1"],
+                                    b["g1"]))
+        y = _group_norm(_conv(y, b["c2"]), b["s2"], b["g2"])
+        sc = _conv(h, b["sc"], stride)
+        h = jax.nn.relu(y + sc)
+    h = jnp.mean(h, axis=(1, 2))
+    return h @ p["fc"] + p["fc_b"]
+
+
+def resnet_loss(p: Dict, batch: Dict[str, jax.Array],
+                widths=(16, 32, 64)) -> Tuple[jax.Array, jax.Array]:
+    logits = resnet_apply(p, batch["images"], widths)
+    labels = batch["labels"]
+    nll = -jnp.take_along_axis(jax.nn.log_softmax(logits),
+                               labels[:, None], axis=1)[:, 0]
+    acc = jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    return jnp.mean(nll), acc
+
+
+def synthetic_cifar(key, n: int, n_classes: int = 10, size: int = 16
+                    ) -> Dict[str, jax.Array]:
+    """Learnable synthetic image task: class-dependent frequency patterns
+    + noise (a stand-in for CIFAR-10; optimizers separate on it)."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (n,), 0, n_classes)
+    yy, xx = jnp.mgrid[0:size, 0:size]
+    freqs = jnp.arange(1, n_classes + 1)
+    pattern = jnp.sin(freqs[:, None, None] * xx * 0.4 +
+                      (freqs[:, None, None] % 3) * yy * 0.5)
+    base = pattern[labels][..., None].repeat(3, -1)
+    noise = 0.8 * jax.random.normal(k2, (n, size, size, 3))
+    return {"images": (base + noise).astype(jnp.float32),
+            "labels": labels}

@@ -1,0 +1,167 @@
+"""Mamba-1 selective-SSM block with tensor parallelism over d_inner.
+
+Per-rank layout (tp = ctx.tp, di_l = d_inner / tp):
+  in_proj  (d, 2*di_l)          column-parallel (x and gate z)
+  conv_w   (ssm_conv, di_l)     depthwise causal conv — local
+  x_proj   (di_l, dt_rank+2*N)  row-parallel, closed by f_reduce so the
+                                shared (dt_lowrank, B, C) are replicated
+  dt_proj  (dt_rank, di_l)      column-parallel (per-channel dt)
+  dt_bias  (di_l,)              local
+  A_log    (di_l, N)            local (per-channel state matrices)
+  D        (di_l,)              local
+  out_proj (di_l, d)            row-parallel, closed by f_reduce
+
+The recurrent scan is *local* per rank: state h is (B, di_l, N), so TP
+shards the recurrent state as well — the paper's technique (optimizer
+momentum compression) is orthogonal to this, but the scan sharding is what
+makes long_500k decode O(1) memory per step on the SSM archs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import (ParallelCtx, dense, f_reduce, g_copy,
+                                 init_linear)
+
+
+def init_ssm(key, cfg: ArchConfig, tp: int) -> Dict[str, jax.Array]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr = cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias so softplus(dt) ~ [1e-3, 1e-1]
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[0], (di,)) *
+                      (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inv softplus
+    # NOTE: x and z projections are SEPARATE parameters (not one fused
+    # (d, 2*di) matrix): under column-parallel sharding a fused layout
+    # would split at the x|z boundary instead of giving every rank its
+    # (x_shard, z_shard) pair.
+    kx, kz = jax.random.split(ks[1])
+    return {
+        "in_proj_x": init_linear(kx, d, di),
+        "in_proj_z": init_linear(kz, d, di),
+        "conv_w": jax.random.normal(ks[2], (cfg.ssm_conv, di)) * 0.1,
+        "x_proj": init_linear(ks[3], di, dtr + 2 * n),
+        "dt_proj": init_linear(ks[4], dtr, di, scale=dtr ** -0.5),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,)),
+        "out_proj": init_linear(ks[5], di, d),
+    }
+
+
+def ssm_param_specs(cfg: ArchConfig, axis: str) -> Dict[str, object]:
+    from jax.sharding import PartitionSpec as P
+    return {"in_proj_x": P(None, axis), "in_proj_z": P(None, axis),
+            "conv_w": P(None, axis),
+            "x_proj": P(axis, None), "dt_proj": P(None, axis),
+            "dt_bias": P(axis), "A_log": P(axis, None), "D": P(axis),
+            "out_proj": P(axis, None)}
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _ssm_params(p, x_in, cfg: ArchConfig, ctx: ParallelCtx, dt_dtype):
+    """Shared projection math: x_in (B, S, di_l) -> (dt, B, C, A, D)."""
+    n = cfg.ssm_state
+    dtr = cfg.dt_rank
+    dbc = f_reduce(dense(x_in, p["x_proj"].astype(dt_dtype)), ctx)
+    # dbc is replicated but consumed by per-rank compute (dt_proj columns,
+    # local scan): g_copy makes backward psum the per-rank contributions.
+    dbc = g_copy(dbc, ctx)
+    dt_low, b_mat, c_mat = jnp.split(dbc, [dtr, dtr + n], axis=-1)
+    dt = dense(dt_low, p["dt_proj"].astype(dt_dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])                       # (di_l, N)
+    return dt, b_mat.astype(jnp.float32), c_mat.astype(jnp.float32), a
+
+
+def ssm_forward(p, x: jax.Array, cfg: ArchConfig, ctx: ParallelCtx,
+                return_state: bool = False, outer: str = "tp"):
+    """Training/prefill. x: (B, S, d) -> (B, S, d).
+
+    return_state=True additionally returns the decode cache {h, conv}
+    after consuming the sequence. outer="none": caller owns the boundary
+    collectives (sequence parallelism); output is the partial sum.
+    """
+    b, s, _ = x.shape
+    dt_ = x.dtype
+    xin = x if outer == "none" else g_copy(x, ctx)
+    xraw = dense(xin, p["in_proj_x"].astype(dt_))  # (B, S, di_l)
+    z = dense(xin, p["in_proj_z"].astype(dt_))     # (B, S, di_l)
+    xi = jax.nn.silu(_causal_conv(xraw, p["conv_w"].astype(dt_)))
+    dt, b_mat, c_mat, a = _ssm_params(p, xi, cfg, ctx, dt_)
+
+    # selective scan: h[t] = exp(dt*A) h[t-1] + dt*B[t] * x[t]
+    xf = xi.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                      # (B,di) (B,di) (B,N) (B,N)
+        da = jnp.exp(dtt[..., None] * a)           # (B, di, N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, a.shape[0], cfg.ssm_state), jnp.float32)
+    xs = (xf.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          b_mat.transpose(1, 0, 2), c_mat.transpose(1, 0, 2))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * p["D"]
+    y = (y.astype(dt_)) * jax.nn.silu(z)
+    out = dense(y, p["out_proj"].astype(dt_))
+    if outer != "none":
+        out = f_reduce(out, ctx)
+    if return_state:
+        conv_tail = xraw[:, s - (cfg.ssm_conv - 1):, :]  # raw conv history
+        return out, {"h": h_fin, "conv": conv_tail}
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, tp: int,
+                   dtype=jnp.float32) -> Dict[str, jax.Array]:
+    """Decode state (global shapes): recurrent h + conv tail."""
+    di = cfg.d_inner
+    return {"h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype)}
+
+
+def decode_ssm(p, x: jax.Array, cache: Dict[str, jax.Array],
+               cfg: ArchConfig, ctx: ParallelCtx
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B, 1, d); cache h (B, di_l, N), conv tail
+    (B, K-1, di_l). O(1) in context length — the SSM's long_500k advantage.
+    """
+    dt_ = x.dtype
+    xin = g_copy(x, ctx)
+    xi = dense(xin[:, 0, :], p["in_proj_x"].astype(dt_))  # (B, di_l)
+    z = dense(xin[:, 0, :], p["in_proj_z"].astype(dt_))
+    # conv over [tail, x]
+    w = p["conv_w"].astype(dt_)                          # (K, di_l)
+    hist = jnp.concatenate([cache["conv"], xi[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, w)
+    xi_c = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:, :]
+
+    dt, b_mat, c_mat, a = _ssm_params(p, xi_c[:, None, :], cfg, ctx, dt_)
+    dtt, bt, ct = dt[:, 0], b_mat[:, 0], c_mat[:, 0]
+    xf = xi_c.astype(jnp.float32)
+    da = jnp.exp(dtt[..., None] * a)
+    h = da * cache["h"] + (dtt * xf)[..., None] * bt[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, ct) + xf * p["D"]
+    y = y.astype(dt_) * jax.nn.silu(z)
+    out = f_reduce(dense(y, p["out_proj"].astype(dt_)), ctx)
+    return out[:, None, :], {"h": h, "conv": new_conv}

@@ -1,0 +1,100 @@
+"""Batched serving engine: prefill + autoregressive decode with KV/SSM
+caches, temperature/top-k sampling, per-sequence stop handling.
+
+The engine drives the same ``transformer.prefill`` / ``decode_step`` that
+the production dry-run lowers (decode_32k / long_500k lower exactly one
+engine step); on a mesh it would wrap them in the serve shard_map steps —
+here it targets the single-process path used by examples and tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.models.common import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => full softmax
+    eos_id: Optional[int] = None
+
+
+def _sample(logits: jax.Array, key, gc: GenerationConfig,
+            vocab: int) -> jax.Array:
+    """logits (B, V_pad) -> token ids (B,)."""
+    logits = logits[:, :vocab].astype(jnp.float32)
+    if gc.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / gc.temperature
+    if gc.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -gc.top_k][:, None]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+class ServeEngine:
+    """Holds params + jitted steps; serves batches of token prompts."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 ctx: ParallelCtx = ParallelCtx()):
+        assert cfg.embed_kind in ("tokens", "prefix"), \
+            "engine serves token prompts (audio stub drives decode_step " \
+            "directly)"
+        assert cfg.family != "encoder", "encoder-only archs do not decode"
+        self.cfg, self.params, self.ctx = cfg, params, ctx
+        self._decode = jax.jit(
+            lambda p, b, c, pos: T.decode_step(p, b, c, pos, cfg, ctx))
+
+    def generate(self, prompts: jax.Array, gc: GenerationConfig,
+                 key=None, prefix_embeds: Optional[jax.Array] = None
+                 ) -> Dict[str, jax.Array]:
+        """prompts: (B, S) int32 (right-aligned, no padding support —
+        equal-length prompts per batch, the common benchmark setting).
+
+        Returns {"tokens": (B, max_new_tokens), "n_valid": (B,)}.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        b, s = prompts.shape
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_len = s + gc.max_new_tokens + (cfg.n_prefix if
+                                           cfg.embed_kind == "prefix" else 0)
+        batch = {"tokens": prompts}
+        if cfg.embed_kind == "prefix":
+            assert prefix_embeds is not None
+            batch["patch_embeds"] = prefix_embeds
+        logits, caches = T.prefill(self.params, batch, cfg, ctx,
+                                   cache_len=max_len)
+        pos0 = s + (cfg.n_prefix if cfg.embed_kind == "prefix" else 0)
+
+        key, k0 = jax.random.split(key)
+        tok = _sample(logits, k0, gc, cfg.vocab)
+        out: List[jax.Array] = [tok]
+        alive = jnp.ones((b,), bool)
+        if gc.eos_id is not None:
+            alive = alive & (tok != gc.eos_id)
+        for i in range(gc.max_new_tokens - 1):
+            step_in = {"tokens": tok[:, None]}
+            logits, caches = self._decode(self.params, step_in, caches,
+                                          jnp.int32(pos0 + i))
+            key, ki = jax.random.split(key)
+            nxt = _sample(logits, ki, gc, cfg.vocab)
+            if gc.eos_id is not None:
+                nxt = jnp.where(alive, nxt, gc.eos_id)
+                alive = alive & (nxt != gc.eos_id)
+            out.append(nxt)
+            tok = nxt
+        tokens = jnp.stack(out, axis=1)
+        if gc.eos_id is not None:
+            n_valid = jnp.sum(jnp.cumprod(
+                (tokens != gc.eos_id).astype(jnp.int32), axis=1), axis=1)
+        else:
+            n_valid = jnp.full((b,), gc.max_new_tokens, jnp.int32)
+        return {"tokens": tokens, "n_valid": n_valid}

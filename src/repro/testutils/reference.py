@@ -1,0 +1,46 @@
+"""Pure-Python loop-over-workers oracle for the compressed allreduce.
+
+This mirrors Algorithm 1 lines 7-11 with an explicit worker loop and a
+single logical server whose chunks are laid out contiguously — exactly the
+quantity the shard_map implementation must reproduce rank-for-rank.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.compression import (CompressionConfig, ef_compress,
+                                    ef_decompress)
+
+
+def compressed_allreduce_reference(
+    xs: List[jnp.ndarray],           # n arrays of shape (D,)
+    worker_errs: List[jnp.ndarray],  # n arrays of shape (D,)
+    server_err: jnp.ndarray,         # (D,) concatenated server chunk errors
+    cfg: CompressionConfig,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray], jnp.ndarray]:
+    """Returns (m_bar (D,), new worker errors, new server error (D,))."""
+    n = len(xs)
+    d = xs[0].shape[0]
+    assert d % n == 0
+    chunk = d // n
+
+    payloads, new_worker_errs = [], []
+    for x, e in zip(xs, worker_errs):
+        payload, ne = ef_compress(x, e, cfg)
+        payloads.append(ef_decompress(payload, cfg))
+        new_worker_errs.append(ne)
+
+    # each server chunk j averages the j-th slice of every worker's payload,
+    # then re-compresses with its own error chunk
+    out_chunks, new_server_chunks = [], []
+    for j in range(n):
+        sl = slice(j * chunk, (j + 1) * chunk)
+        avg = sum(p[sl] for p in payloads) / n
+        s_payload, s_ne = ef_compress(avg, server_err[sl], cfg)
+        out_chunks.append(ef_decompress(s_payload, cfg))
+        new_server_chunks.append(s_ne)
+
+    return (jnp.concatenate(out_chunks), new_worker_errs,
+            jnp.concatenate(new_server_chunks))

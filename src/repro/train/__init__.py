@@ -1,0 +1,3 @@
+from repro.train.step import (TrainStepConfig, init_opt_state,  # noqa: F401
+                              make_serve_step, make_train_step,
+                              opt_state_specs)

@@ -1,0 +1,454 @@
+"""Distributed train/serve steps: one ``shard_map`` over the full mesh.
+
+The whole step — forward, backward, and the 1-bit Adam update including
+its ``compressed_allreduce`` — runs per-rank inside a single shard_map
+(check_vma=False). This is what gives the paper's exact semantics:
+
+  * gradients are NOT averaged over data-parallel ranks by autodiff (no dp
+    collective exists in the backward pass at all);
+  * the ONLY dp communication is the optimizer's own exchange — an
+    uncompressed ``pmean`` in the warmup stage (== the paper's baseline
+    Adam), or the error-compensated 1-bit all_to_all/all_gather schedule
+    in the compression stage (Alg. 1 / Fig. 3);
+  * tensor parallelism is explicit Megatron collectives placed by the
+    model code (see repro.models.common).
+
+Optimizer state layout (global shapes; Dp = padded per-model-rank flat
+parameter size, n_dp = product of dp axis sizes):
+
+  m, v        (tp, Dp)                 P("model", None)  — dp-replicated
+  worker_err  (*dp_sizes, tp, Dp)      P(*dp, "model", None) — per dp rank
+  server_err  (*dp_sizes, tp, Dp/n_dp) P(*dp, "model", None) — per dp rank
+  count       ()                       P()
+
+Replicating m/v over dp is paper-faithful (DeepSpeed's 1-bit Adam does not
+compose with ZeRO for the same reason: worker momentum + error state are
+inherently per-worker and full-sized). The dp-sharded-state variant is a
+beyond-paper extension measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.flatten_util import ravel_pytree
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import onebit_adam as OB
+from repro.core.compression import padded_length
+from repro.models import transformer as T
+from repro.models.common import ParallelCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    opt: OB.OneBitAdamConfig = OB.OneBitAdamConfig()
+    stage: str = "warmup"          # "warmup" (== uncompressed Adam baseline)
+    #                               | "compressed" | "compressed_hier"
+    model_axis: str = "model"
+    aux_weight: float = 0.01
+    seq_parallel: bool = False     # Megatron-SP residual stream (§Perf)
+    accum_steps: int = 1           # gradient accumulation (microbatching):
+    #                                activation/temp memory scales with the
+    #                                microbatch, grads are averaged over
+    #                                accum_steps before ONE optimizer step
+    #                                (communication per step unchanged)
+
+
+class FlatOptState(NamedTuple):
+    m: jax.Array
+    v: jax.Array
+    worker_err: jax.Array
+    server_err: jax.Array
+    count: jax.Array
+
+
+def mesh_axes(mesh: Mesh, model_axis: str = "model"):
+    """(dp_axes, dp_sizes, tp) split of the mesh axes."""
+    dp_axes = tuple(a for a in mesh.axis_names if a != model_axis)
+    dp_sizes = tuple(mesh.shape[a] for a in dp_axes)
+    tp = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
+    return dp_axes, dp_sizes, tp
+
+
+def _flat_dim(cfg: ArchConfig, tp: int, n_dp: int, block: int) -> int:
+    """Padded per-model-rank flat parameter length."""
+    shapes = jax.eval_shape(partial(T.init_params, cfg, tp=tp),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    d_local = 0
+    specs = T.param_specs(cfg, "model", tp)
+    for leaf, spec in zip(jax.tree.leaves(shapes),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda s: isinstance(s, P))):
+        n = 1
+        for i, dim in enumerate(leaf.shape):
+            ax = spec[i] if i < len(spec) else None
+            n *= dim // tp if ax == "model" else dim
+        d_local += n
+    return padded_length(d_local, max(n_dp, 1), block)
+
+
+def opt_state_specs(mesh: Mesh, model_axis: str = "model") -> FlatOptState:
+    dp_axes, _, _ = mesh_axes(mesh, model_axis)
+    dp = tuple(dp_axes)
+    return FlatOptState(
+        m=P(model_axis, None), v=P(model_axis, None),
+        worker_err=P(*dp, model_axis, None),
+        server_err=P(*dp, model_axis, None),
+        count=P(),
+    )
+
+
+def init_opt_state(cfg: ArchConfig, mesh: Mesh, model_axis: str = "model",
+                   block: int = 4096, abstract: bool = False,
+                   hierarchical: bool = False) -> FlatOptState:
+    """Global optimizer state (zeros). abstract=True -> ShapeDtypeStructs.
+
+    hierarchical=True sizes the per-rank server-error chunk by the INNER
+    (intra-pod) dp size — the two-level compressed allreduce runs the
+    paper's server stage within the pod only.
+    """
+    dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    if hierarchical and len(dp_sizes) > 1:
+        n_dp = 1
+        for s in dp_sizes[1:]:
+            n_dp *= s
+    dp_ = _flat_dim(cfg, tp, n_dp, block)
+    shapes = FlatOptState(
+        m=((tp, dp_), jnp.float32),
+        v=((tp, dp_), jnp.float32),
+        worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
+        server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        count=((), jnp.int32),
+    )
+    if abstract:
+        return FlatOptState(*(jax.ShapeDtypeStruct(s, d)
+                              for s, d in shapes))
+    return FlatOptState(*(jnp.zeros(s, d) for s, d in shapes))
+
+
+def _ctx(mesh: Mesh, model_axis: str) -> ParallelCtx:
+    dp_axes, _, tp = mesh_axes(mesh, model_axis)
+    return ParallelCtx(tp_axis=model_axis if tp > 1 else None,
+                       tp_size=tp, dp_axes=dp_axes)
+
+
+def batch_specs(cfg: ArchConfig, shape_kind: str, dp_axes) -> Dict[str, P]:
+    """Batch dim sharded over the dp super-axis; everything else replicated."""
+    dp = tuple(dp_axes)
+    spec: Dict[str, P] = {}
+    names = {"tokens": 2, "labels": 2, "loss_mask": 2, "embeddings": 3,
+             "patch_embeds": 3}
+    for k, nd in names.items():
+        spec[k] = P(dp, *([None] * (nd - 1)))
+    return spec
+
+
+def _select(spec_map: Dict[str, Any], batch: Dict[str, Any]):
+    return {k: spec_map[k] for k in batch}
+
+
+class ZeroFlatOptState(NamedTuple):
+    """Global container for the ZeRO-1-composed stage (see
+    onebit_adam.ZeroOneBitAdamState): v/master sharded over dp as well."""
+    m: jax.Array             # (tp, Dp)                 P(model, None)
+    v_shard: jax.Array       # (*dp, tp, Dp/n)          P(*dp, model, None)
+    master_shard: jax.Array  # (*dp, tp, Dp/n)
+    worker_err: jax.Array    # (*dp, tp, Dp)
+    server_err: jax.Array    # (*dp, tp, Dp/n)
+    count: jax.Array
+
+
+def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
+    dp_axes, _, _ = mesh_axes(mesh, model_axis)
+    dp = tuple(dp_axes)
+    return ZeroFlatOptState(
+        m=P(model_axis, None),
+        v_shard=P(*dp, model_axis, None),
+        master_shard=P(*dp, model_axis, None),
+        worker_err=P(*dp, model_axis, None),
+        server_err=P(*dp, model_axis, None),
+        count=P())
+
+
+def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
+                         model_axis: str = "model", block: int = 4096,
+                         abstract: bool = False) -> ZeroFlatOptState:
+    dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    dp_ = _flat_dim(cfg, tp, n_dp, block)
+    shapes = ZeroFlatOptState(
+        m=((tp, dp_), jnp.float32),
+        v_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        master_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
+        server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        count=((), jnp.int32))
+    if abstract:
+        return ZeroFlatOptState(*(jax.ShapeDtypeStruct(s, d)
+                                  for s, d in shapes))
+    return ZeroFlatOptState(*(jnp.zeros(s, d) for s, d in shapes))
+
+
+# --------------------------------------------------------------------------
+# training step
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
+                    donate: bool = True):
+    """Returns jitted fn(params, opt_state, batch, lr) -> (params, state,
+    metrics). ``tsc.stage`` selects warmup (uncompressed Adam — also the
+    paper's baseline) or the 1-bit compression stage."""
+    dp_axes, dp_sizes, tp = mesh_axes(mesh, tsc.model_axis)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    ctx = _ctx(mesh, tsc.model_axis)
+    if tsc.seq_parallel:
+        ctx = dataclasses.replace(ctx, sp=True)
+    pspecs = T.param_specs(cfg, tsc.model_axis, tp)
+    osp = (zero1_opt_specs(mesh, tsc.model_axis)
+           if tsc.stage == "compressed_zero1"
+           else opt_state_specs(mesh, tsc.model_axis))
+    block = tsc.opt.compression.block_size
+
+    if tsc.stage == "compressed_hier" and len(dp_axes) > 1:
+        inner_axes, outer_axes = dp_axes[1:], dp_axes[:1]
+        n_pad = 1
+        for a in inner_axes:
+            n_pad *= mesh.shape[a]
+    else:
+        inner_axes, outer_axes = dp_axes, ()
+        n_pad = n_dp
+    # padding basis must match init_opt_state(hierarchical=...): the
+    # server stage chunks over the INNER dp axes only in hierarchical mode
+    d_pad = _flat_dim(cfg, tp, n_pad, block)
+
+    def step(params, opt, batch, lr):
+        flat0, unravel = ravel_pytree(params)
+        d_r = flat0.shape[0]
+
+        grad_fn = jax.value_and_grad(T.loss_fn, has_aux=True)
+        if tsc.accum_steps > 1:
+            a = tsc.accum_steps
+            micro = jax.tree.map(
+                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+                batch)
+
+            def acc_body(carry, mb):
+                g_acc, tot_acc, met_acc = carry
+                (tot, met), g = grad_fn(params, mb, cfg, ctx,
+                                        tsc.aux_weight)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                met_acc = jax.tree.map(jnp.add, met_acc, met)
+                return (g_acc, tot_acc + tot, met_acc), None
+
+            g0 = jax.tree.map(jnp.zeros_like, params)
+            m0 = {"loss": 0.0, "aux": 0.0, "acc": 0.0}
+            (grads, total, metrics), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0.0),
+                           jax.tree.map(jnp.float32, m0)), micro)
+            grads = jax.tree.map(lambda g: g / a, grads)
+            total = total / a
+            metrics = jax.tree.map(lambda v: v / a, metrics)
+        else:
+            (total, metrics), grads = grad_fn(params, batch, cfg, ctx,
+                                              tsc.aux_weight)
+        g_flat, _ = ravel_pytree(grads)
+        g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
+
+        if tsc.stage == "compressed_zero1":
+            st = OB.ZeroOneBitAdamState(
+                m=opt.m.reshape(-1), v_shard=opt.v_shard.reshape(-1),
+                master_shard=opt.master_shard.reshape(-1),
+                worker_err=opt.worker_err.reshape(-1),
+                server_err=opt.server_err.reshape(-1), count=opt.count)
+            x_full, st, stats = OB.zero1_compressed_update(
+                g_flat, st, tsc.opt, lr, dp_axes=dp_axes)
+            new_params = unravel(x_full[:d_r].astype(flat0.dtype))
+            new_opt = ZeroFlatOptState(
+                m=st.m.reshape(opt.m.shape),
+                v_shard=st.v_shard.reshape(opt.v_shard.shape),
+                master_shard=st.master_shard.reshape(
+                    opt.master_shard.shape),
+                worker_err=st.worker_err.reshape(opt.worker_err.shape),
+                server_err=st.server_err.reshape(opt.server_err.shape),
+                count=st.count)
+            out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
+                           for k, v in metrics.items()}
+            v_l1 = stats["v_l1"]
+            if dp_axes:
+                v_l1 = jax.lax.psum(v_l1, dp_axes)
+            if ctx.tp_axis:
+                v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
+            out_metrics["v_l1"] = v_l1
+            out_metrics["total"] = (jax.lax.pmean(total, dp_axes)
+                                    if dp_axes else total)
+            return new_params, new_opt, out_metrics
+
+        st = OB.OneBitAdamState(
+            m=opt.m.reshape(-1), v=opt.v.reshape(-1),
+            worker_err=opt.worker_err.reshape(-1),
+            server_err=opt.server_err.reshape(-1), count=opt.count)
+        x = jnp.pad(flat0, (0, d_pad - d_r))
+
+        if tsc.stage == "warmup":
+            new_x, st, stats = OB.warmup_update(
+                g_flat, st, x, tsc.opt, lr, dp_axes=dp_axes)
+        elif tsc.stage == "compressed_hier":
+            hcfg = dataclasses.replace(tsc.opt, hierarchical=True)
+            new_x, st, stats = OB.compressed_update(
+                g_flat, st, x, hcfg, lr, dp_axes=inner_axes,
+                pod_axes=outer_axes)
+        else:
+            new_x, st, stats = OB.compressed_update(
+                g_flat, st, x, tsc.opt, lr, dp_axes=dp_axes)
+
+        new_params = unravel(new_x[:d_r])
+        new_opt = FlatOptState(
+            m=st.m.reshape(opt.m.shape), v=st.v.reshape(opt.v.shape),
+            worker_err=st.worker_err.reshape(opt.worker_err.shape),
+            server_err=st.server_err.reshape(opt.server_err.shape),
+            count=st.count)
+
+        # metrics: mean over dp (already replicated over tp); v_l1 summed
+        # over model shards = the paper's fused-variance norm (Fig. 2)
+        out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
+                       for k, v in metrics.items()}
+        v_l1 = stats["v_l1"]
+        if ctx.tp_axis:
+            v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
+        out_metrics["v_l1"] = v_l1
+        out_metrics["total"] = (jax.lax.pmean(total, dp_axes)
+                                if dp_axes else total)
+        return new_params, new_opt, out_metrics
+
+    _cache: Dict[frozenset, Any] = {}
+
+    def build(batch_tree):
+        key = frozenset(batch_tree)
+        if key not in _cache:
+            bspec = _select(batch_specs(cfg, "train", dp_axes), batch_tree)
+            mspec = {k: P() for k in ["loss", "aux", "acc", "v_l1", "total"]}
+            mapped = shard_map(
+                step, mesh=mesh,
+                in_specs=(pspecs, osp, bspec, P()),
+                out_specs=(pspecs, osp, mspec),
+                check_vma=False)
+            donate_argnums = (0, 1) if donate else ()
+            _cache[key] = jax.jit(mapped, donate_argnums=donate_argnums)
+        return _cache[key]
+
+    def train_step(params, opt_state, batch, lr):
+        return build(batch)(params, opt_state, batch, lr)
+
+    # expose the pieces for lowering without real arrays (dry-run)
+    train_step.build = build
+    train_step.param_specs = pspecs
+    train_step.opt_specs = osp
+    return train_step
+
+
+# --------------------------------------------------------------------------
+# serving steps
+# --------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, mesh: Mesh, shape: InputShape,
+                    model_axis: str = "model"):
+    """Prefill or decode step for the given input shape.
+
+    decode: batch over dp when it divides (decode_32k); for long_500k
+    (batch=1) full-attention KV caches are sequence-sharded over dp and
+    combined flash-decoding style; SSM states / windowed ring caches are
+    replicated over dp (their memory is O(1) in context length).
+    Returns jitted fn + .cache_specs/.batch_specs attributes.
+    """
+    dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    ctx = _ctx(mesh, model_axis)
+    pspecs = T.param_specs(cfg, model_axis, tp)
+    seq_sharded = (shape.kind == "decode"
+                   and shape.global_batch < n_dp)
+    seq_axes = dp_axes if seq_sharded else ()
+
+    if shape.kind == "prefill":
+        def pre(params, batch):
+            logits, caches = T.prefill(params, batch, cfg, ctx)
+            return logits
+
+        _cache: Dict[frozenset, Any] = {}
+
+        def build(batch_tree):
+            key = frozenset(batch_tree)
+            if key not in _cache:
+                bspec = _select(batch_specs(cfg, shape.kind, dp_axes),
+                                batch_tree)
+                mapped = shard_map(pre, mesh=mesh, in_specs=(pspecs, bspec),
+                                   out_specs=P(dp_axes, model_axis),
+                                   check_vma=False)
+                _cache[key] = jax.jit(mapped)
+            return _cache[key]
+
+        def serve_step(params, batch):
+            return build(batch)(params, batch)
+
+        serve_step.build = build
+        serve_step.param_specs = pspecs
+        return serve_step
+
+    # decode
+    cspecs = T.cache_specs(cfg, model_axis, dp_axes, seq_sharded)
+    nsb = T.n_superblocks(cfg)
+    cspecs = jax.tree.map(lambda s: s, cspecs,
+                          is_leaf=lambda s: isinstance(s, P))
+
+    def dec(params, batch, caches, pos):
+        sa = seq_axes if not cfg.window else ()
+        logits, new_caches = T.decode_step(params, batch, caches, pos, cfg,
+                                           ctx, seq_axes=sa)
+        return logits, new_caches
+
+    _cache: Dict[frozenset, Any] = {}
+
+    def build(batch_tree):
+        key = frozenset(batch_tree)
+        if key not in _cache:
+            bspec = _select(batch_specs(cfg, shape.kind, dp_axes),
+                            batch_tree)
+            if seq_sharded:  # batch replicated (batch < n_dp)
+                bspec = jax.tree.map(
+                    lambda s: P(*((None,) + tuple(s)[1:])), bspec,
+                    is_leaf=lambda s: isinstance(s, P))
+            logits_spec = (P(None, model_axis) if seq_sharded
+                           else P(dp_axes, model_axis))
+            mapped = shard_map(dec, mesh=mesh,
+                               in_specs=(pspecs, bspec, cspecs, P()),
+                               out_specs=(logits_spec, cspecs),
+                               check_vma=False)
+            _cache[key] = jax.jit(mapped, donate_argnums=(2,))
+        return _cache[key]
+
+    def serve_step(params, batch, caches, pos):
+        return build(batch)(params, batch, caches, pos)
+
+    serve_step.build = build
+    serve_step.param_specs = pspecs
+    serve_step.cache_specs = cspecs
+    serve_step.seq_sharded = seq_sharded
+    serve_step.init_caches = lambda batch=None, dtype=jnp.bfloat16: (
+        T.init_caches(cfg, batch or shape.global_batch, shape.seq_len, tp,
+                      dtype, n_dp if seq_sharded else 1))
+    return serve_step

@@ -1,0 +1,143 @@
+"""Unit + property tests for the 1-bit EF compressor."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import compression as C
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(d,)).astype(np.float32) * scale)
+
+
+class TestPacking:
+    @given(st.integers(1, 64), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_roundtrip(self, nbytes, seed):
+        d = nbytes * 8
+        x = rand(d, seed)
+        signs = np.where(np.asarray(x) >= 0, 1.0, -1.0)
+        out = np.asarray(C.unpack_signs(C.pack_signs(x)))
+        np.testing.assert_array_equal(out, signs)
+
+    def test_packed_size(self):
+        x = rand(1024)
+        assert C.pack_signs(x).shape == (128,)
+        assert C.pack_signs(x).dtype == jnp.uint8
+
+    def test_zero_maps_to_plus_one(self):
+        # paper quantizes to the sign; we fix sign(0) = +1 so the wire
+        # format has exactly 1 bit of entropy per element.
+        x = jnp.zeros((8,), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(C.unpack_signs(C.pack_signs(x))),
+                                      np.ones(8))
+
+
+class TestCompress:
+    @given(st.integers(1, 8), st.integers(0, 2**31 - 1),
+           st.sampled_from([8, 64, 256]))
+    @settings(max_examples=25, deadline=None)
+    def test_scale_is_blockwise_mean_abs(self, nblocks, seed, block):
+        d = nblocks * block
+        x = rand(d, seed, scale=3.0)
+        _, scales = C.compress_onebit(x, block_size=block)
+        expect = np.abs(np.asarray(x)).reshape(-1, block).mean(axis=1)
+        np.testing.assert_allclose(np.asarray(scales), expect, rtol=1e-6)
+
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_decompress_magnitude(self, seed):
+        x = rand(4096, seed)
+        pk, sc = C.compress_onebit(x, block_size=512)
+        y = C.decompress_onebit(pk, sc, block_size=512)
+        # per block: |y| == scale everywhere, signs match x
+        yb = np.asarray(y).reshape(-1, 512)
+        np.testing.assert_allclose(
+            np.abs(yb), np.broadcast_to(np.asarray(sc)[:, None], yb.shape),
+            rtol=1e-6)
+        np.testing.assert_array_equal(np.sign(yb) >= 0,
+                                      np.asarray(x).reshape(-1, 512) >= 0)
+
+    def test_scale_optimality(self):
+        # mean|x| minimizes ||x - s*sign(x)||^2 over scalar s; check that
+        # perturbing s in either direction increases the error.
+        x = rand(4096, 7)
+        pk, sc = C.compress_onebit(x, block_size=4096)
+        base = float(jnp.linalg.norm(x - C.decompress_onebit(pk, sc, 4096)))
+        for mult in (0.8, 1.2):
+            err = float(jnp.linalg.norm(
+                x - C.decompress_onebit(pk, sc * mult, 4096)))
+            assert err > base
+
+
+class TestErrorFeedback:
+    @given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+    @settings(max_examples=25, deadline=None)
+    def test_ef_invariant_exact(self, seed, scale):
+        """decompress(compress(x+e)) + new_e == x + e, exactly (paper Sec. 4.1:
+        the error cancellation term requires delta_t to be the exact
+        residual)."""
+        cfg = C.CompressionConfig(block_size=512)
+        x = rand(4096, seed, scale)
+        e = rand(4096, seed + 1, scale * 0.1)
+        payload, new_e = C.ef_compress(x, e, cfg)
+        y = C.ef_decompress(payload, cfg)
+        buf = x + e
+        # the stored error is the exact residual (bitwise): e' = buf - y
+        np.testing.assert_array_equal(np.asarray(new_e), np.asarray(buf - y))
+        np.testing.assert_allclose(np.asarray(y + new_e), np.asarray(buf),
+                                   rtol=1e-5, atol=1e-5 * scale)
+
+    def test_identity_kind(self):
+        cfg = C.CompressionConfig(kind="identity")
+        x, e = rand(128, 0), rand(128, 1)
+        payload, new_e = C.ef_compress(x, e, cfg)
+        np.testing.assert_array_equal(np.asarray(new_e), np.zeros(128))
+        np.testing.assert_allclose(np.asarray(C.ef_decompress(payload, cfg)),
+                                   np.asarray(x + e))
+
+    def test_error_bounded(self):
+        # Assumption 1.3: compression error magnitude bounded; for 1-bit with
+        # mean-|x| scale the per-element error is at most max|x| + mean|x|.
+        x = rand(8192, 3, scale=5.0)
+        cfg = C.CompressionConfig(block_size=1024)
+        payload, e = C.ef_compress(x, jnp.zeros_like(x), cfg)
+        assert float(jnp.max(jnp.abs(e))) <= float(
+            jnp.max(jnp.abs(x)) + jnp.max(jnp.abs(x)))
+
+    def test_ef_shrinks_bias_over_steps(self):
+        """Repeatedly EF-compressing a constant signal: the time-average of
+        the outputs converges to the signal (error does not accumulate —
+        Eq. (5) of the paper)."""
+        cfg = C.CompressionConfig(block_size=256)
+        target = rand(2048, 11)
+        e = jnp.zeros_like(target)
+        acc = jnp.zeros_like(target)
+        steps = 200
+        for _ in range(steps):
+            payload, e = C.ef_compress(target, e, cfg)
+            acc = acc + C.ef_decompress(payload, cfg)
+        avg = np.asarray(acc / steps)
+        err = np.linalg.norm(avg - np.asarray(target)) / np.linalg.norm(
+            np.asarray(target))
+        assert err < 0.08, err
+
+
+class TestWire:
+    def test_wire_bytes(self):
+        cfg = C.CompressionConfig(block_size=4096)
+        d = 1 << 20
+        assert C.wire_bytes(d, cfg) == d // 8 + 4 * (d // 4096)
+        ratio = 4 * d / C.wire_bytes(d, cfg)
+        assert ratio > 30  # ~32x vs f32
+
+    def test_padded_length(self):
+        assert C.padded_length(100, 4, 8) == 128
+        assert C.padded_length(128, 4, 8) == 128
+        assert C.padded_length(129, 4, 8) == 160

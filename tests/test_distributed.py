@@ -1,0 +1,495 @@
+"""Multi-device correctness tests (run in a subprocess with forced host
+devices so the rest of the suite keeps seeing 1 device).
+
+Covers:
+  * shard_map compressed_allreduce == pure-Python oracle (rank-for-rank)
+  * TP model forward/backward == single-device reference
+  * distributed 1-bit Adam training step == single-device sequential math
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = REPO_SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+class TestCompressedAllreduceDistributed:
+    def test_matches_oracle(self):
+        """4-way shard_map compressed allreduce vs the loop-over-workers
+        reference, including worker/server error states."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compression import CompressionConfig
+        from repro.core.comm import compressed_allreduce
+        from repro.testutils.reference import compressed_allreduce_reference
+        from repro.launch.mesh import make_mesh
+
+        n, d, block = 4, 2048, 128
+        mesh = make_mesh((n,), ("data",))
+        cfg = CompressionConfig(block_size=block)
+        rng = np.random.default_rng(0)
+        xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        wes = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32)) * 0.1
+        ses = jnp.asarray(rng.normal(size=(n, d // n)).astype(np.float32)) * 0.1
+
+        def body(x, we, se):
+            out, nw, ns = compressed_allreduce(
+                x[0], we[0], se[0], ("data",), cfg)
+            return out[None], nw[None], ns[None]
+
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P("data", None),) * 3,
+            out_specs=(P("data", None),) * 3, check_vma=False))
+        out, nw, ns = f(xs, wes, ses)
+
+        ref_out, ref_w, ref_s = compressed_allreduce_reference(
+            [xs[i] for i in range(n)], [wes[i] for i in range(n)],
+            ses.reshape(-1), cfg)
+        for i in range(n):
+            np.testing.assert_allclose(np.asarray(out[i]),
+                                       np.asarray(ref_out), rtol=1e-5,
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(nw[i]),
+                                       np.asarray(ref_w[i]), rtol=1e-5,
+                                       atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ns).reshape(-1),
+                                   np.asarray(ref_s), rtol=1e-5, atol=1e-6)
+        print("OK")
+        """)
+        assert "OK" in out
+
+    def test_identity_matches_pmean(self):
+        """Identity compression through the same a2a/ag schedule must equal
+        a plain pmean (up to float assoc)."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compression import CompressionConfig
+        from repro.core.comm import compressed_allreduce
+        from repro.launch.mesh import make_mesh
+
+        n, d = 8, 1024
+        mesh = make_mesh((n,), ("data",))
+        cfg = CompressionConfig(kind="identity")
+        rng = np.random.default_rng(1)
+        xs = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        z = jnp.zeros((n, d), jnp.float32)
+        zs = jnp.zeros((n, d // n), jnp.float32)
+
+        def body(x, we, se):
+            out, _, _ = compressed_allreduce(
+                x[0], we[0], se[0], ("data",), cfg)
+            return out[None]
+
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P("data", None),) * 3,
+            out_specs=P("data", None), check_vma=False))
+        out = f(xs, z, zs)
+        expect = np.mean(np.asarray(xs), axis=0)
+        for i in range(n):
+            np.testing.assert_allclose(np.asarray(out[i]), expect,
+                                       rtol=1e-5, atol=1e-6)
+        print("OK")
+        """)
+        assert "OK" in out
+
+    def test_hierarchical_close_to_flat(self):
+        """Two-level (2 pods x 4) compressed allreduce stays within the
+        compression-error envelope of the flat 8-way result."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compression import CompressionConfig
+        from repro.core.comm import (compressed_allreduce,
+                                     compressed_allreduce_hierarchical)
+        from repro.launch.mesh import make_mesh
+
+        d, block = 4096, 128
+        mesh = make_mesh((2, 4), ("pod", "data"))
+        cfg = CompressionConfig(block_size=block)
+        rng = np.random.default_rng(2)
+        xs = jnp.asarray(rng.normal(size=(2, 4, d)).astype(np.float32))
+        z = jnp.zeros((2, 4, d), jnp.float32)
+        zs = jnp.zeros((2, 4, d // 4), jnp.float32)
+
+        def body(x, we, se):
+            out, _, _ = compressed_allreduce_hierarchical(
+                x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
+                outer_axes=("pod",), cfg=cfg)
+            return out[None, None]
+
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P("pod", "data", None),) * 3,
+            out_specs=P("pod", "data", None), check_vma=False))
+        out = np.asarray(f(xs, z, zs))
+        target = np.mean(np.asarray(xs).reshape(8, d), axis=0)
+        # hierarchical output approximates the global mean within the 1-bit
+        # quantization envelope (per-block scale magnitude)
+        err = np.linalg.norm(out[0, 0] - target) / np.linalg.norm(target)
+        assert err < 1.0, err
+        # all ranks agree exactly
+        for i in range(2):
+            for j in range(4):
+                np.testing.assert_array_equal(out[i, j], out[0, 0])
+        print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestTensorParallelParity:
+    def test_tp_forward_backward_matches_single_device(self):
+        """Same global params: tp=2 shard_map loss+grads == tp=1 locally.
+        Exercises dense GQA, MoE (router g_copy), SSM, and hybrid families.
+        dp=1: per-dp-rank gradients are intentionally NOT averaged (the
+        optimizer's compressed allreduce does that), so dp>1 grads differ
+        from the full-batch reference by design."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config, SHAPES
+        from repro.models import transformer as T
+        from repro.models.common import ParallelCtx
+        from repro.data import make_batch
+        from repro.launch.mesh import make_mesh
+        from repro.train.step import batch_specs
+
+        # tp=2 so reduced kv heads (2) divide the model axis evenly; the
+        # kv<tp duplicate-group layout is covered by
+        # test_grouped_kv_grad_psum below.
+        mesh = make_mesh((1, 2), ("data", "model"))
+        for name in ["llama3.2-3b", "mixtral-8x22b",
+                     "jamba-1.5-large-398b", "falcon-mamba-7b"]:
+            cfg = get_config(name).reduced()
+            # capacity high so MoE never drops (drop order is rank-local
+            # in TP vs global in single-device — a real, documented diff)
+            cfg = dataclasses.replace(cfg, capacity_factor=64.0,
+                                      remat=False)
+            shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                        global_batch=4)
+            key = jax.random.PRNGKey(0)
+            params = T.init_params(cfg, key, tp=2)
+            batch = make_batch(cfg, shape, key)
+
+            # single device reference (tp=1 ctx over the same global params)
+            ctx1 = ParallelCtx()
+            (l_ref, m_ref), g_ref = jax.value_and_grad(
+                T.loss_fn, has_aux=True)(params, batch, cfg, ctx1)
+
+            ctx = ParallelCtx(tp_axis="model", tp_size=2,
+                              dp_axes=("data",))
+            pspecs = T.param_specs(cfg, "model", 2)
+            bspec = {k: batch_specs(cfg, "train", ("data",))[k]
+                     for k in batch}
+
+            def body(p, b):
+                (l, m), g = jax.value_and_grad(T.loss_fn, has_aux=True)(
+                    p, b, cfg, ctx)
+                return jax.lax.pmean(l, ("data",)), g
+
+            f = jax.jit(jax.shard_map(
+                body, mesh=mesh, in_specs=(pspecs, bspec),
+                out_specs=(P(), pspecs), check_vma=False))
+            l_tp, g_tp = f(params, batch)
+            np.testing.assert_allclose(float(l_tp), float(l_ref),
+                                       rtol=1e-5)
+            ref_leaves = jax.tree.leaves(g_ref)
+            tp_leaves = jax.tree.leaves(g_tp)
+            err = max(float(jnp.max(jnp.abs(a - b))) /
+                      (float(jnp.max(jnp.abs(a))) + 1e-8)
+                      for a, b in zip(ref_leaves, tp_leaves))
+            assert err < 1e-4, (name, err)
+            print("OK", name, float(l_tp), err)
+        """, n=8, timeout=1800)
+        assert out.count("OK") == 4
+
+    def test_grouped_kv_grad_psum(self):
+        """n_kv < tp: KV-projection grads must be identical across the
+        ranks sharing a kv head (grouped psum keeps replicas in lockstep).
+        """
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config, SHAPES
+        from repro.models import transformer as T
+        from repro.models.common import ParallelCtx
+        from repro.data import make_batch
+        from repro.launch.mesh import make_mesh
+        from repro.train.step import batch_specs
+
+        mesh = make_mesh((1, 4), ("data", "model"))
+        cfg = get_config("granite-34b").reduced()   # MQA: kv=1 < tp=4
+        cfg = dataclasses.replace(cfg, remat=False)
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32,
+                                    global_batch=2)
+        key = jax.random.PRNGKey(0)
+        params = T.init_params(cfg, key, tp=4)
+        batch = make_batch(cfg, shape, key)
+        ctx = ParallelCtx(tp_axis="model", tp_size=4, dp_axes=("data",))
+        pspecs = T.param_specs(cfg, "model", 4)
+        bspec = {k: batch_specs(cfg, "train", ("data",))[k] for k in batch}
+
+        def body(p, b):
+            _, g = jax.value_and_grad(T.loss_fn, has_aux=True)(
+                p, b, cfg, ctx)
+            return g
+
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                                  in_specs=(pspecs, bspec),
+                                  out_specs=pspecs, check_vma=False))
+        g = f(params, batch)
+        wk = np.asarray(g["blocks"]["l0"]["mixer"]["wk"])  # (nsb, d, 4*hd)
+        hd = cfg.head_dim
+        # global layout duplicates the single kv head across all 4 ranks:
+        # gradients must match across the duplicate columns
+        for r in range(1, 4):
+            np.testing.assert_allclose(wk[..., :hd],
+                                       wk[..., r*hd:(r+1)*hd],
+                                       rtol=1e-5, atol=1e-7)
+        print("OK")
+        """)
+        assert "OK" in out
+
+
+class TestDistributedTraining:
+    def test_two_stage_loss_decreases(self):
+        """End-to-end 1-bit Adam on a 4dpx2tp mesh: warmup then compressed
+        stage, loss must drop substantially."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import get_config, SHAPES
+        from repro.models import transformer as T
+        from repro.train.step import (TrainStepConfig, init_opt_state,
+                                      make_train_step)
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.core import onebit_adam as OB
+        from repro.core.compression import CompressionConfig
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        cfg = get_config("internlm2-1.8b").reduced()
+        shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                    global_batch=8)
+        stream = SyntheticStream(cfg, shape)
+        ocfg = OB.OneBitAdamConfig(
+            compression=CompressionConfig(block_size=512))
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
+        opt = init_opt_state(cfg, mesh, block=512)
+        s_w = make_train_step(cfg, mesh,
+                              TrainStepConfig(opt=ocfg, stage="warmup"),
+                              donate=False)
+        s_c = make_train_step(cfg, mesh,
+                              TrainStepConfig(opt=ocfg,
+                                              stage="compressed"),
+                              donate=False)
+        losses = []
+        for step in range(30):
+            fn = s_w if step < 10 else s_c
+            params, opt, m = fn(params, opt, stream.batch_at(step),
+                                jnp.float32(2e-3))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.7 * losses[0], losses
+        print("OK", losses[0], losses[-1])
+        """, timeout=1800)
+        assert "OK" in out
+
+
+class TestSequenceParallel:
+    def test_sp_matches_tp(self):
+        """Sequence-parallel residual stream (beyond-paper, Megatron-SP
+        style): loss and gradients must match plain TP. Exact for
+        dense/SSM; MoE tolerates tiny drift (reduce-scatter float
+        reassociation can flip top-k routing ties)."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config, SHAPES
+        from repro.models import transformer as T
+        from repro.models.common import ParallelCtx
+        from repro.data import make_batch
+        from repro.launch.mesh import make_mesh
+        from repro.train.step import batch_specs
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        tol = {"llama3.2-3b": 1e-5, "falcon-mamba-7b": 1e-5,
+               "internvl2-2b": 1e-5, "mixtral-8x22b": 0.2,
+               "jamba-1.5-large-398b": 0.2}
+        for name, tl in tol.items():
+            cfg = get_config(name).reduced()
+            cfg = dataclasses.replace(cfg, capacity_factor=64.0,
+                                      remat=False)
+            shape = dataclasses.replace(SHAPES["train_4k"], seq_len=64,
+                                        global_batch=4)
+            key = jax.random.PRNGKey(0)
+            params = T.init_params(cfg, key, tp=2)
+            batch = make_batch(cfg, shape, key)
+            pspecs = T.param_specs(cfg, "model", 2)
+            bspec = {k: batch_specs(cfg, "train", ("data",))[k]
+                     for k in batch}
+            outs = {}
+            for sp in (False, True):
+                ctx = ParallelCtx(tp_axis="model", tp_size=2,
+                                  dp_axes=("data",), sp=sp)
+
+                def body(p, b):
+                    (l, m), g = jax.value_and_grad(
+                        T.loss_fn, has_aux=True)(p, b, cfg, ctx)
+                    return jax.lax.pmean(l, ("data",)), g
+
+                f = jax.jit(jax.shard_map(
+                    body, mesh=mesh, in_specs=(pspecs, bspec),
+                    out_specs=(P(), pspecs), check_vma=False))
+                outs[sp] = f(params, batch)
+            l0, g0 = outs[False]
+            l1, g1 = outs[True]
+            assert abs(float(l0) - float(l1)) < 1e-3, name
+            worst = max(float(jnp.max(jnp.abs(a - b))) /
+                        (float(jnp.max(jnp.abs(a))) + 1e-8)
+                        for a, b in zip(jax.tree.leaves(g0),
+                                        jax.tree.leaves(g1)))
+            assert worst < tl, (name, worst)
+            print("OK", name, worst)
+        """, timeout=1800)
+        assert out.count("OK") == 5
+
+
+class TestZero1Composition:
+    def test_zero1_stage_trains_and_shards_state(self):
+        """Beyond-paper ZeRO-1 composition: v/master sharded over dp,
+        bf16 replica params; loss must keep dropping and the master
+        shards must stay consistent with the gathered bf16 params."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.models import transformer as T
+        from repro.train.step import (TrainStepConfig, init_opt_state,
+                                      init_zero1_opt_state, make_train_step)
+        from repro.data import SyntheticStream
+        from repro.core import onebit_adam as OB
+        from repro.core.compression import CompressionConfig
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        cfg = get_config("internlm2-1.8b").reduced()
+        shape = InputShape("t", 64, 8, "train")
+        stream = SyntheticStream(cfg, shape)
+        ocfg = OB.OneBitAdamConfig(
+            compression=CompressionConfig(block_size=512))
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
+        # real flow: warmup with the replicated stage, then convert v and
+        # the master weights into dp shards (the production switch path)
+        opt = init_opt_state(cfg, mesh, block=512)
+        s_w = make_train_step(
+            cfg, mesh, TrainStepConfig(opt=ocfg, stage="warmup"),
+            donate=False)
+        for t in range(8):
+            params, opt, _ = s_w(params, opt, stream.batch_at(t),
+                                 jnp.float32(2e-3))
+        z = init_zero1_opt_state(cfg, mesh, block=512)
+        v = np.asarray(opt.v)
+        Dp = v.shape[1]
+        vs = np.stack([v[:, i * (Dp // 4):(i + 1) * (Dp // 4)]
+                       for i in range(4)])
+        z = z._replace(m=opt.m, v_shard=jnp.asarray(vs),
+                       worker_err=opt.worker_err,
+                       server_err=opt.server_err)
+        from jax.flatten_util import ravel_pytree
+        from jax.sharding import PartitionSpec as P
+        pspecs = T.param_specs(cfg, "model", 2)
+
+        def conv(p):
+            f, _ = ravel_pytree(jax.tree.map(
+                lambda a: a.astype(jnp.float32), p))
+            f = jnp.pad(f, (0, Dp - f.shape[0]))
+            i = jax.lax.axis_index(("data",)) * (Dp // 4)
+            return jax.lax.dynamic_slice(f, (i,), (Dp // 4,))[None, None]
+
+        cfn = jax.jit(jax.shard_map(conv, mesh=mesh, in_specs=(pspecs,),
+                                    out_specs=P("data", "model", None),
+                                    check_vma=False))
+        z = z._replace(master_shard=cfn(params))
+        params = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params)
+        step = make_train_step(
+            cfg, mesh, TrainStepConfig(opt=ocfg,
+                                       stage="compressed_zero1"),
+            donate=False)
+        losses = []
+        for t in range(25):
+            params, z, m = step(params, z, stream.batch_at(t),
+                                jnp.float32(2e-3))
+            losses.append(float(m["loss"]))
+        assert losses[-1] < 0.7 * losses[0], losses
+        # params replica equals gathered masters (bf16 round-trip).
+        # The padded tail (last dp chunk) is excluded: sign quantization
+        # of the zero-gradient padding drifts the master pads while the
+        # replica pads stay zero by construction — documented behaviour.
+        flat = cfn(params)
+        np.testing.assert_allclose(
+            np.asarray(flat, np.float32)[:3],
+            np.asarray(z.master_shard.astype(jnp.bfloat16),
+                       np.float32)[:3],
+            rtol=1e-2, atol=1e-3)
+        print("OK", losses[0], losses[-1])
+        """, timeout=1800)
+        assert "OK" in out
+
+
+class TestSeqShardedDecode:
+    def test_flash_decoding_matches_single_device(self):
+        """long_500k path: KV cache sequence-sharded over dp, partial
+        attention combined with the max/logsumexp psum — logits must match
+        the unsharded single-device decode exactly."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.models import transformer as T
+        from repro.models.common import ParallelCtx
+        from repro.train.step import make_serve_step
+        from repro.launch.mesh import make_mesh
+
+        cfg = get_config("jamba-1.5-large-398b").reduced()
+        cfg = dataclasses.replace(cfg, compute_dtype="float32")
+        S, B = 64, 1
+        mesh = make_mesh((4, 2), ("data", "model"))
+        shape = InputShape("d", S, B, "decode")  # B=1 < n_dp=4 -> seq shard
+        step = make_serve_step(cfg, mesh, shape)
+        assert step.seq_sharded
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
+
+        # single-device reference
+        ctx1 = ParallelCtx()
+        caches1 = T.init_caches(cfg, B, S, tp=1, dtype=jnp.float32)
+        # distributed: same global cache layout, seq split over dp
+        caches = step.init_caches(dtype=jnp.float32)
+
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 6), 0,
+                                  cfg.vocab, jnp.int32)
+        for i in range(5):
+            batch = {"tokens": toks[:, i:i+1]}
+            l1, caches1 = T.decode_step(params, batch, caches1,
+                                        jnp.int32(i), cfg, ctx1)
+            ld, caches = step(params, batch, caches, jnp.int32(i))
+            np.testing.assert_allclose(np.asarray(ld), np.asarray(l1),
+                                       rtol=2e-4, atol=2e-4)
+        print("OK")
+        """, timeout=1800)
+        assert "OK" in out

@@ -1,0 +1,185 @@
+"""Optimizer-level tests: exact equivalences + toy convergence parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdamConfig, CompressionConfig, OneBitAdamConfig,
+                        VarianceMonitor, adam_init, adam_update,
+                        compressed_update, onebit_adam_init, warmup_update)
+from repro.core import momentum as M
+
+D = 1024  # divisible by blocks used below
+
+
+def quad_problem(seed=0):
+    """f(x) = 0.5 * (x-t)^T A (x-t) with diagonal A; noisy gradients."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.5, 5.0, size=(D,)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+
+    def loss(x):
+        return 0.5 * jnp.sum(a * (x - t) ** 2)
+
+    def grad(x, key, sigma=0.1):
+        g = a * (x - t)
+        return g + sigma * jax.random.normal(key, g.shape)
+
+    return loss, grad
+
+
+class TestAdamBaseline:
+    def test_converges_on_quadratic(self):
+        loss, grad = quad_problem()
+        x = jnp.zeros((D,))
+        st = adam_init(D)
+        cfg = AdamConfig()
+        key = jax.random.PRNGKey(0)
+        l0 = float(loss(x))
+        for i in range(300):
+            key, k = jax.random.split(key)
+            x, st = adam_update(grad(x, k), st, x, cfg, lr=1e-1)
+        assert float(loss(x)) < 0.01 * l0
+
+    def test_bias_correction_first_step(self):
+        # with bias correction, first step is ~lr*sign(g); without it is
+        # heavily damped by (1-b1)/sqrt(1-b2) ~ 3.16 (b1=.9, b2=.999)
+        g = jnp.ones((D,))
+        x0 = jnp.zeros((D,))
+        x_bc, _ = adam_update(g, adam_init(D), x0,
+                              AdamConfig(bias_correction=True), lr=1e-3)
+        np.testing.assert_allclose(np.asarray(x_bc), -1e-3, rtol=1e-4)
+        x_nb, _ = adam_update(g, adam_init(D), x0,
+                              AdamConfig(bias_correction=False), lr=1e-3)
+        expect = -1e-3 * 0.1 / (np.sqrt(0.001) + 1e-8)
+        np.testing.assert_allclose(np.asarray(x_nb), expect, rtol=1e-4)
+
+
+class TestOneBitAdamEquivalences:
+    def test_warmup_equals_adam(self):
+        """Warmup stage must be bit-identical to baseline Adam."""
+        loss, grad = quad_problem(1)
+        cfg = OneBitAdamConfig()
+        acfg = AdamConfig()
+        x1 = x2 = jnp.zeros((D,))
+        st1 = onebit_adam_init(D, 1)
+        st2 = adam_init(D)
+        key = jax.random.PRNGKey(1)
+        for _ in range(20):
+            key, k = jax.random.split(key)
+            g = grad(x1, k)
+            x1, st1, _ = warmup_update(g, st1, x1, cfg, lr=1e-2)
+            x2, st2 = adam_update(g, st2, x2, acfg, lr=1e-2)
+            np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+        np.testing.assert_array_equal(np.asarray(st1.v), np.asarray(st2.v))
+
+    def test_identity_compression_is_momentum_sgd_preconditioned(self):
+        """With the identity compressor (the paper's '1-bit Adam (32-bits)'
+        ablation) and n=1, the compression stage is exactly momentum SGD with
+        the frozen-v coordinate-wise LR."""
+        cfg = OneBitAdamConfig(
+            compression=CompressionConfig(kind="identity"))
+        st = onebit_adam_init(D, 1)
+        v = jnp.abs(jnp.sin(jnp.arange(D, dtype=jnp.float32))) + 0.5
+        st = st._replace(v=v)
+        x = jnp.ones((D,))
+        m_ref = jnp.zeros((D,))
+        key = jax.random.PRNGKey(2)
+        _, grad = quad_problem(2)
+        for _ in range(10):
+            key, k = jax.random.split(key)
+            g = grad(x, k)
+            x_new, st, _ = compressed_update(g, st, x, cfg, lr=1e-2)
+            m_ref = 0.9 * m_ref + 0.1 * g
+            x_ref = x - 1e-2 * m_ref / (jnp.sqrt(v) + cfg.eps)
+            np.testing.assert_allclose(np.asarray(x_new), np.asarray(x_ref),
+                                       rtol=1e-6, atol=1e-7)
+            x = x_new
+
+    def test_v_frozen_in_compression_stage(self):
+        cfg = OneBitAdamConfig(compression=CompressionConfig(block_size=256))
+        st = onebit_adam_init(D, 1)
+        st = st._replace(v=jnp.ones((D,)))
+        x = jnp.ones((D,))
+        _, grad = quad_problem(3)
+        x, st2, _ = compressed_update(grad(x, jax.random.PRNGKey(0)), st, x,
+                                      cfg, lr=1e-2)
+        np.testing.assert_array_equal(np.asarray(st2.v), np.asarray(st.v))
+
+
+class TestConvergenceParity:
+    """Paper's central claim at toy scale: 1-bit Adam matches Adam's
+    sample-wise convergence; naive compressed Adam does not."""
+
+    def run_opt(self, kind, steps=400, warmup=60, lr=5e-2, seed=0):
+        loss, grad = quad_problem(seed)
+        x = jnp.zeros((D,))
+        key = jax.random.PRNGKey(seed + 10)
+        if kind == "adam":
+            st = adam_init(D)
+            cfg = AdamConfig()
+            for _ in range(steps):
+                key, k = jax.random.split(key)
+                x, st = adam_update(grad(x, k), st, x, cfg, lr)
+        elif kind in ("onebit", "onebit32"):
+            comp = CompressionConfig(block_size=256) if kind == "onebit" \
+                else CompressionConfig(kind="identity")
+            cfg = OneBitAdamConfig(compression=comp)
+            st = onebit_adam_init(D, 1)
+            for i in range(steps):
+                key, k = jax.random.split(key)
+                g = grad(x, k)
+                if i < warmup:
+                    x, st, _ = warmup_update(g, st, x, cfg, lr)
+                else:
+                    x, st, _ = compressed_update(g, st, x, cfg, lr)
+        elif kind == "naive":
+            st = M.naive_init(D, 1)
+            comp = CompressionConfig(block_size=256)
+            for _ in range(steps):
+                key, k = jax.random.split(key)
+                x, st = M.naive_compressed_adam_update(
+                    grad(x, k), st, x, 0.9, 0.999, 1e-8, lr, comp)
+        return float(loss(x))
+
+    def test_onebit_matches_adam(self):
+        l_adam = self.run_opt("adam")
+        l_1bit = self.run_opt("onebit")
+        l_32 = self.run_opt("onebit32")
+        # same order of magnitude (paper: "same convergence speed")
+        assert l_1bit < 3.0 * l_adam + 1e-3, (l_1bit, l_adam)
+        assert l_32 < 3.0 * l_adam + 1e-3, (l_32, l_adam)
+
+    def test_momentum_sgd_runs(self):
+        _, grad = quad_problem(4)
+        loss, _ = quad_problem(4)
+        x = jnp.zeros((D,))
+        st = M.init(D, 1)
+        cfg = M.MomentumConfig()
+        key = jax.random.PRNGKey(9)
+        l0 = float(loss(x))
+        for _ in range(300):
+            key, k = jax.random.split(key)
+            x, st = M.update(grad(x, k), st, x, cfg, lr=2e-2)
+        assert float(loss(x)) < 0.05 * l0
+
+
+class TestVarianceMonitor:
+    def test_triggers_on_stabilization(self):
+        mon = VarianceMonitor(b2=0.9, threshold=0.96, lr_warmup_steps=5)
+        # v_l1 decays geometrically then flattens at step 50
+        frozen_at = None
+        for t in range(200):
+            v = 100.0 * (0.9 ** min(t, 50)) + 1.0
+            if mon.observe(t, v) and frozen_at is None:
+                frozen_at = t
+        assert frozen_at is not None
+        assert 50 <= frozen_at <= 75, frozen_at
+
+    def test_respects_lr_warmup(self):
+        mon = VarianceMonitor(b2=0.9, threshold=0.96, lr_warmup_steps=100)
+        for t in range(99):
+            assert not mon.observe(t, 1.0)
+
+    def test_delta_rule(self):
+        assert VarianceMonitor(b2=0.999).delta == 1000
+        assert VarianceMonitor(b2=0.9).delta == 10
