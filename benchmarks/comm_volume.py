@@ -3,9 +3,23 @@
 
 Measures the bytes that actually cross the interconnect by compiling the
 optimizer exchange on an 8-way mesh and parsing the collective operand
-bytes out of the optimized HLO — the wire format (packed uint8 + f32
-scales) is real, so the reduction shows up in the compiled artifact, not
-in a simulation.
+bytes out of the optimized HLO — the wire format is real for EVERY
+registered compressor (packed uint8 + f32 scales for 1-bit; values +
+intra-block indices for top-k), so the reduction shows up in the compiled
+artifact, not in a simulation.
+
+Also accounts for the hierarchical two-level schedule: the flat analytic
+``wire_bytes`` only describes the single-level exchange, while
+``compressed_allreduce_hierarchical`` crosses the cross-pod (DCI) hop at
+SERVER-CHUNK granularity (chunk = d/n_inner), compressed on BOTH outer
+legs (see core/comm.py). Per-pod, per exchange:
+
+  hier:  n_inner * [wire(d/n_in)*(n_out-1)/n_out        (chunk a2a)
+                    + wire(d/(n_in*n_out))*(n_out-1)]   (chunk ag)
+  flat:  n_inner * [wire(d)*(n-1)/n + wire(d/n)*(n-1)] * (n_out-1)/n_out
+
+so the hierarchical win on the slow hop is ~n_inner× — the whole point
+of running the paper's server stage within the pod.
 """
 from __future__ import annotations
 
@@ -14,25 +28,25 @@ import os
 import subprocess
 import sys
 
-from repro.core.compression import CompressionConfig, wire_bytes
+from repro.optim import get_compressor, list_compressors
 
 _MEASURE_CODE = """
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.analysis.roofline import analyze_compiled
-from repro.core.compression import CompressionConfig
 from repro.core.comm import compressed_allreduce
 from repro.launch.mesh import make_mesh
+from repro.optim import get_compressor
 
 d, n, block = {d}, {n}, {block}
 out = {{}}
-for kind in ("identity", "onebit"):
+for kind in {kinds!r}:
     mesh = make_mesh((n,), ("data",))
-    cfg = CompressionConfig(kind=kind, block_size=block)
+    comp = get_compressor(kind, block_size=block)
 
     def body(x, we, se):
-        o, nw, ns = compressed_allreduce(x[0], we[0], se[0], ("data",), cfg)
+        o, nw, ns = compressed_allreduce(x[0], we[0], se[0], ("data",), comp)
         return o[None], nw[None], ns[None]
 
     f = jax.jit(jax.shard_map(
@@ -47,18 +61,46 @@ print(json.dumps(out))
 """
 
 
-def volume_for(d: int, n: int = 8, block: int = 4096):
+def volume_for(d: int, n: int = 8, block: int = 4096, kinds=None):
     """Measure compiled collective bytes in a subprocess with n forced host
     devices (benchmarks themselves keep seeing the real single device)."""
+    kinds = list(kinds or list_compressors())
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     r = subprocess.run(
-        [sys.executable, "-c", _MEASURE_CODE.format(d=d, n=n, block=block)],
-        capture_output=True, text=True, env=env, timeout=600)
+        [sys.executable, "-c",
+         _MEASURE_CODE.format(d=d, n=n, block=block, kinds=kinds)],
+        capture_output=True, text=True, env=env, timeout=900)
     assert r.returncode == 0, r.stderr
     return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def hier_cross_pod_bytes(d: int, n_inner: int, n_outer: int, comp) -> int:
+    """Per-POD bytes crossing the cross-pod (DCI) hop for one
+    hierarchical exchange.  The outer legs run at SERVER-CHUNK
+    granularity (chunk = d/n_inner, see core/comm.py), on every inner
+    rank, both legs compressed."""
+    if n_outer <= 1:
+        return 0
+    chunk = d // n_inner
+    per_rank = (comp.wire_bytes(chunk) * (n_outer - 1) // n_outer  # a2a
+                + comp.wire_bytes(chunk // n_outer) * (n_outer - 1))  # ag
+    return n_inner * per_rank
+
+
+def flat_cross_pod_bytes(d: int, n_inner: int, n_outer: int, comp) -> int:
+    """Per-POD bytes the flat schedule pushes over the DCI: every one of
+    the pod's n_inner ranks exchanges with the other pods' share of the
+    flat group ((n_out-1)/n_out of its a2a+ag traffic)."""
+    if n_outer <= 1:
+        return 0
+    n = n_inner * n_outer
+    per_rank = (comp.wire_bytes(d) * (n - 1) // n          # a2a send
+                + comp.wire_bytes(d // n) * (n - 1))       # ag send
+    cross_frac = (n_outer - 1) / n_outer
+    return int(n_inner * per_rank * cross_frac)
 
 
 def endtoend_volume_ratio(warmup_ratio: float, compression: float = 32.0):
@@ -72,10 +114,16 @@ def run(verbose: bool = True):
     results = {}
     vols = volume_for(d)
     b_id = vols["identity"]["bytes"]
-    b_1b = vols["onebit"]["bytes"]
-    ratio = b_id / b_1b
     results["uncompressed_bytes_per_dev"] = int(b_id)
-    results["onebit_bytes_per_dev"] = int(b_1b)
+    # per-compressor: compiled bytes + the registry's analytic wire bytes
+    for kind in list_compressors():
+        comp = get_compressor(kind, block_size=4096)
+        b = vols[kind]["bytes"]
+        results[f"{kind}_bytes_per_dev"] = int(b)
+        results[f"{kind}_compression_x"] = round(b_id / max(b, 1), 2)
+        results[f"{kind}_analytic_payload_ratio"] = round(
+            4 * d / comp.wire_bytes(d), 2)
+    ratio = b_id / vols["onebit"]["bytes"]
     results["wire_compression_x"] = round(ratio, 2)
     # paper's end-to-end claim with BERT-Large warmup ratio 23K/152K
     w = 23_000 / 152_000
@@ -83,16 +131,29 @@ def run(verbose: bool = True):
         endtoend_volume_ratio(w, 16.0), 2)   # paper computes ~5x with 1/16
     results["our_endtoend_volume_x_fp32"] = round(
         endtoend_volume_ratio(w, ratio), 2)
-    # analytic wire bytes cross-check
-    cfg = CompressionConfig(block_size=4096)
-    results["analytic_payload_ratio"] = round(4 * d / wire_bytes(d, cfg), 2)
+    # hierarchical schedule: cross-pod (DCI) accounting, 2 pods x 4 ranks
+    # (per-pod on both sides; topk is excluded from hier at runtime —
+    # its analytic row is what the EF-free legs WOULD cost)
+    n_inner, n_outer = 4, 2
+    for kind in list_compressors():
+        comp = get_compressor(kind, block_size=4096)
+        hier = hier_cross_pod_bytes(d, n_inner, n_outer, comp)
+        flat = flat_cross_pod_bytes(d, n_inner, n_outer, comp)
+        results[f"hier_cross_pod_bytes_{kind}"] = hier
+        results[f"flat_cross_pod_bytes_{kind}"] = flat
+        results[f"hier_dci_reduction_x_{kind}"] = round(
+            flat / max(hier, 1), 2)
     if verbose:
         print("== comm_volume (Fig. 3 / Sec. 6) ==")
         for k, v in results.items():
             print(f"  {k}: {v}")
         ok = ratio > 10.0
+        ok_hier = results["hier_dci_reduction_x_onebit"] > n_inner * 0.5
         print(f"  [{'PASS' if ok else 'FAIL'}] compiled wire compression "
               f"{ratio:.1f}x > 10x")
+        print(f"  [{'PASS' if ok_hier else 'FAIL'}] hierarchical schedule "
+              f"cuts cross-pod bytes "
+              f"{results['hier_dci_reduction_x_onebit']}x")
     return results
 
 

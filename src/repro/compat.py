@@ -1,0 +1,58 @@
+"""Version-compat shims for the JAX API surface this repo targets.
+
+The codebase is written against the current JAX API (``jax.shard_map`` with
+``check_vma=``, ``jax.make_mesh(..., axis_types=...)``,
+``jax.sharding.AxisType``).  Older installs (e.g. 0.4.x) ship the same
+functionality under earlier names (``jax.experimental.shard_map`` with
+``check_rep=``, no axis types).  Everything that varies by version funnels
+through here so the rest of the repo can use one spelling.
+
+Importing :mod:`repro` installs ``jax.shard_map`` when it is missing, so
+test snippets written against the new spelling run unmodified.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # new API (jax >= 0.5-era): axis types exist
+    from jax.sharding import AxisType  # type: ignore
+    HAS_AXIS_TYPES = True
+except ImportError:  # pragma: no cover - exercised on old-JAX environments
+    AxisType = None
+    HAS_AXIS_TYPES = False
+
+_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any JAX version.
+
+    ``check_vma`` (new name) and ``check_rep`` (old name) toggle the same
+    replication/varying-manual-axes check; we forward to whichever kwarg
+    the installed version understands.
+    """
+    if _NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    shape, axes = tuple(shape), tuple(axes)
+    if HAS_AXIS_TYPES:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def install():
+    """Expose the new-API names on ``jax`` itself when absent.
+
+    Keeps code (and the in-repo test oracles) written as
+    ``jax.shard_map(..., check_vma=False)`` working on old installs.
+    """
+    if not _NEW_SHARD_MAP:
+        jax.shard_map = shard_map

@@ -1,6 +1,8 @@
 """Architecture registry: ``get_config(name)`` / ``list_archs()``."""
-from repro.configs.base import (ArchConfig, InputShape, SHAPES, get_config,
-                                input_specs, list_archs, register)  # noqa: F401
+from repro.configs.base import (ArchConfig, InputShape, OptimSpec, SHAPES,  # noqa: F401
+                                get_config, get_optim_recipe, input_specs,
+                                list_archs, list_optim_recipes, register,
+                                register_optim_recipe)
 
 # import for registration side-effects
 from repro.configs import (bert_large, deepseek_7b, falcon_mamba_7b,  # noqa

@@ -165,6 +165,68 @@ class ArchConfig:
         )
 
 
+@dataclasses.dataclass(frozen=True)
+class OptimSpec:
+    """Named training recipe: which ``repro.optim`` optimizer/compressor/
+    switch policy to run, selected by config name instead of code edits.
+
+    ``optimizer`` / ``compressor`` are registry names
+    (``repro.optim.list_optimizers()`` / ``list_compressors()``);
+    ``switch_mode`` is "steps" (manual T_w) or "auto" (the paper's
+    Sec. 7.1 variance-ratio freeze rule).
+    """
+
+    name: str = "onebit_adam"
+    optimizer: str = "onebit_adam"
+    compressor: str = "onebit"
+    block_size: int = 4096
+    switch_mode: str = "steps"           # "steps" | "auto"
+    var_freeze_threshold: float = 0.96   # auto-mode ratio threshold
+    optimizer_kwargs: Optional[dict] = None
+    compressor_kwargs: Optional[dict] = None
+
+
+_OPTIM_RECIPES: Dict[str, OptimSpec] = {}
+
+
+def register_optim_recipe(spec: OptimSpec) -> OptimSpec:
+    _OPTIM_RECIPES[spec.name] = spec
+    return spec
+
+
+def get_optim_recipe(name: str) -> OptimSpec:
+    if name not in _OPTIM_RECIPES:
+        raise KeyError(f"unknown optim recipe {name!r}; "
+                       f"registered: {sorted(_OPTIM_RECIPES)}")
+    return _OPTIM_RECIPES[name]
+
+
+def list_optim_recipes():
+    return sorted(_OPTIM_RECIPES)
+
+
+# the shipped recipes: one per registered optimizer, plus the paper's
+# ablations (32-bit identity schedule, EF top-k) and the auto-warmup rule
+for _spec in (
+    OptimSpec(name="onebit_adam"),
+    OptimSpec(name="onebit_adam_auto", switch_mode="auto"),
+    OptimSpec(name="onebit_adam_32bit", compressor="identity"),
+    OptimSpec(name="onebit_adam_topk", compressor="topk"),
+    OptimSpec(name="zerone_adam", optimizer="zerone_adam",
+              optimizer_kwargs={"var_update_interval": 16,
+                                "var_freeze_step": 1000,
+                                "sync_double_every": 0}),
+    OptimSpec(name="zerone_adam_local", optimizer="zerone_adam",
+              optimizer_kwargs={"var_update_interval": 16,
+                                "var_freeze_step": 1000,
+                                "sync_base_interval": 1,
+                                "sync_double_every": 64,
+                                "sync_max_interval": 4}),
+    OptimSpec(name="onebit_lamb", optimizer="onebit_lamb"),
+):
+    register_optim_recipe(_spec)
+
+
 _REGISTRY: Dict[str, ArchConfig] = {}
 
 

@@ -1,4 +1,5 @@
-"""Collectives for 1-bit Adam: the paper's ``compressed_allreduce``.
+"""Collectives for the compressed-optimizer family: the paper's
+``compressed_allreduce``, generalised over pluggable compressors.
 
 All functions here are meant to be called *inside* a ``shard_map`` body.
 ``axis_names`` is the tuple of mesh axes forming the data-parallel
@@ -7,14 +8,22 @@ super-axis (e.g. ``("data",)`` single-pod, ``("pod", "data")`` multi-pod).
 The schedule is the paper's Figure 3, mapped onto TPU-native collectives:
 
   1. worker EF-compress of the local momentum        (Alg. 1 line 7)
-  2. ``all_to_all`` of packed 1-bit chunks           (Fig. 3a — MPI_Alltoall)
+  2. ``all_to_all`` of the packed payload chunks     (Fig. 3a — MPI_Alltoall)
   3. local average of the received chunks            (Fig. 3b)
   4. server EF-compress of the averaged chunk        (Alg. 1 line 10)
   5. ``all_gather`` of the packed result             (Fig. 3c — MPI_Allgather)
 
-Each rank plays "server" for its own chunk, exactly as in the paper. The
-bytes that cross the interconnect are the packed uint8 bitmaps + per-block
-scales, so the compiled HLO genuinely moves ~1/32 of the float32 volume.
+Each rank plays "server" for its own chunk, exactly as in the paper.
+
+The schedule never inspects the payload: a compressor hands back a tuple
+of element-ordered wire arrays (see ``repro.optim.compressors``), each of
+which is chunked, exchanged, and re-assembled independently.  The bytes
+that cross the interconnect are the compressor's real wire format, so the
+compiled HLO genuinely moves the compressed volume (~1/32 of float32 for
+1-bit at the default block size).
+
+``cfg`` may be a :class:`repro.optim.compressors.Compressor` or a legacy
+:class:`repro.core.compression.CompressionConfig` (adapted on the fly).
 """
 from __future__ import annotations
 
@@ -23,10 +32,14 @@ from typing import Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import (CompressionConfig, ef_compress,
-                                    ef_decompress)
-
 AxisNames = Tuple[str, ...]
+
+
+def _as_compressor(cfg):
+    if hasattr(cfg, "ef_compress") and hasattr(cfg, "decompress"):
+        return cfg
+    from repro.optim.compressors import as_compressor  # lazy: no cycle
+    return as_compressor(cfg)
 
 
 def axis_size(axis_names: Sequence[str]) -> int:
@@ -42,69 +55,63 @@ def allreduce_mean(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
     return jax.lax.pmean(x, tuple(axis_names))
 
 
+def _exchange_mean(payload, axes: AxisNames, n: int, comp) -> jax.Array:
+    """Fig. 3a+3b: chunk-exchange every payload leaf, decompress each
+    received chunk, average. Returns this rank's (d/n,) server chunk."""
+    recv = [jax.lax.all_to_all(p.reshape(n, -1), axes, split_axis=0,
+                               concat_axis=0, tiled=False) for p in payload]
+    vals = jax.vmap(lambda *leaves: comp.decompress(tuple(leaves)))(*recv)
+    return jnp.mean(vals, axis=0)
+
+
+def _gather_decompress(payload, axes: AxisNames, comp) -> jax.Array:
+    """Fig. 3c: all_gather every payload leaf, decompress the full vector."""
+    out = tuple(jax.lax.all_gather(p, axes, tiled=True) for p in payload)
+    return comp.decompress(out)
+
+
 def compressed_allreduce(
     x: jax.Array,
     worker_err: jax.Array,
     server_err: jax.Array,
     axis_names: Sequence[str],
-    cfg: CompressionConfig,
+    cfg,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Error-compensated 1-bit allreduce (Alg. 1 lines 7-11 / Fig. 3).
+    """Error-compensated compressed allreduce (Alg. 1 lines 7-11 / Fig. 3).
 
     Args:
       x:          (D,) float32 local value (momentum), D % (n*block) == 0.
       worker_err: (D,) float32 per-worker compression error (delta^(i)).
       server_err: (D/n,) float32 this rank's server-chunk error (delta-bar).
       axis_names: dp mesh axes.
-      cfg:        compression config.
+      cfg:        a Compressor or legacy CompressionConfig.
 
     Returns (averaged (D,) replicated over dp, new worker_err, new server_err).
     """
+    comp = _as_compressor(cfg)
     axes = tuple(axis_names)
     n = axis_size(axes)
     d = x.shape[0]
     assert d % n == 0, (d, n)
 
     # --- worker side -------------------------------------------------------
-    payload, new_worker_err = ef_compress(x, worker_err, cfg)
+    payload, new_worker_err = comp.ef_compress(x, worker_err)
 
     if not axes:
         # single-device degenerate case: server stage still runs (Alg. 1
         # line 10 with n=1) so the numerics match the distributed path.
-        buf = ef_decompress(payload, cfg)
-        (s_payload), new_server_err = ef_compress(buf + 0.0, server_err, cfg)
-        return ef_decompress(s_payload, cfg), new_worker_err, new_server_err
+        buf = comp.decompress(payload)
+        s_payload, new_server_err = comp.ef_compress(buf + 0.0, server_err)
+        return comp.decompress(s_payload), new_worker_err, new_server_err
 
-    if cfg.kind == "identity":
-        buf = payload[0]
-        # identical schedule, uncompressed payload (the "32-bits" ablation)
-        chunks = buf.reshape(n, d // n)
-        recv = jax.lax.all_to_all(chunks, axes, split_axis=0, concat_axis=0,
-                                  tiled=False)
-        avg = jnp.mean(recv, axis=0)
-        sbuf = avg + server_err
-        new_server_err = jnp.zeros_like(server_err)
-        out = jax.lax.all_gather(sbuf, axes, tiled=True)
-        return out, new_worker_err, new_server_err
-
-    packed, scales = payload
-    # --- exchange: rank j receives everyone's chunk j ----------------------
-    pk = jax.lax.all_to_all(packed.reshape(n, -1), axes, split_axis=0,
-                            concat_axis=0, tiled=False)        # (n, d/8n) u8
-    sc = jax.lax.all_to_all(scales.reshape(n, -1), axes, split_axis=0,
-                            concat_axis=0, tiled=False)        # (n, d/bn) f32
-
-    # --- average step (Fig. 3b) --------------------------------------------
-    vals = jax.vmap(lambda p, s: ef_decompress((p, s), cfg))(pk, sc)  # (n, d/n)
-    avg = jnp.mean(vals, axis=0)
+    # --- exchange + average (Fig. 3a/3b): rank j serves chunk j ------------
+    avg = _exchange_mean(payload, axes, n, comp)
 
     # --- server-side EF compress (Alg. 1 line 10) ---------------------------
-    (s_packed, s_scales), new_server_err = ef_compress(avg, server_err, cfg)
+    s_payload, new_server_err = comp.ef_compress(avg, server_err)
 
     # --- all-gather the compressed result (Fig. 3c) -------------------------
-    out_packed = jax.lax.all_gather(s_packed, axes, tiled=True)
-    out_scales = jax.lax.all_gather(s_scales, axes, tiled=True)
-    out = ef_decompress((out_packed, out_scales), cfg)
+    out = _gather_decompress(s_payload, axes, comp)
     return out, new_worker_err, new_server_err
 
 
@@ -114,54 +121,62 @@ def compressed_allreduce_hierarchical(
     server_err: jax.Array,
     inner_axes: Sequence[str],
     outer_axes: Sequence[str],
-    cfg: CompressionConfig,
+    cfg,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Beyond-paper: two-level compressed allreduce (intra-pod then
-    cross-pod).
+    cross-pod), with the cross-pod hop at SERVER-CHUNK granularity.
 
-    Stage 1 runs the paper's schedule over the fast intra-pod ``inner_axes``
-    (ICI). Stage 2 re-reduces the stage-1 result over the slow cross-pod
-    ``outer_axes`` (DCI) with its own EF state folded into ``server_err``.
-    Crossing the DCI only once per step with an n_outer-way exchange of the
-    already-compressed average cuts cross-pod bytes by ~n_inner×.
+    Stage 1a runs the paper's worker compress + all_to_all + average over
+    the fast intra-pod ``inner_axes`` (ICI), leaving each rank holding its
+    (D/n_inner,) server chunk.  Stage 2 re-reduces THAT CHUNK over the
+    slow cross-pod ``outer_axes`` (DCI) — both legs carry the compressed
+    wire format, and because only chunk-sized payloads cross the DCI the
+    per-pod cross-pod bytes shrink by ~n_inner× versus the flat schedule
+    (an outer exchange of the full vector on every inner rank would move
+    just as many DCI bytes as the flat schedule — measured in
+    benchmarks/comm_volume.py).  Stage 1b then server-EF-compresses the
+    pod-mean chunk and all_gathers it within the pod (ICI, cheap).
 
-    server_err is split: first D/n_inner entries are the stage-1 server
-    error; we reuse the same buffer layout by carrying the stage-2 error in
-    worker_err's role for the outer reduce. For simplicity the outer stage
-    uses independent EF slices packed into server_err:
-      server_err = concat(stage1 (D/n_in,), stage2_worker (D,)) is avoided —
-    instead we accept slightly stale outer error by using zero outer server
-    error (outer n is tiny, e.g. 2, so the residual is bounded by eps/n_out).
+    The outer stage is EF-free: its residual is O(eps/n_pods) and does
+    not accumulate, because stage-1 EF sees the final value through the
+    next step's momentum.  That argument only holds for DENSE compressors
+    (1-bit quantises every coordinate); a sparse compressor (topk) would
+    systematically zero sub-threshold coordinates on the un-compensated
+    outer legs, so sparse + hierarchical is rejected until the outer hop
+    carries its own EF state (see ROADMAP).
     """
+    comp = _as_compressor(cfg)
     axes_in = tuple(inner_axes)
     axes_out = tuple(outer_axes)
-    # Stage 1: paper's schedule within the pod.
-    avg_in, new_worker_err, new_server_err = compressed_allreduce(
-        x, worker_err, server_err, axes_in, cfg)
-    # Stage 2: cross-pod mean of the (already compressed+decompressed)
-    # intra-pod averages. n_outer is small (#pods); we compress the DCI hop
-    # too, EF-free (error is O(eps/n_pods) and does not accumulate because
-    # stage-1 EF sees the final value through the next step's momentum).
-    if cfg.kind == "identity":
-        out = jax.lax.pmean(avg_in, axes_out)
-        return out, new_worker_err, new_server_err
-    from repro.core.compression import compress_onebit, decompress_onebit
+    if not axes_out:
+        return compressed_allreduce(x, worker_err, server_err, axes_in,
+                                    comp)
+    assert comp.lossless or comp.dense, \
+        ("hierarchical topology needs a dense (or lossless) compressor: "
+         "the EF-free cross-pod legs would permanently drop the sparse "
+         f"residual of {type(comp).__name__}")
+
+    n_in = axis_size(axes_in)
     n_out = axis_size(axes_out)
-    d = x.shape[0]
-    # BOTH outer legs are 1-bit: compress the pod-average before the
-    # cross-pod (DCI) all_to_all — shipping f32 across the slow hop would
-    # forfeit the whole point (found via the dry-run collective table:
-    # the uncompressed leg showed up as D*4 bytes of all-to-all).
-    pk, sc = compress_onebit(avg_in, cfg.block_size, cfg.use_kernel)
-    pk_r = jax.lax.all_to_all(pk.reshape(n_out, -1), axes_out,
-                              split_axis=0, concat_axis=0, tiled=False)
-    sc_r = jax.lax.all_to_all(sc.reshape(n_out, -1), axes_out,
-                              split_axis=0, concat_axis=0, tiled=False)
-    vals = jax.vmap(lambda p, s: decompress_onebit(
-        p, s, cfg.block_size, cfg.use_kernel))(pk_r, sc_r)  # (n_out, d/n_out)
-    avg_out = jnp.mean(vals, axis=0)
-    pk2, sc2 = compress_onebit(avg_out, cfg.block_size, cfg.use_kernel)
-    out_pk = jax.lax.all_gather(pk2, axes_out, tiled=True)
-    out_sc = jax.lax.all_gather(sc2, axes_out, tiled=True)
-    out = decompress_onebit(out_pk, out_sc, cfg.block_size, cfg.use_kernel)
+
+    # --- stage 1a: worker EF-compress + intra-pod exchange -> my chunk ---
+    payload, new_worker_err = comp.ef_compress(x, worker_err)
+    if axes_in:
+        chunk = _exchange_mean(payload, axes_in, n_in, comp)   # (D/n_in,)
+    else:
+        chunk = comp.decompress(payload)
+
+    # --- stage 2: cross-pod mean of the chunk (compressed both DCI legs) --
+    if comp.lossless:
+        chunk = jax.lax.pmean(chunk, axes_out)
+    else:
+        sub = _exchange_mean(comp.compress(chunk), axes_out, n_out, comp)
+        chunk = _gather_decompress(comp.compress(sub), axes_out, comp)
+
+    # --- stage 1b: server EF-compress + intra-pod all_gather -------------
+    s_payload, new_server_err = comp.ef_compress(chunk, server_err)
+    if axes_in:
+        out = _gather_decompress(s_payload, axes_in, comp)
+    else:
+        out = comp.decompress(s_payload)
     return out, new_worker_err, new_server_err

@@ -10,21 +10,18 @@ touches jax device state (device count is locked at first use).
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    """Small helper for tests/examples (explicit Auto axis types)."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    """Small helper for tests/examples (Auto axis types where supported)."""
+    return compat.make_mesh(shape, axes)
 
 
 # hardware constants (TPU v5e)

@@ -1,9 +1,19 @@
-"""Training driver: 2-stage 1-bit Adam with auto-warmup, checkpointing,
-and LR schedule. Runs on whatever devices exist (CPU smoke -> TPU pod).
+"""Training driver: two-stage compressed optimizers with auto-warmup,
+checkpointing, and LR schedule. Runs on whatever devices exist (CPU smoke
+-> TPU pod).
+
+The optimizer, compressor, and warmup→compression switch policy are all
+selected by name: either a registered recipe (``--recipe``, see
+``repro.configs.base.list_optim_recipes``) or explicit ``--optimizer`` /
+``--compressor`` registry names. The driver owns only host-side policy —
+which stage to run, and (for 0/1 Adam) whether this step synchronises —
+and picks the matching jitted step from a small cache.
 
 Usage (CPU-scale example — see examples/ for ready-made invocations):
   PYTHONPATH=src python -m repro.launch.train --arch bert-base-smoke \\
       --steps 200 --batch 8 --seq 128 --mesh 1x1 --lr 1e-3 --warmup-steps 40
+  PYTHONPATH=src python -m repro.launch.train --recipe onebit_lamb ...
+  PYTHONPATH=src python -m repro.launch.train --recipe zerone_adam_local ...
 """
 from __future__ import annotations
 
@@ -17,14 +27,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import load_pytree, save_pytree
-from repro.configs import SHAPES, get_config, list_archs
+from repro.configs import (SHAPES, get_config, get_optim_recipe, list_archs,
+                           list_optim_recipes)
 from repro.configs.base import InputShape
-from repro.core import onebit_adam as OB
-from repro.core.compression import CompressionConfig
-from repro.core.variance import VarianceMonitor
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
+from repro.optim import WarmupSwitch, list_compressors, list_optimizers
 from repro.train.step import (TrainStepConfig, init_opt_state,
                               make_train_step, mesh_axes)
 
@@ -42,7 +51,9 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         warmup_steps: Optional[int] = None, block_size: int = 4096,
         auto_warmup: bool = False, seed: int = 0, log_every: int = 10,
         ckpt: Optional[str] = None, resume: Optional[str] = None,
-        stage_override: Optional[str] = None, log_file: Optional[str] = None):
+        stage_override: Optional[str] = None, log_file: Optional[str] = None,
+        recipe: str = "onebit_adam", optimizer: Optional[str] = None,
+        compressor: Optional[str] = None, topology: str = "flat"):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -55,11 +66,27 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
     shape = InputShape("custom", seq, batch, "train")
     stream = SyntheticStream(cfg, shape, seed=seed)
 
-    comp = CompressionConfig(block_size=block_size)
-    ocfg = OB.OneBitAdamConfig(compression=comp)
+    # --- resolve the recipe -> TrainStepConfig -----------------------------
+    spec = get_optim_recipe(recipe)
+    if optimizer:
+        spec = dataclasses.replace(spec, optimizer=optimizer)
+    if compressor:
+        spec = dataclasses.replace(spec, compressor=compressor)
+    spec = dataclasses.replace(spec, block_size=block_size)
+    if stage_override == "compressed_hier":
+        topology, stage_override = "hier", "compressed"
+    base_tsc = TrainStepConfig(
+        optimizer=spec.optimizer, compressor=spec.compressor,
+        block_size=spec.block_size, opt_kwargs=spec.optimizer_kwargs,
+        comp_kwargs=spec.compressor_kwargs, topology=topology)
+    optim = base_tsc.build_optimizer()
+    layout = "local" if optim.may_skip_sync else "replicated"
+    base_tsc = dataclasses.replace(base_tsc, layout=layout)
+
     key = jax.random.PRNGKey(seed)
     params = T.init_params(cfg, key, tp=tp)
-    opt = init_opt_state(cfg, mesh, block=block_size)
+    opt = init_opt_state(cfg, mesh, block=block_size, layout=layout,
+                         hierarchical=(topology == "hier"))
     start_step = 0
     if resume:
         (params, opt), start_step = load_pytree(resume, (params, opt))
@@ -67,39 +94,57 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
 
     steps_fns = {}
 
-    def get_step(stage):
-        if stage not in steps_fns:
-            steps_fns[stage] = make_train_step(
-                cfg, mesh, TrainStepConfig(opt=ocfg, stage=stage),
+    def get_step(stage: str, sync: bool = True):
+        key = (stage, sync)
+        if key not in steps_fns:
+            steps_fns[key] = make_train_step(
+                cfg, mesh,
+                dataclasses.replace(base_tsc, stage=stage, sync=sync),
                 donate=False)
-        return steps_fns[stage]
+        return steps_fns[key]
 
-    monitor = VarianceMonitor(b2=ocfg.b2, threshold=ocfg.var_freeze_threshold,
-                              lr_warmup_steps=lr_warmup)
-    frozen = False
+    # manual T_w when given (and not auto); otherwise the paper's Sec. 7.1
+    # variance-ratio rule
+    manual = warmup_steps is not None and not auto_warmup \
+        and spec.switch_mode != "auto"
+    switch = WarmupSwitch(
+        mode="steps" if manual else "auto",
+        warmup_steps=warmup_steps if warmup_steps is not None else 0,
+        b2=optim.b2, threshold=spec.var_freeze_threshold,
+        lr_warmup_steps=lr_warmup)
+    was_compressed = False
+    comp_step = 0  # compression-stage step index (drives sync_due)
     history = []
     t_start = time.time()
     for step in range(start_step, steps):
         if stage_override:
-            stage = stage_override
-        elif warmup_steps is not None and not auto_warmup:
-            stage = "warmup" if step < warmup_steps else "compressed"
+            stage, sync = stage_override, True
         else:
-            stage = "compressed" if frozen else "warmup"
+            compressed = switch.compressed(step)
+            if compressed and not was_compressed:
+                if switch.mode == "auto":
+                    print(f"[auto-warmup] variance frozen at step {step} "
+                          f"(ratio {switch.ratio:.4f})"
+                          if switch.ratio is not None else
+                          f"[auto-warmup] variance frozen at step {step}")
+                was_compressed = True
+            stage = "compressed" if compressed else "warmup"
+            sync = optim.sync_due(comp_step) if compressed else True
+            if compressed:
+                comp_step += 1
         batch_data = stream.batch_at(step)
         lr = jnp.float32(lr_schedule(step, base_lr, lr_warmup))
-        params, opt, metrics = get_step(stage)(params, opt, batch_data, lr)
-        if auto_warmup and not frozen:
-            frozen = monitor.observe(step, float(metrics["v_l1"]))
-            if frozen:
-                print(f"[auto-warmup] variance frozen at step {step} "
-                      f"(ratio {monitor.ratio:.4f})")
-        rec = {"step": step, "stage": stage,
+        params, opt, metrics = get_step(stage, sync)(params, opt,
+                                                     batch_data, lr)
+        switch.observe(step, {k: float(v) for k, v in metrics.items()})
+        rec = {"step": step, "stage": stage, "sync": sync,
+               "optimizer": optim.name,
                **{k: float(v) for k, v in metrics.items()}}
         history.append(rec)
         if step % log_every == 0 or step == steps - 1:
             dt = time.time() - t_start
-            print(f"step {step:5d} [{stage:10s}] loss {rec['loss']:.4f} "
+            print(f"step {step:5d} [{stage:10s}{'' if sync else ' local'}] "
+                  f"loss {rec['loss']:.4f} "
                   f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
                   f"({dt:.1f}s)")
         if ckpt and (step + 1) % 100 == 0:
@@ -123,9 +168,21 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--lr-warmup", type=int, default=20)
     ap.add_argument("--warmup-steps", type=int, default=None,
-                    help="1-bit Adam warmup steps (manual T_w)")
+                    help="compressed-optimizer warmup steps (manual T_w)")
     ap.add_argument("--auto-warmup", action="store_true",
                     help="use the variance-ratio rule to pick T_w")
+    ap.add_argument("--recipe", default="onebit_adam",
+                    choices=list_optim_recipes(),
+                    help="named optimizer recipe (configs.base)")
+    ap.add_argument("--optimizer", default=None,
+                    choices=[None] + list_optimizers(),
+                    help="override the recipe's optimizer")
+    ap.add_argument("--compressor", default=None,
+                    choices=[None] + list_compressors(),
+                    help="override the recipe's compressor")
+    ap.add_argument("--topology", default="flat",
+                    choices=["flat", "hier"],
+                    help="hier = two-level cross-pod compressed allreduce")
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -140,7 +197,9 @@ def main(argv=None):
         warmup_steps=args.warmup_steps, auto_warmup=args.auto_warmup,
         block_size=args.block_size, seed=args.seed, ckpt=args.ckpt,
         resume=args.resume, stage_override=args.stage,
-        log_file=args.log_file)
+        log_file=args.log_file, recipe=args.recipe,
+        optimizer=args.optimizer, compressor=args.compressor,
+        topology=args.topology)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,38 @@
+"""repro.optim — pluggable compression-optimizer subsystem.
+
+Two registries:
+  * compressors: ``get_compressor(name)`` — ``onebit``, ``identity``,
+    ``topk`` (add one by subclassing :class:`Compressor` and calling
+    ``register_compressor``);
+  * optimizers: ``get_optimizer(name, compressor=...)`` —
+    ``onebit_adam``, ``zerone_adam``, ``onebit_lamb`` (add one by
+    subclassing :class:`TwoStageOptimizer`, overriding the hooks, and
+    calling ``register_optimizer``).
+
+Plus the shared :class:`WarmupSwitch` stage policy (manual step count or
+the paper's Sec. 7.1 variance-ratio auto-freeze).
+"""
+from repro.optim.base import (OptState, SegmentInfo, TwoStageOptimizer,
+                              ZeroOptState, get_optimizer, list_optimizers,
+                              register_optimizer, segment_norms,
+                              segments_of)
+from repro.optim.compressors import (Compressor, IdentityCompressor,
+                                     OneBitCompressor, TopKCompressor,
+                                     as_compressor, from_config,
+                                     get_compressor, list_compressors,
+                                     register_compressor)
+from repro.optim.switch import WarmupSwitch
+
+# registration side-effects
+from repro.optim import onebit_adam as _onebit_adam    # noqa: F401
+from repro.optim import onebit_lamb as _onebit_lamb    # noqa: F401
+from repro.optim import zerone_adam as _zerone_adam    # noqa: F401
+
+__all__ = [
+    "Compressor", "IdentityCompressor", "OneBitCompressor",
+    "TopKCompressor", "OptState", "SegmentInfo", "TwoStageOptimizer",
+    "WarmupSwitch", "ZeroOptState", "as_compressor", "from_config",
+    "get_compressor", "get_optimizer", "list_compressors",
+    "list_optimizers", "register_compressor", "register_optimizer",
+    "segment_norms", "segments_of",
+]

@@ -1,0 +1,403 @@
+"""Two-stage compressed-optimizer interface and registry.
+
+Every optimizer in the family (1-bit Adam, 0/1 Adam, 1-bit LAMB, ...)
+shares one shape of algorithm:
+
+  * **warmup stage** — an uncompressed adaptive step on the dp-mean
+    gradient while the second moment ``v`` is tracked;
+  * **compression stage** — ``v`` (effectively) frozen, local momentum
+    reduced across dp via the error-compensated compressed allreduce, the
+    model updated by preconditioned momentum SGD.
+
+The base class implements that skeleton once — including the ZeRO-1
+(dp-sharded state) layout and the hierarchical (two-level) topology —
+and exposes four small hooks where the algorithms differ:
+
+  ``_update_v``        variance behaviour in the compression stage
+                       (frozen by default; 0/1 Adam updates on a schedule)
+  ``_update_scale``    per-segment scaling state (1-bit LAMB freezes the
+                       layerwise trust ratios here)
+  ``_scale_per_elem``  how the scaling state multiplies the update
+  ``_warmup_direction``direction shaping in warmup (LAMB trust ratio)
+
+plus one host-side hook, ``sync_due(step)``, for optimizers that skip
+synchronisation entirely on some steps (0/1 Adam's "0-bit" local steps).
+
+State is flat and shard_map-friendly, exactly as in
+:mod:`repro.core.onebit_adam`; per-layer information travels as a
+:class:`SegmentInfo` (the ``ravel_pytree`` leaf boundaries), so layerwise
+optimizers work on the same flat vectors as elementwise ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm
+from repro.optim.compressors import Compressor, OneBitCompressor
+
+
+class OptState(NamedTuple):
+    """Replicated-layout optimizer state (per model-shard flat views)."""
+    m: jax.Array           # (D,)   f32 momentum
+    v: jax.Array           # (D,)   f32 second moment
+    worker_err: jax.Array  # (D,)   f32 per-dp-rank worker EF error
+    server_err: jax.Array  # (D/n,) f32 per-dp-rank server-chunk error
+    scale: jax.Array       # (S,)   f32 per-segment state (LAMB ratios)
+    count: jax.Array       # ()     i32
+    v_step: jax.Array      # ()     i32 count at last variance update
+    #                        (0/1 Adam's interval bookkeeping; 0 = never)
+
+
+class ZeroOptState(NamedTuple):
+    """ZeRO-1 layout: ``v`` and the f32 master weights dp-sharded."""
+    m: jax.Array             # (D,)   f32 (Alg. 1 needs the full momentum)
+    v_shard: jax.Array       # (D/n,) f32
+    master_shard: jax.Array  # (D/n,) f32
+    worker_err: jax.Array    # (D,)   f32
+    server_err: jax.Array    # (D/n,) f32
+    scale: jax.Array         # (S,)   f32
+    count: jax.Array         # ()     i32
+    v_step: jax.Array        # ()     i32
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentInfo:
+    """Per-layer segment boundaries of the flat parameter vector.
+
+    ``sizes`` are the ``ravel_pytree`` leaf sizes in flattening order; the
+    final entry is the zero-padding tail (its own segment so layerwise
+    statistics never mix with padding).
+    """
+
+    sizes: Tuple[int, ...]
+
+    @property
+    def n(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def d(self) -> int:
+        return sum(self.sizes)
+
+    def ids(self) -> jax.Array:
+        # the np array is cached; the jnp lift happens per-trace (a cached
+        # device array would leak tracers across jit traces)
+        return jnp.asarray(_segment_ids_np(self.sizes))
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_ids_np(sizes: Tuple[int, ...]) -> np.ndarray:
+    return np.repeat(np.arange(len(sizes), dtype=np.int32), sizes)
+
+
+def segments_of(tree, d_pad: Optional[int] = None) -> SegmentInfo:
+    """SegmentInfo for a (per-rank) parameter pytree, with the padding to
+    ``d_pad`` appended as a trailing segment."""
+    sizes = [int(np.prod(l.shape)) for l in jax.tree.leaves(tree)]
+    d = sum(sizes)
+    if d_pad is not None and d_pad > d:
+        sizes.append(d_pad - d)
+    return SegmentInfo(tuple(sizes))
+
+
+def segment_norms(x: jax.Array, seg_ids: jax.Array, n_segments: int,
+                  axes: Sequence[str] = ()) -> jax.Array:
+    """Per-segment L2 norms of a flat (possibly sharded) vector; squared
+    sums are psummed over ``axes`` before the sqrt so sharded layouts get
+    the global norm."""
+    sq = jax.ops.segment_sum(jnp.square(x), seg_ids,
+                             num_segments=n_segments)
+    if axes:
+        sq = jax.lax.psum(sq, tuple(axes))
+    return jnp.sqrt(sq)
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStageOptimizer:
+    """Base: exactly 1-bit Adam (Alg. 1) unless a hook is overridden."""
+
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    bias_correction: bool = False       # BertAdam disables it (paper setup)
+    compressor: Compressor = OneBitCompressor()
+
+    name: str = "?"
+
+    # --- state ------------------------------------------------------------
+    def init(self, d: int, n_dp: int, n_segments: int = 1) -> OptState:
+        n = max(n_dp, 1)
+        assert d % n == 0, (d, n)
+        z = jnp.zeros
+        return OptState(m=z((d,), jnp.float32), v=z((d,), jnp.float32),
+                        worker_err=z((d,), jnp.float32),
+                        server_err=z((d // n,), jnp.float32),
+                        scale=z((n_segments,), jnp.float32),
+                        count=z((), jnp.int32), v_step=z((), jnp.int32))
+
+    def init_zero1(self, d: int, n_dp: int,
+                   n_segments: int = 1) -> ZeroOptState:
+        n = max(n_dp, 1)
+        assert d % n == 0, (d, n)
+        z = jnp.zeros
+        return ZeroOptState(
+            m=z((d,), jnp.float32), v_shard=z((d // n,), jnp.float32),
+            master_shard=z((d // n,), jnp.float32),
+            worker_err=z((d,), jnp.float32),
+            server_err=z((d // n,), jnp.float32),
+            scale=z((n_segments,), jnp.float32), count=z((), jnp.int32),
+            v_step=z((), jnp.int32))
+
+    # --- hooks (the whole per-algorithm surface) ---------------------------
+    def _update_v(self, v: jax.Array, v_step: jax.Array,
+                  m_prev: jax.Array, m_bar: jax.Array, count: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+        """Compression-stage variance; returns (v, new v_step marker).
+        Default: frozen (Alg. 1). Only called on SYNC steps — any
+        quantity fed into ``v`` must be dp-rank-consistent, or the
+        replicated parameter layout silently diverges."""
+        return v, v_step
+
+    def _update_scale(self, scale: jax.Array, x: jax.Array, upd: jax.Array,
+                      seg_ids_fn: Optional[Callable[[], jax.Array]],
+                      n_segments: int,
+                      norm_axes: Tuple[str, ...]) -> jax.Array:
+        """Per-segment scaling state. Default: untouched.
+
+        ``seg_ids_fn`` lazily yields the per-element segment-id vector —
+        only hooks that call it pay for the (D,) constant."""
+        return scale
+
+    def _scale_per_elem(self, scale: jax.Array,
+                        seg_ids_fn: Optional[Callable[[], jax.Array]]
+                        ) -> Optional[jax.Array]:
+        """Per-element multiplier from the scaling state; None = identity
+        (skipped entirely, keeping the default path bitwise-pristine)."""
+        return None
+
+    def _warmup_direction(self, upd: jax.Array, x: jax.Array,
+                          seg_ids_fn: Optional[Callable[[], jax.Array]],
+                          n_segments: int,
+                          norm_axes: Tuple[str, ...]) -> jax.Array:
+        """Warmup direction shaping. Default: plain Adam direction."""
+        return upd
+
+    def sync_due(self, step: int) -> bool:
+        """Host-side: must step ``step`` of the compression stage
+        synchronise across dp? Default: every step (1-bit Adam)."""
+        return True
+
+    @property
+    def may_skip_sync(self) -> bool:
+        """True if ``sync_due`` can ever return False — drivers must then
+        use the per-dp-rank ("local") state layout."""
+        return False
+
+    # --- warmup stage ------------------------------------------------------
+    def warmup_update(self, g_local: jax.Array, state: OptState,
+                      x: jax.Array, lr: jax.Array, *,
+                      dp_axes: Sequence[str] = (),
+                      tp_axes: Sequence[str] = (),
+                      segs: Optional[SegmentInfo] = None,
+                      ) -> Tuple[jax.Array, OptState, dict]:
+        """Uncompressed adaptive step on the dp-mean gradient."""
+        g = comm.allreduce_mean(g_local, dp_axes)
+        count = state.count + 1
+        m = self.b1 * state.m + (1.0 - self.b1) * g
+        v = self.b2 * state.v + (1.0 - self.b2) * jnp.square(g)
+        if self.bias_correction:
+            t = count.astype(jnp.float32)
+            m_hat = m / (1.0 - self.b1 ** t)
+            v_hat = v / (1.0 - self.b2 ** t)
+        else:
+            m_hat, v_hat = m, v
+        upd = m_hat / (jnp.sqrt(v_hat) + self.eps)
+        if self.weight_decay:
+            upd = upd + self.weight_decay * x
+        seg_ids_fn = segs.ids if segs is not None else None
+        n_seg = segs.n if segs is not None else 1
+        upd = self._warmup_direction(upd, x, seg_ids_fn, n_seg,
+                                     tuple(tp_axes))
+        new_x = x - lr * upd
+        stats = {"v_l1": jnp.sum(jnp.abs(v)),
+                 "grad_norm": jnp.linalg.norm(g)}
+        return new_x, state._replace(m=m, v=v, count=count), stats
+
+    # --- compression stage (replicated layout) -----------------------------
+    def compressed_update(self, g_local: jax.Array, state: OptState,
+                          x: jax.Array, lr: jax.Array, *,
+                          dp_axes: Sequence[str] = (),
+                          pod_axes: Sequence[str] = (),
+                          tp_axes: Sequence[str] = (),
+                          segs: Optional[SegmentInfo] = None,
+                          sync: bool = True,
+                          ) -> Tuple[jax.Array, OptState, dict]:
+        """Compressed (or, with ``sync=False``, purely local) momentum
+        step preconditioned by the (hook-governed) second moment.
+
+        A ``sync=False`` ("0-bit") step moves NO bytes and applies NO
+        model update: the local gradient folds into the per-rank momentum
+        and the update is deferred to the next sync.  Because the dp-mean
+        commutes with the momentum recursion, the next synchronised step
+        applies exactly the dp-mean EMA of every gradient seen since the
+        last sync — local information is never lost, and the parameters
+        stay bitwise identical across dp ranks (which the replicated
+        parameter layout of the shard_map step requires).  The per-rank
+        momentum itself does diverge between syncs, hence the "local"
+        optimizer-state layout requirement (see repro.train.step).
+        """
+        m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
+        if not sync:
+            stats = {
+                "v_l1": jnp.sum(jnp.abs(state.v)),
+                "momentum_norm": jnp.linalg.norm(m_local),
+                "worker_err_norm": jnp.linalg.norm(state.worker_err),
+                "server_err_norm": jnp.linalg.norm(state.server_err),
+            }
+            return x, state._replace(m=m_local, count=state.count + 1), stats
+        if pod_axes:
+            m_bar, w_err, s_err = comm.compressed_allreduce_hierarchical(
+                m_local, state.worker_err, state.server_err,
+                inner_axes=dp_axes, outer_axes=pod_axes,
+                cfg=self.compressor)
+        else:
+            m_bar, w_err, s_err = comm.compressed_allreduce(
+                m_local, state.worker_err, state.server_err,
+                tuple(dp_axes), self.compressor)
+
+        count = state.count + 1
+        v, v_step = self._update_v(state.v, state.v_step, state.m, m_bar,
+                                   count)
+        upd = m_bar / (jnp.sqrt(v) + self.eps)
+        seg_ids_fn = segs.ids if segs is not None else None
+        n_seg = segs.n if segs is not None else 1
+        scale = self._update_scale(state.scale, x, upd, seg_ids_fn, n_seg,
+                                   tuple(tp_axes))
+        pe = self._scale_per_elem(scale, seg_ids_fn)
+        if pe is not None:
+            upd = upd * pe
+        if self.weight_decay:
+            upd = upd + self.weight_decay * x
+        new_x = x - lr * upd
+        stats = {
+            "v_l1": jnp.sum(jnp.abs(v)),
+            "momentum_norm": jnp.linalg.norm(m_bar),
+            "worker_err_norm": jnp.linalg.norm(w_err),
+            "server_err_norm": jnp.linalg.norm(s_err),
+        }
+        new_state = state._replace(m=m_bar, v=v, worker_err=w_err,
+                                   server_err=s_err, scale=scale,
+                                   count=count, v_step=v_step)
+        return new_x, new_state, stats
+
+    # --- compression stage (ZeRO-1 layout) ---------------------------------
+    def zero1_update(self, g_local: jax.Array, state: ZeroOptState,
+                     lr: jax.Array, *,
+                     dp_axes: Sequence[str] = (),
+                     tp_axes: Sequence[str] = (),
+                     segs: Optional[SegmentInfo] = None,
+                     sync: bool = True,
+                     ) -> Tuple[jax.Array, ZeroOptState, dict]:
+        """Same math on the dp-sharded layout. Returns the rebuilt bf16
+        full params (one all_gather), the new state, and stats.
+
+        ``sync=False`` behaves as in :meth:`compressed_update`: momentum
+        accumulates per rank, the master update is deferred."""
+        m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
+        if not sync:
+            if dp_axes:
+                x_full = jax.lax.all_gather(
+                    state.master_shard.astype(jnp.bfloat16),
+                    tuple(dp_axes), tiled=True)
+            else:
+                x_full = state.master_shard.astype(jnp.bfloat16)
+            stats = {"v_l1": jnp.sum(jnp.abs(state.v_shard)),
+                     "momentum_norm": jnp.linalg.norm(m_local)}
+            return x_full, state._replace(m=m_local,
+                                          count=state.count + 1), stats
+        m_bar, w_err, s_err = comm.compressed_allreduce(
+            m_local, state.worker_err, state.server_err,
+            tuple(dp_axes), self.compressor)
+        n = comm.axis_size(dp_axes)
+        d = m_bar.shape[0]
+        chunk = d // max(n, 1)
+        if dp_axes:
+            idx = jax.lax.axis_index(tuple(dp_axes)) * chunk
+        else:
+            idx = 0
+        my_mbar = jax.lax.dynamic_slice(m_bar, (idx,), (chunk,))
+        my_mprev = jax.lax.dynamic_slice(state.m, (idx,), (chunk,))
+        count = state.count + 1
+        v_shard, v_step = self._update_v(state.v_shard, state.v_step,
+                                         my_mprev, my_mbar, count)
+        upd = my_mbar / (jnp.sqrt(v_shard) + self.eps)
+        if segs is not None:
+            seg_ids_fn = lambda: jax.lax.dynamic_slice(  # noqa: E731
+                segs.ids(), (idx,), (chunk,))
+            n_seg = segs.n
+        else:
+            seg_ids_fn, n_seg = None, 1
+        # each rank holds one chunk: segment norms need the dp psum too
+        scale = self._update_scale(state.scale, state.master_shard, upd,
+                                   seg_ids_fn, n_seg,
+                                   tuple(tp_axes) + tuple(dp_axes))
+        pe = self._scale_per_elem(scale, seg_ids_fn)
+        if pe is not None:
+            upd = upd * pe
+        if self.weight_decay:
+            upd = upd + self.weight_decay * state.master_shard
+        new_master = state.master_shard - lr * upd
+        if dp_axes:
+            x_full = jax.lax.all_gather(new_master.astype(jnp.bfloat16),
+                                        tuple(dp_axes), tiled=True)
+        else:
+            x_full = new_master.astype(jnp.bfloat16)
+        stats = {"v_l1": jnp.sum(jnp.abs(v_shard)),
+                 "momentum_norm": jnp.linalg.norm(m_bar)}
+        new_state = state._replace(m=m_bar, v_shard=v_shard,
+                                   master_shard=new_master,
+                                   worker_err=w_err, server_err=s_err,
+                                   scale=scale, count=count,
+                                   v_step=v_step)
+        return x_full, new_state, stats
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_OPTIMIZERS: Dict[str, Callable[..., TwoStageOptimizer]] = {}
+
+
+def register_optimizer(name: str):
+    def deco(cls):
+        _OPTIMIZERS[name] = cls
+        return cls
+    return deco
+
+
+def get_optimizer(name: str, *, compressor="onebit",
+                  compressor_kwargs: Optional[dict] = None,
+                  **hyper) -> TwoStageOptimizer:
+    """Build a registered optimizer, resolving the compressor by name
+    (or accepting a ready :class:`Compressor` / legacy config)."""
+    from repro.optim.compressors import as_compressor, get_compressor
+    if name not in _OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; "
+                       f"registered: {sorted(_OPTIMIZERS)}")
+    if isinstance(compressor, str):
+        comp = get_compressor(compressor, **(compressor_kwargs or {}))
+    else:
+        comp = as_compressor(compressor)
+    return _OPTIMIZERS[name](compressor=comp, **hyper)
+
+
+def list_optimizers():
+    return sorted(_OPTIMIZERS)

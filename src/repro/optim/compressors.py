@@ -1,0 +1,209 @@
+"""Compressor registry: the C_omega operators behind the optimizer family.
+
+A compressor turns a flat float32 vector into a tuple of wire arrays (the
+*payload*) plus, for error-feedback use, the exact residual:
+
+    payload, new_err = comp.ef_compress(x, err)    # compress(x + err)
+    x_hat            = comp.decompress(payload)    # x + err == x_hat + new_err
+
+Payload contract (what lets one collective schedule serve every entry):
+  * ``payload`` is a tuple of arrays, each 1-D and laid out in element
+    order, so that slicing leaf ``p`` into ``n`` equal leading chunks
+    slices the represented vector into its ``n`` contiguous chunks;
+  * every leaf length is divisible by ``n_dp`` whenever the represented
+    length is divisible by ``n_dp * block_size`` (``padded_length``
+    guarantees that for all optimizer state).
+
+``repro.core.comm`` moves payload leaves through all_to_all/all_gather and
+never looks inside them; registering a new compressor here is all it takes
+to run any registered optimizer over it.
+
+Registered entries:
+  ``onebit``   — sign + per-block mean-|x| scale (the paper's C_omega),
+                 wrapping :mod:`repro.core.compression` (Pallas-kernel path
+                 included via ``use_kernel``)
+  ``identity`` — no-op (the paper's "1-bit Adam (32-bits)" ablation and
+                 exactness tests)
+  ``topk``     — per-block magnitude top-k with error feedback (classic
+                 sparsified EF-SGD compressor; values + intra-block indices
+                 on the wire)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import (CompressionConfig, DEFAULT_BLOCK,
+                                    compress_onebit, decompress_onebit)
+
+Payload = Tuple[jax.Array, ...]
+
+
+class Compressor:
+    """Uniform EF-compressor interface. Subclasses are immutable and
+    hashable (they are closed over by jitted step functions)."""
+
+    name: str = "?"
+    lossless: bool = False
+    # dense = every coordinate survives compression (possibly quantised);
+    # sparse compressors (dense=False) drop coordinates and need error
+    # feedback on EVERY lossy hop — the EF-free outer legs of the
+    # hierarchical schedule reject them (see core/comm.py)
+    dense: bool = True
+
+    def ef_compress(self, x: jax.Array, err: jax.Array
+                    ) -> Tuple[Payload, jax.Array]:
+        """Compress ``x + err``; return (payload, exact new residual)."""
+        buf = x + err
+        payload = self.compress(buf)
+        if self.lossless:
+            return payload, jnp.zeros_like(buf)
+        return payload, buf - self.decompress(payload)
+
+    def compress(self, x: jax.Array) -> Payload:
+        raise NotImplementedError
+
+    def decompress(self, payload: Payload) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_bytes(self, d: int) -> int:
+        """Bytes on the wire for a d-element float32 payload."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class OneBitCompressor(Compressor):
+    block_size: int = DEFAULT_BLOCK
+    use_kernel: bool = False
+    name = "onebit"
+
+    def compress(self, x):
+        return compress_onebit(x, self.block_size, self.use_kernel)
+
+    def ef_compress(self, x, err):
+        if self.use_kernel:
+            from repro.kernels.onebit import ops as _kops
+            pk, sc, new_err = _kops.ef_compress_fused(
+                x + 0.0, err, block_size=self.block_size)
+            return (pk, sc), new_err
+        return super().ef_compress(x, err)
+
+    def decompress(self, payload):
+        packed, scales = payload
+        return decompress_onebit(packed, scales, self.block_size,
+                                 self.use_kernel)
+
+    def wire_bytes(self, d):
+        return d // 8 + 4 * (d // self.block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class IdentityCompressor(Compressor):
+    block_size: int = DEFAULT_BLOCK  # accepted for interface uniformity
+    name = "identity"
+    lossless = True
+
+    def compress(self, x):
+        return (x,)
+
+    def decompress(self, payload):
+        return payload[0]
+
+    def wire_bytes(self, d):
+        return 4 * d
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Per-block magnitude top-k with error feedback.
+
+    Each ``block_size`` block keeps its ``k = block_size // ratio`` largest
+    |x| entries as (float32 value, int32 intra-block index) pairs.
+    Intra-block indexing keeps the payload element-ordered and chunkable,
+    so the same all_to_all/all_gather schedule as 1-bit applies.
+    """
+
+    block_size: int = DEFAULT_BLOCK
+    ratio: int = 32                  # keep 1/ratio of the elements
+    name = "topk"
+    dense = False
+
+    def __post_init__(self):
+        assert self.block_size % self.ratio == 0, (self.block_size,
+                                                   self.ratio)
+
+    @property
+    def k(self) -> int:
+        return max(self.block_size // self.ratio, 1)
+
+    def compress(self, x):
+        assert x.ndim == 1 and x.shape[0] % self.block_size == 0, (
+            x.shape, self.block_size)
+        xb = x.reshape(-1, self.block_size)
+        _, idx = jax.lax.top_k(jnp.abs(xb), self.k)          # (nb, k) i32
+        vals = jnp.take_along_axis(xb, idx, axis=1)           # (nb, k) f32
+        return vals.reshape(-1), idx.astype(jnp.int32).reshape(-1)
+
+    def decompress(self, payload):
+        vals, idx = payload
+        nb = vals.shape[0] // self.k
+        vb = vals.reshape(nb, self.k)
+        ib = idx.reshape(nb, self.k)
+        out = jnp.zeros((nb, self.block_size), vals.dtype)
+        rows = jnp.arange(nb, dtype=jnp.int32)[:, None]
+        return out.at[rows, ib].set(vb).reshape(-1)
+
+    def wire_bytes(self, d):
+        return (d // self.block_size) * self.k * (4 + 4)
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_COMPRESSORS: Dict[str, Callable[..., Compressor]] = {}
+
+
+def register_compressor(name: str):
+    def deco(factory):
+        _COMPRESSORS[name] = factory
+        return factory
+    return deco
+
+
+register_compressor("onebit")(OneBitCompressor)
+register_compressor("identity")(IdentityCompressor)
+register_compressor("topk")(TopKCompressor)
+
+
+def get_compressor(name: str, **kwargs) -> Compressor:
+    if name not in _COMPRESSORS:
+        raise KeyError(f"unknown compressor {name!r}; "
+                       f"registered: {sorted(_COMPRESSORS)}")
+    return _COMPRESSORS[name](**kwargs)
+
+
+def list_compressors():
+    return sorted(_COMPRESSORS)
+
+
+def from_config(cfg: CompressionConfig) -> Compressor:
+    """Adapt the legacy ``CompressionConfig`` to a registry compressor."""
+    if cfg.kind == "identity":
+        return IdentityCompressor(block_size=cfg.block_size)
+    return OneBitCompressor(block_size=cfg.block_size,
+                            use_kernel=cfg.use_kernel)
+
+
+def as_compressor(obj) -> Compressor:
+    """Accept a Compressor, a CompressionConfig, or a registry name."""
+    if isinstance(obj, Compressor):
+        return obj
+    if isinstance(obj, str):
+        return get_compressor(obj)
+    if isinstance(obj, CompressionConfig):
+        return from_config(obj)
+    raise TypeError(f"not a compressor: {obj!r}")

@@ -1,0 +1,67 @@
+"""1-bit LAMB (arXiv:2104.06069) — large-batch layerwise scaling, 1-bit.
+
+LAMB rescales each layer's Adam direction by the trust ratio
+``||x_l|| / ||u_l||`` so very large batches keep a usable step size.
+Computing that ratio from compressed momenta is exactly the trap the
+1-bit Adam paper describes for ``v``: the quantisation noise corrupts the
+norm.  1-bit LAMB's answer mirrors the variance freeze — run true LAMB
+while communication is uncompressed, then **freeze the layerwise ratios**
+at the stage switch and keep using them through the compression stage.
+
+Segment boundaries come from ``ravel_pytree`` leaf order (threaded in by
+the train step as :class:`repro.optim.base.SegmentInfo`), with the zero
+padding isolated in its own trailing segment; segment norms are psummed
+over the model axis (and the dp axis in the ZeRO-1 layout), so the frozen
+ratios are true global layer norms on any mesh.
+
+The freeze is state-carried: ``scale`` starts at zero (sentinel), and the
+first compression-stage step writes the clipped live ratio into every
+still-zero slot; afterwards the stored value wins.  Checkpoints therefore
+resume with the exact frozen ratios.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.optim.base import (TwoStageOptimizer, register_optimizer,
+                              segment_norms)
+
+
+@register_optimizer("onebit_lamb")
+@dataclasses.dataclass(frozen=True)
+class OneBitLamb(TwoStageOptimizer):
+    min_ratio: float = 0.05     # trust-ratio clip (stability; also keeps
+    max_ratio: float = 10.0     # the frozen values > 0, see sentinel)
+
+    name: str = "onebit_lamb"
+
+    def _trust_ratio(self, x, upd, seg_ids, n_segments, norm_axes):
+        xn = segment_norms(x, seg_ids, n_segments, norm_axes)
+        un = segment_norms(upd, seg_ids, n_segments, norm_axes)
+        r = jnp.where((xn > 0.0) & (un > 0.0),
+                      xn / jnp.maximum(un, 1e-12), 1.0)
+        return jnp.clip(r, self.min_ratio, self.max_ratio)
+
+    def _warmup_direction(self, upd, x, seg_ids_fn, n_segments, norm_axes):
+        if seg_ids_fn is None:
+            return upd  # no segment info: plain Adam warmup
+        seg_ids = seg_ids_fn()
+        r = self._trust_ratio(x, upd, seg_ids, n_segments, norm_axes)
+        return upd * r[seg_ids]
+
+    def _update_scale(self, scale, x, upd, seg_ids_fn, n_segments,
+                      norm_axes):
+        if seg_ids_fn is None:
+            return scale
+        live = self._trust_ratio(x, upd, seg_ids_fn(), n_segments,
+                                 norm_axes)
+        # freeze-on-first-use: zero slots take the live ratio once; the
+        # clip keeps stored ratios >= min_ratio > 0, so they never rewrite
+        return jnp.where(scale > 0.0, scale, live)
+
+    def _scale_per_elem(self, scale, seg_ids_fn):
+        if seg_ids_fn is None:
+            return None
+        return scale[seg_ids_fn()]

@@ -1,0 +1,61 @@
+"""WarmupSwitch — the shared warmup→compression stage policy.
+
+Every two-stage optimizer in :mod:`repro.optim` needs one decision made
+per step on the host: *is the variance frozen yet?*  The two supported
+rules are the ones in the paper:
+
+  * ``steps`` — manual T_w: switch at a fixed step count (paper's main
+    experiments, e.g. 23K/152K for BERT-Large);
+  * ``auto``  — the Sec. 7.1 rule: switch at the first step after LR
+    warmup where ``||v_t||_1 / ||v_{t-Delta}||_1 >= threshold`` with
+    ``Delta = 1/(1-b2)`` (wraps :class:`repro.core.variance.VarianceMonitor`).
+
+The driver calls ``observe(step, stats)`` after every step and
+``compressed(step)`` before the next one; the policy is pure host-side
+bookkeeping and never enters the jitted graph.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.variance import VarianceMonitor
+
+MODES = ("steps", "auto")
+
+
+class WarmupSwitch:
+    def __init__(self, mode: str = "steps", warmup_steps: int = 100,
+                 b2: float = 0.999, threshold: float = 0.96,
+                 lr_warmup_steps: int = 0):
+        assert mode in MODES, mode
+        self.mode = mode
+        self.warmup_steps = warmup_steps
+        self.monitor = VarianceMonitor(b2=b2, threshold=threshold,
+                                       lr_warmup_steps=lr_warmup_steps)
+        self._frozen_at: Optional[int] = None
+        if mode == "steps" and warmup_steps == 0:
+            self._frozen_at = 0
+
+    def observe(self, step: int, stats: Dict[str, float]) -> bool:
+        """Feed one step's metrics; returns True once frozen."""
+        if self.mode == "auto":
+            if self._frozen_at is None and self.monitor.observe(
+                    step, float(stats["v_l1"])):
+                self._frozen_at = step + 1
+        elif self._frozen_at is None and step + 1 >= self.warmup_steps:
+            self._frozen_at = self.warmup_steps
+        return self._frozen_at is not None
+
+    def compressed(self, step: int) -> bool:
+        """True when step ``step`` should run the compression stage."""
+        if self.mode == "steps":
+            return step >= self.warmup_steps
+        return self._frozen_at is not None and step >= self._frozen_at
+
+    @property
+    def switch_step(self) -> Optional[int]:
+        return self._frozen_at
+
+    @property
+    def ratio(self):
+        return self.monitor.ratio

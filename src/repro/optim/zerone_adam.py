@@ -1,0 +1,86 @@
+"""0/1 Adam (arXiv:2202.06009) — adaptive variance freezing + 0-bit steps.
+
+Generalises 1-bit Adam along both of its frozen dimensions:
+
+  * **adaptive variance state freezing** — instead of one hard freeze at
+    T_w, the second moment keeps updating during the compression stage on
+    an interval schedule (the first SYNC step once ``var_update_interval``
+    steps have passed since the last update — tracked in ``v_step`` so
+    skipped-sync steps can never starve it) until ``var_freeze_step``.
+    The gradient estimate: when every step syncs,
+
+        g_hat = (m_bar - b1 * m_prev) / (1 - b1)
+
+    recovers the EF-averaged dp-mean gradient exactly
+    (m_bar = b1*m_prev + (1-b1)*mean_i g_i + EF noise).  When the sync
+    schedule can skip, ``m_prev`` is a per-rank quantity between syncs
+    and feeding it into ``v`` would diverge the (replicated) parameters
+    across dp ranks — so the estimate falls back to the synchronised
+    momentum ``m_bar`` itself (a smoothed, dp-consistent gradient proxy);
+
+  * **adaptive local steps ("0-bit" sync skipping)** — ``sync_due(step)``
+    implements the paper's growing local-step schedule: the interval
+    between synchronisations doubles every ``sync_double_every`` steps,
+    capped at ``sync_max_interval``.  On a skipped step NO bytes cross
+    the wire: the local gradient folds into the per-rank momentum and
+    the model update is deferred to the next sync (the shard_map
+    adaptation of the paper's local steps — the dp-mean commutes with
+    the momentum recursion, so the sync step applies exactly the mean
+    EMA of every gradient seen since the last sync; see
+    ``TwoStageOptimizer.compressed_update``).  Requires the "local"
+    optimizer-state layout (per-rank momentum diverges between syncs).
+
+With ``var_update_interval = 0`` and ``sync_double_every = 0`` this
+degrades exactly to 1-bit Adam.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.optim.base import TwoStageOptimizer, register_optimizer
+
+
+@register_optimizer("zerone_adam")
+@dataclasses.dataclass(frozen=True)
+class ZeroneAdam(TwoStageOptimizer):
+    # variance policy: update v every k-th compression-stage step while
+    # count <= var_freeze_step (0 = fully frozen, as 1-bit Adam)
+    var_update_interval: int = 16
+    var_freeze_step: int = 1_000
+    # sync policy: interval doubles every `sync_double_every` steps
+    # (0 = sync every step), capped at sync_max_interval
+    sync_base_interval: int = 1
+    sync_double_every: int = 0
+    sync_max_interval: int = 16
+
+    name: str = "zerone_adam"
+
+    def _update_v(self, v, v_step, m_prev, m_bar, count):
+        if self.var_update_interval <= 0:
+            return v, v_step
+        if self.may_skip_sync:
+            # m_prev diverges per dp rank between syncs; m_bar is the
+            # dp-consistent (synced) estimate
+            g_hat = m_bar
+        else:
+            g_hat = (m_bar - self.b1 * m_prev) / (1.0 - self.b1)
+        # fire on the first sync step once the interval has elapsed —
+        # robust to any alignment between count and the sync schedule
+        due = jnp.logical_and(count - v_step >= self.var_update_interval,
+                              count <= self.var_freeze_step)
+        v_new = self.b2 * v + (1.0 - self.b2) * jnp.square(g_hat)
+        return jnp.where(due, v_new, v), jnp.where(due, count, v_step)
+
+    def sync_due(self, step: int) -> bool:
+        if self.sync_double_every <= 0:
+            return True
+        interval = min(
+            self.sync_base_interval << (step // self.sync_double_every),
+            self.sync_max_interval)
+        return step % max(interval, 1) == 0
+
+    @property
+    def may_skip_sync(self) -> bool:
+        return self.sync_double_every > 0

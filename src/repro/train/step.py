@@ -1,25 +1,51 @@
 """Distributed train/serve steps: one ``shard_map`` over the full mesh.
 
-The whole step — forward, backward, and the 1-bit Adam update including
-its ``compressed_allreduce`` — runs per-rank inside a single shard_map
-(check_vma=False). This is what gives the paper's exact semantics:
+The whole step — forward, backward, and the compressed-optimizer update
+including its ``compressed_allreduce`` — runs per-rank inside a single
+shard_map (check_vma=False). This is what gives the paper's exact
+semantics:
 
   * gradients are NOT averaged over data-parallel ranks by autodiff (no dp
     collective exists in the backward pass at all);
   * the ONLY dp communication is the optimizer's own exchange — an
     uncompressed ``pmean`` in the warmup stage (== the paper's baseline
-    Adam), or the error-compensated 1-bit all_to_all/all_gather schedule
-    in the compression stage (Alg. 1 / Fig. 3);
+    Adam), the error-compensated compressed all_to_all/all_gather schedule
+    in the compression stage (Alg. 1 / Fig. 3), or nothing at all on a
+    skipped-sync ("0-bit") step;
   * tensor parallelism is explicit Megatron collectives placed by the
     model code (see repro.models.common).
 
+The optimizer itself is pluggable: ``TrainStepConfig`` names a registered
+``repro.optim`` optimizer and compressor, and the step body only ever
+calls the uniform ``warmup_update`` / ``compressed_update`` /
+``zero1_update`` interface — no optimizer-specific branches live here.
+Orthogonal to the optimizer choice are:
+
+  ``stage``     "warmup" | "compressed" (legacy values
+                "compressed_zero1"/"compressed_hier" normalise onto the
+                two axes below);
+  ``layout``    where optimizer state lives:
+                  "replicated" — m/v replicated over dp (paper layout);
+                  "local"      — m/v/scale per dp rank, REQUIRED whenever
+                                 the optimizer may skip syncs (local
+                                 momentum diverges across dp between
+                                 syncs; a replicated out-spec would
+                                 silently drop it);
+                  "zero1"      — v + f32 master weights dp-sharded
+                                 (beyond-paper ZeRO-1 composition);
+  ``topology``  "flat" | "hier" (two-level compressed allreduce across
+                pods — composes with any registered optimizer).
+
 Optimizer state layout (global shapes; Dp = padded per-model-rank flat
-parameter size, n_dp = product of dp axis sizes):
+parameter size, n_dp = product of dp axis sizes, S = number of
+``ravel_pytree`` segments incl. the padding tail):
 
   m, v        (tp, Dp)                 P("model", None)  — dp-replicated
   worker_err  (*dp_sizes, tp, Dp)      P(*dp, "model", None) — per dp rank
   server_err  (*dp_sizes, tp, Dp/n_dp) P(*dp, "model", None) — per dp rank
+  scale       (tp, S)                  P("model", None)  — per-segment
   count       ()                       P()
+  ["local" layout: m, v, scale gain the leading (*dp_sizes,) dims]
 
 Replicating m/v over dp is paper-faithful (DeepSpeed's 1-bit Adam does not
 compose with ZeRO for the same reason: worker momentum + error state are
@@ -34,23 +60,43 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.flatten_util import ravel_pytree
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ArchConfig, InputShape
 from repro.core import onebit_adam as OB
 from repro.core.compression import padded_length
 from repro.models import transformer as T
 from repro.models.common import ParallelCtx
+from repro.optim import (OptState, TwoStageOptimizer, ZeroOptState,
+                         from_config, get_optimizer, segments_of)
+
+LAYOUTS = ("replicated", "local", "zero1")
+TOPOLOGIES = ("flat", "hier")
+_LEGACY_STAGES = {"compressed_zero1": ("compressed", "zero1", None),
+                  "compressed_hier": ("compressed", None, "hier")}
 
 
 @dataclasses.dataclass(frozen=True)
 class TrainStepConfig:
-    opt: OB.OneBitAdamConfig = OB.OneBitAdamConfig()
-    stage: str = "warmup"          # "warmup" (== uncompressed Adam baseline)
-    #                               | "compressed" | "compressed_hier"
+    optimizer: str = "onebit_adam"  # repro.optim registry name
+    compressor: str = "onebit"      # repro.optim compressor registry name
+    stage: str = "warmup"           # "warmup" | "compressed"
+    #                                (legacy: "compressed_zero1",
+    #                                 "compressed_hier" — normalised onto
+    #                                 layout/topology below)
+    layout: str = "replicated"      # "replicated" | "local" | "zero1"
+    topology: str = "flat"          # "flat" | "hier"
+    sync: bool = True               # False = 0-bit local step (requires
+    #                                layout="local")
+    block_size: int = 4096          # compression block / padding basis
+    opt_kwargs: Optional[dict] = None   # extra optimizer hyperparams
+    comp_kwargs: Optional[dict] = None  # extra compressor kwargs
+    # legacy config object; when set it defines the optimizer (onebit_adam)
+    # and compressor, overriding the name fields above
+    opt: Optional[OB.OneBitAdamConfig] = None
     model_axis: str = "model"
     aux_weight: float = 0.01
     seq_parallel: bool = False     # Megatron-SP residual stream (§Perf)
@@ -60,13 +106,46 @@ class TrainStepConfig:
     #                                accum_steps before ONE optimizer step
     #                                (communication per step unchanged)
 
+    def normalized(self) -> "TrainStepConfig":
+        """Resolve legacy stage strings onto (stage, layout, topology)."""
+        if self.stage in _LEGACY_STAGES:
+            stage, layout, topo = _LEGACY_STAGES[self.stage]
+            return dataclasses.replace(
+                self, stage=stage, layout=layout or self.layout,
+                topology=topo or self.topology)
+        return self
+
+    def build_optimizer(self) -> TwoStageOptimizer:
+        """Materialise the registry optimizer this config names."""
+        if self.opt is not None:
+            o = self.opt
+            return get_optimizer(
+                "onebit_adam", compressor=from_config(o.compression),
+                b1=o.b1, b2=o.b2, eps=o.eps,
+                weight_decay=o.weight_decay,
+                bias_correction=o.bias_correction,
+                **(self.opt_kwargs or {}))
+        comp_kwargs = dict(self.comp_kwargs or {})
+        comp_kwargs.setdefault("block_size", self.block_size)
+        return get_optimizer(self.optimizer, compressor=self.compressor,
+                             compressor_kwargs=comp_kwargs,
+                             **(self.opt_kwargs or {}))
+
+    @property
+    def opt_block_size(self) -> int:
+        if self.opt is not None:
+            return self.opt.compression.block_size
+        return (self.comp_kwargs or {}).get("block_size", self.block_size)
+
 
 class FlatOptState(NamedTuple):
     m: jax.Array
     v: jax.Array
     worker_err: jax.Array
     server_err: jax.Array
+    scale: jax.Array
     count: jax.Array
+    v_step: jax.Array
 
 
 def mesh_axes(mesh: Mesh, model_axis: str = "model"):
@@ -77,12 +156,16 @@ def mesh_axes(mesh: Mesh, model_axis: str = "model"):
     return dp_axes, dp_sizes, tp
 
 
-def _flat_dim(cfg: ArchConfig, tp: int, n_dp: int, block: int) -> int:
-    """Padded per-model-rank flat parameter length."""
-    shapes = jax.eval_shape(partial(T.init_params, cfg, tp=tp),
-                            jax.ShapeDtypeStruct((2,), jnp.uint32))
-    d_local = 0
+def _param_shapes(cfg: ArchConfig, tp: int):
+    return jax.eval_shape(partial(T.init_params, cfg, tp=tp),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def _local_leaf_sizes(cfg: ArchConfig, tp: int):
+    """Per-model-rank flat sizes of each parameter leaf, in ravel order."""
+    shapes = _param_shapes(cfg, tp)
     specs = T.param_specs(cfg, "model", tp)
+    sizes = []
     for leaf, spec in zip(jax.tree.leaves(shapes),
                           jax.tree.leaves(specs,
                                           is_leaf=lambda s: isinstance(s, P))):
@@ -90,45 +173,72 @@ def _flat_dim(cfg: ArchConfig, tp: int, n_dp: int, block: int) -> int:
         for i, dim in enumerate(leaf.shape):
             ax = spec[i] if i < len(spec) else None
             n *= dim // tp if ax == "model" else dim
-        d_local += n
-    return padded_length(d_local, max(n_dp, 1), block)
+        sizes.append(n)
+    return sizes
 
 
-def opt_state_specs(mesh: Mesh, model_axis: str = "model") -> FlatOptState:
+def _flat_dim(cfg: ArchConfig, tp: int, n_dp: int, block: int) -> int:
+    """Padded per-model-rank flat parameter length."""
+    return padded_length(sum(_local_leaf_sizes(cfg, tp)), max(n_dp, 1),
+                         block)
+
+
+def _n_segments(cfg: ArchConfig, tp: int, d_pad: int) -> int:
+    sizes = _local_leaf_sizes(cfg, tp)
+    return len(sizes) + (1 if d_pad > sum(sizes) else 0)
+
+
+def opt_state_specs(mesh: Mesh, model_axis: str = "model",
+                    layout: str = "replicated") -> FlatOptState:
     dp_axes, _, _ = mesh_axes(mesh, model_axis)
     dp = tuple(dp_axes)
+    per_rank = P(*dp, model_axis, None)
+    replicated = P(model_axis, None)
+    state = per_rank if layout == "local" else replicated
     return FlatOptState(
-        m=P(model_axis, None), v=P(model_axis, None),
-        worker_err=P(*dp, model_axis, None),
-        server_err=P(*dp, model_axis, None),
+        m=state, v=state,
+        worker_err=per_rank,
+        server_err=per_rank,
+        scale=state,
         count=P(),
+        v_step=P(),
     )
 
 
 def init_opt_state(cfg: ArchConfig, mesh: Mesh, model_axis: str = "model",
                    block: int = 4096, abstract: bool = False,
-                   hierarchical: bool = False) -> FlatOptState:
+                   hierarchical: bool = False,
+                   layout: str = "replicated") -> FlatOptState:
     """Global optimizer state (zeros). abstract=True -> ShapeDtypeStructs.
 
     hierarchical=True sizes the per-rank server-error chunk by the INNER
     (intra-pod) dp size — the two-level compressed allreduce runs the
-    paper's server stage within the pod only.
+    paper's server stage within the pod only. The padded flat length is
+    always a multiple of n_dp_total * block (hier sub-chunks each server
+    chunk over the outer axes).
+
+    layout="local" stores m/v/scale per dp rank (required for optimizers
+    that skip syncs; see the module docstring).
     """
     dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
     n_dp = 1
     for s in dp_sizes:
         n_dp *= s
+    dp_ = _flat_dim(cfg, tp, n_dp, block)
     if hierarchical and len(dp_sizes) > 1:
-        n_dp = 1
+        n_dp = 1  # server chunks span the INNER axes only
         for s in dp_sizes[1:]:
             n_dp *= s
-    dp_ = _flat_dim(cfg, tp, n_dp, block)
+    n_seg = _n_segments(cfg, tp, dp_)
+    lead = tuple(dp_sizes) if layout == "local" else ()
     shapes = FlatOptState(
-        m=((tp, dp_), jnp.float32),
-        v=((tp, dp_), jnp.float32),
+        m=(lead + (tp, dp_), jnp.float32),
+        v=(lead + (tp, dp_), jnp.float32),
         worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
         server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        scale=(lead + (tp, n_seg), jnp.float32),
         count=((), jnp.int32),
+        v_step=((), jnp.int32),
     )
     if abstract:
         return FlatOptState(*(jax.ShapeDtypeStruct(s, d)
@@ -159,13 +269,15 @@ def _select(spec_map: Dict[str, Any], batch: Dict[str, Any]):
 
 class ZeroFlatOptState(NamedTuple):
     """Global container for the ZeRO-1-composed stage (see
-    onebit_adam.ZeroOneBitAdamState): v/master sharded over dp as well."""
+    repro.optim.base.ZeroOptState): v/master sharded over dp as well."""
     m: jax.Array             # (tp, Dp)                 P(model, None)
     v_shard: jax.Array       # (*dp, tp, Dp/n)          P(*dp, model, None)
     master_shard: jax.Array  # (*dp, tp, Dp/n)
     worker_err: jax.Array    # (*dp, tp, Dp)
     server_err: jax.Array    # (*dp, tp, Dp/n)
+    scale: jax.Array         # (tp, S)                  P(model, None)
     count: jax.Array
+    v_step: jax.Array
 
 
 def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
@@ -177,7 +289,8 @@ def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
         master_shard=P(*dp, model_axis, None),
         worker_err=P(*dp, model_axis, None),
         server_err=P(*dp, model_axis, None),
-        count=P())
+        scale=P(model_axis, None),
+        count=P(), v_step=P())
 
 
 def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
@@ -188,13 +301,15 @@ def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
     for s in dp_sizes:
         n_dp *= s
     dp_ = _flat_dim(cfg, tp, n_dp, block)
+    n_seg = _n_segments(cfg, tp, dp_)
     shapes = ZeroFlatOptState(
         m=((tp, dp_), jnp.float32),
         v_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
         master_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
         worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
         server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
-        count=((), jnp.int32))
+        scale=((tp, n_seg), jnp.float32),
+        count=((), jnp.int32), v_step=((), jnp.int32))
     if abstract:
         return ZeroFlatOptState(*(jax.ShapeDtypeStruct(s, d)
                                   for s, d in shapes))
@@ -208,8 +323,19 @@ def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
 def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                     donate: bool = True):
     """Returns jitted fn(params, opt_state, batch, lr) -> (params, state,
-    metrics). ``tsc.stage`` selects warmup (uncompressed Adam — also the
-    paper's baseline) or the 1-bit compression stage."""
+    metrics). ``tsc`` names the optimizer/compressor (repro.optim
+    registries) and the stage/layout/topology; the step body drives the
+    uniform optimizer interface only."""
+    tsc = tsc.normalized()
+    assert tsc.stage in ("warmup", "compressed"), tsc.stage
+    assert tsc.layout in LAYOUTS, tsc.layout
+    assert tsc.topology in TOPOLOGIES, tsc.topology
+    if not tsc.sync:
+        # a skipped sync leaves per-rank momentum divergent across dp;
+        # replicated/zero1 out-specs would silently drop it
+        assert tsc.layout == "local", \
+            "sync=False (0-bit local steps) requires layout='local'"
+    optimizer = tsc.build_optimizer()
     dp_axes, dp_sizes, tp = mesh_axes(mesh, tsc.model_axis)
     n_dp = 1
     for s in dp_sizes:
@@ -217,23 +343,23 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
     ctx = _ctx(mesh, tsc.model_axis)
     if tsc.seq_parallel:
         ctx = dataclasses.replace(ctx, sp=True)
+    tp_axes = (tsc.model_axis,) if tp > 1 else ()
     pspecs = T.param_specs(cfg, tsc.model_axis, tp)
     osp = (zero1_opt_specs(mesh, tsc.model_axis)
-           if tsc.stage == "compressed_zero1"
-           else opt_state_specs(mesh, tsc.model_axis))
-    block = tsc.opt.compression.block_size
+           if tsc.layout == "zero1"
+           else opt_state_specs(mesh, tsc.model_axis, tsc.layout))
+    block = tsc.opt_block_size
 
-    if tsc.stage == "compressed_hier" and len(dp_axes) > 1:
+    hier = tsc.topology == "hier" and len(dp_axes) > 1
+    if hier:
+        assert tsc.layout != "zero1", "hier topology + zero1 unsupported"
         inner_axes, outer_axes = dp_axes[1:], dp_axes[:1]
-        n_pad = 1
-        for a in inner_axes:
-            n_pad *= mesh.shape[a]
     else:
         inner_axes, outer_axes = dp_axes, ()
-        n_pad = n_dp
-    # padding basis must match init_opt_state(hierarchical=...): the
-    # server stage chunks over the INNER dp axes only in hierarchical mode
-    d_pad = _flat_dim(cfg, tp, n_pad, block)
+    # padding basis: the flat vector must chunk into n_dp_total * block in
+    # BOTH topologies (hier additionally sub-chunks each server chunk over
+    # the outer axes — see core/comm.py); matches init_opt_state
+    d_pad = _flat_dim(cfg, tp, n_dp, block)
 
     def step(params, opt, batch, lr):
         flat0, unravel = ravel_pytree(params)
@@ -267,15 +393,19 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                                               tsc.aux_weight)
         g_flat, _ = ravel_pytree(grads)
         g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
+        segs = segments_of(grads, d_pad)
 
-        if tsc.stage == "compressed_zero1":
-            st = OB.ZeroOneBitAdamState(
+        if tsc.layout == "zero1":
+            st = ZeroOptState(
                 m=opt.m.reshape(-1), v_shard=opt.v_shard.reshape(-1),
                 master_shard=opt.master_shard.reshape(-1),
                 worker_err=opt.worker_err.reshape(-1),
-                server_err=opt.server_err.reshape(-1), count=opt.count)
-            x_full, st, stats = OB.zero1_compressed_update(
-                g_flat, st, tsc.opt, lr, dp_axes=dp_axes)
+                server_err=opt.server_err.reshape(-1),
+                scale=opt.scale.reshape(-1), count=opt.count,
+                v_step=opt.v_step)
+            x_full, st, stats = optimizer.zero1_update(
+                g_flat, st, lr, dp_axes=dp_axes, tp_axes=tp_axes,
+                segs=segs, sync=tsc.sync)
             new_params = unravel(x_full[:d_r].astype(flat0.dtype))
             new_opt = ZeroFlatOptState(
                 m=st.m.reshape(opt.m.shape),
@@ -284,11 +414,12 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                     opt.master_shard.shape),
                 worker_err=st.worker_err.reshape(opt.worker_err.shape),
                 server_err=st.server_err.reshape(opt.server_err.shape),
-                count=st.count)
+                scale=st.scale.reshape(opt.scale.shape),
+                count=st.count, v_step=st.v_step)
             out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
                            for k, v in metrics.items()}
             v_l1 = stats["v_l1"]
-            if dp_axes:
+            if dp_axes:  # v sharded over dp: SUM the shard norms
                 v_l1 = jax.lax.psum(v_l1, dp_axes)
             if ctx.tp_axis:
                 v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
@@ -297,36 +428,40 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                                     if dp_axes else total)
             return new_params, new_opt, out_metrics
 
-        st = OB.OneBitAdamState(
+        st = OptState(
             m=opt.m.reshape(-1), v=opt.v.reshape(-1),
             worker_err=opt.worker_err.reshape(-1),
-            server_err=opt.server_err.reshape(-1), count=opt.count)
+            server_err=opt.server_err.reshape(-1),
+            scale=opt.scale.reshape(-1), count=opt.count,
+            v_step=opt.v_step)
         x = jnp.pad(flat0, (0, d_pad - d_r))
 
         if tsc.stage == "warmup":
-            new_x, st, stats = OB.warmup_update(
-                g_flat, st, x, tsc.opt, lr, dp_axes=dp_axes)
-        elif tsc.stage == "compressed_hier":
-            hcfg = dataclasses.replace(tsc.opt, hierarchical=True)
-            new_x, st, stats = OB.compressed_update(
-                g_flat, st, x, hcfg, lr, dp_axes=inner_axes,
-                pod_axes=outer_axes)
+            new_x, st, stats = optimizer.warmup_update(
+                g_flat, st, x, lr, dp_axes=dp_axes, tp_axes=tp_axes,
+                segs=segs)
         else:
-            new_x, st, stats = OB.compressed_update(
-                g_flat, st, x, tsc.opt, lr, dp_axes=dp_axes)
+            new_x, st, stats = optimizer.compressed_update(
+                g_flat, st, x, lr, dp_axes=inner_axes,
+                pod_axes=outer_axes, tp_axes=tp_axes, segs=segs,
+                sync=tsc.sync)
 
         new_params = unravel(new_x[:d_r])
         new_opt = FlatOptState(
             m=st.m.reshape(opt.m.shape), v=st.v.reshape(opt.v.shape),
             worker_err=st.worker_err.reshape(opt.worker_err.shape),
             server_err=st.server_err.reshape(opt.server_err.shape),
-            count=st.count)
+            scale=st.scale.reshape(opt.scale.shape),
+            count=st.count, v_step=st.v_step)
 
-        # metrics: mean over dp (already replicated over tp); v_l1 summed
-        # over model shards = the paper's fused-variance norm (Fig. 2)
+        # metrics: mean over dp (a no-op while replicated; the honest
+        # cross-rank mean in the "local" layout); v_l1 summed over model
+        # shards = the paper's fused-variance norm (Fig. 2)
         out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
                        for k, v in metrics.items()}
         v_l1 = stats["v_l1"]
+        if tsc.layout == "local" and dp_axes:
+            v_l1 = jax.lax.pmean(v_l1, dp_axes)
         if ctx.tp_axis:
             v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
         out_metrics["v_l1"] = v_l1
@@ -357,6 +492,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
     train_step.build = build
     train_step.param_specs = pspecs
     train_step.opt_specs = osp
+    train_step.optimizer = optimizer
     return train_step
 
 

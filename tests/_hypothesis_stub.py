@@ -1,0 +1,99 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (dependency gate).
+
+The container this repo runs in does not ship hypothesis and new deps
+cannot be installed.  ``conftest.py`` registers this module as
+``hypothesis`` / ``hypothesis.strategies`` only when the real package is
+absent; when hypothesis is available it is used unchanged.
+
+The stub replays each ``@given`` test on a bounded number of samples drawn
+from a seeded PRNG, so property tests still exercise a spread of inputs
+and stay reproducible run-to-run.  It covers exactly the strategy surface
+used by this test suite: integers, floats, sampled_from, booleans, lists,
+and ``.map``.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+
+MAX_EXAMPLES_CAP = 10  # stub replay count cap per test
+
+
+class Strategy:
+    def __init__(self, sample_fn):
+        self._sample = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._sample(rng)))
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    return Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return Strategy(lambda rng: rng.choice(elements))
+
+
+def booleans():
+    return Strategy(lambda rng: rng.random() < 0.5)
+
+
+def lists(elements: Strategy, min_size: int = 0, max_size: int = 10):
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+    return Strategy(sample)
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(test_fn):
+        def wrapper(*args, **kwargs):
+            n = min(getattr(test_fn, "_stub_max_examples", MAX_EXAMPLES_CAP),
+                    MAX_EXAMPLES_CAP)
+            rng = random.Random(f"stub:{test_fn.__module__}.{test_fn.__qualname__}")
+            for _ in range(n):
+                drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                drawn_kw = {k: s.sample(rng) for k, s in kw_strategies.items()}
+                test_fn(*args, *drawn_args, **kwargs, **drawn_kw)
+
+        # pytest must only see the pass-through params (e.g. ``self`` and
+        # real fixtures), not the strategy-drawn ones.
+        sig = inspect.signature(test_fn)
+        params = list(sig.parameters.values())
+        n_pos = len(arg_strategies)
+        kept = []
+        pos_budget = n_pos
+        for p in params:
+            if p.name == "self":
+                kept.append(p)
+            elif pos_budget > 0:
+                pos_budget -= 1  # consumed by a positional strategy
+            elif p.name not in kw_strategies:
+                kept.append(p)
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        wrapper.__name__ = test_fn.__name__
+        wrapper.__qualname__ = test_fn.__qualname__
+        wrapper.__doc__ = test_fn.__doc__
+        wrapper.__module__ = test_fn.__module__
+        wrapper._stub_inner = test_fn
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = MAX_EXAMPLES_CAP, deadline=None, **_ignored):
+    def decorate(test_fn):
+        # settings() is applied above given() in this suite; stash the count
+        # on the innermost function for given() to read.
+        inner = getattr(test_fn, "_stub_inner", test_fn)
+        inner._stub_max_examples = max_examples
+        return test_fn
+    return decorate

@@ -1,0 +1,448 @@
+"""repro.optim subsystem tests: registries, compressor contracts,
+optimizer parity vs uncompressed references, and the ZeRO-1 layout."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AdamConfig, adam_init, adam_update
+from repro.core import onebit_adam as OB
+from repro.core.comm import compressed_allreduce
+from repro.core.compression import CompressionConfig
+from repro.optim import (SegmentInfo, WarmupSwitch, get_compressor,
+                         get_optimizer, list_compressors, list_optimizers,
+                         segments_of)
+
+D = 2048
+
+
+def rand(d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(d,)).astype(np.float32) * scale)
+
+
+def quad_grad(seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.uniform(0.5, 5.0, size=(D,)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+
+    def grad(x, key, sigma=0.1):
+        return a * (x - t) + sigma * jax.random.normal(key, (D,))
+
+    return grad
+
+
+class TestCompressorRegistry:
+    def test_registry_contents(self):
+        assert set(list_compressors()) >= {"onebit", "identity", "topk"}
+        assert set(list_optimizers()) >= {"onebit_adam", "zerone_adam",
+                                          "onebit_lamb"}
+
+    @pytest.mark.parametrize("name", ["onebit", "identity", "topk"])
+    def test_ef_invariant(self, name):
+        """compressed_value + error == input, exactly (by construction)."""
+        comp = get_compressor(name, block_size=256)
+        x = rand(D, 1)
+        err = rand(D, 2, 0.1)
+        payload, new_err = comp.ef_compress(x, err)
+        xh = comp.decompress(payload)
+        np.testing.assert_allclose(np.asarray(xh + new_err),
+                                   np.asarray(x + err), rtol=1e-5,
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("name", ["onebit", "identity", "topk"])
+    def test_payload_chunkable(self, name):
+        """Payload contract: chunking every leaf into n leading chunks
+        chunks the represented vector — decompress(chunk_j) must equal
+        the j-th slice of decompress(full)."""
+        n, block = 4, 256
+        comp = get_compressor(name, block_size=block)
+        x = rand(D, 3)
+        payload = comp.compress(x)
+        full = np.asarray(comp.decompress(payload))
+        for leaf in payload:
+            assert leaf.ndim == 1 and leaf.shape[0] % n == 0, leaf.shape
+        for j in range(n):
+            chunk_payload = tuple(
+                leaf.reshape(n, -1)[j] for leaf in payload)
+            got = np.asarray(comp.decompress(chunk_payload))
+            np.testing.assert_array_equal(got,
+                                          full.reshape(n, -1)[j])
+
+    def test_wire_bytes(self):
+        assert get_compressor("identity").wire_bytes(D) == 4 * D
+        ob = get_compressor("onebit", block_size=256)
+        assert ob.wire_bytes(D) == D // 8 + 4 * (D // 256)
+        tk = get_compressor("topk", block_size=256, ratio=8)
+        assert tk.wire_bytes(D) == (D // 256) * 32 * 8
+        assert tk.wire_bytes(D) < 4 * D
+
+    def test_topk_keeps_largest(self):
+        comp = get_compressor("topk", block_size=256, ratio=8)
+        x = rand(D, 5)
+        out = np.asarray(comp.decompress(comp.compress(x)))
+        xb = np.asarray(x).reshape(-1, 256)
+        ob = out.reshape(-1, 256)
+        for b in range(xb.shape[0]):
+            kept = np.nonzero(ob[b])[0]
+            assert len(kept) == 32
+            thresh = np.sort(np.abs(xb[b]))[-32]
+            assert (np.abs(xb[b][kept]) >= thresh - 1e-7).all()
+            np.testing.assert_array_equal(ob[b][kept], xb[b][kept])
+
+    def test_topk_mass_conservation_through_allreduce(self):
+        """The generic two-stage EF schedule conserves mass for topk just
+        as for onebit (degenerate n=1 path)."""
+        comp = get_compressor("topk", block_size=256, ratio=8)
+        x, we, se = rand(D, 6), rand(D, 7, 0.1), rand(D, 8, 0.1)
+        out, nw, ns = compressed_allreduce(x, we, se, (), comp)
+        np.testing.assert_allclose(np.asarray(out + nw + ns),
+                                   np.asarray(x + we + se), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_hierarchical_rejects_sparse_compressor(self):
+        """EF-free cross-pod legs would silently drop the non-top-k mass
+        (systematic bias) — hier + sparse must fail loudly."""
+        from repro.core.comm import compressed_allreduce_hierarchical
+        comp = get_compressor("topk", block_size=256, ratio=8)
+        with pytest.raises(AssertionError, match="dense"):
+            compressed_allreduce_hierarchical(
+                jnp.zeros((D,)), jnp.zeros((D,)), jnp.zeros((D,)),
+                inner_axes=(), outer_axes=("pod",), cfg=comp)
+
+    def test_unknown_names_raise(self):
+        with pytest.raises(KeyError):
+            get_compressor("gzip")
+        with pytest.raises(KeyError):
+            get_optimizer("adamw_8bit")
+
+
+class TestOptimizerParity:
+    """Each registered optimizer under the `identity` compressor must
+    match its uncompressed reference math for a few steps (satellite)."""
+
+    LR = 2e-2
+    STEPS = 12
+    WARMUP = 4
+
+    def _run(self, opt, segs=None, sync_fn=None):
+        grad = quad_grad(0)
+        st = opt.init(D, 1, segs.n if segs else 1)
+        x = jnp.zeros((D,))
+        key = jax.random.PRNGKey(0)
+        xs = []
+        for i in range(self.STEPS):
+            key, k = jax.random.split(key)
+            g = grad(x, k)
+            if i < self.WARMUP:
+                x, st, _ = opt.warmup_update(g, st, x,
+                                             jnp.float32(self.LR),
+                                             segs=segs)
+            else:
+                sync = sync_fn(i - self.WARMUP) if sync_fn else True
+                x, st, _ = opt.compressed_update(g, st, x,
+                                                 jnp.float32(self.LR),
+                                                 segs=segs, sync=sync)
+            xs.append(np.asarray(x))
+        return xs, st
+
+    def test_onebit_adam_matches_frozen_adam_reference(self):
+        opt = get_optimizer("onebit_adam", compressor="identity")
+        xs, _ = self._run(opt)
+        # reference: Adam warmup, then momentum SGD with frozen v
+        grad = quad_grad(0)
+        x = jnp.zeros((D,))
+        st = adam_init(D)
+        key = jax.random.PRNGKey(0)
+        for i in range(self.STEPS):
+            key, k = jax.random.split(key)
+            g = grad(x, k)
+            if i < self.WARMUP:
+                x, st = adam_update(g, st, x, AdamConfig(),
+                                    jnp.float32(self.LR))
+                m, v = st.m, st.v
+            else:
+                m = 0.9 * m + 0.1 * g
+                x = x - self.LR * m / (jnp.sqrt(v) + 1e-8)
+            np.testing.assert_allclose(xs[i], np.asarray(x), rtol=1e-6,
+                                       atol=1e-7)
+
+    def test_zerone_adam_matches_interval_variance_reference(self):
+        k_var = 3
+        opt = get_optimizer("zerone_adam", compressor="identity",
+                            var_update_interval=k_var, var_freeze_step=8)
+        xs, _ = self._run(opt)
+        grad = quad_grad(0)
+        x = jnp.zeros((D,))
+        m = v = jnp.zeros((D,))
+        key = jax.random.PRNGKey(0)
+        count = 0
+        v_step = 0
+        for i in range(self.STEPS):
+            key, k = jax.random.split(key)
+            g = grad(x, k)
+            count += 1
+            if i < self.WARMUP:
+                m = 0.9 * m + 0.1 * g
+                v = 0.999 * v + 0.001 * jnp.square(g)
+                x = x - self.LR * m / (jnp.sqrt(v) + 1e-8)
+            else:
+                # identity + n=1: m_bar == local momentum, g_hat == g
+                m_prev = m
+                m = 0.9 * m + 0.1 * g
+                g_hat = (m - 0.9 * m_prev) / 0.1
+                # v updates on the first step >= k_var since the last one
+                if count - v_step >= k_var and count <= 8:
+                    v = 0.999 * v + 0.001 * jnp.square(g_hat)
+                    v_step = count
+                x = x - self.LR * m / (jnp.sqrt(v) + 1e-8)
+            np.testing.assert_allclose(xs[i], np.asarray(x), rtol=1e-5,
+                                       atol=1e-6)
+
+    def test_onebit_lamb_matches_layerwise_reference(self):
+        segs = SegmentInfo((512, 512, 1024))
+        opt = get_optimizer("onebit_lamb", compressor="identity")
+        xs, st = self._run(opt, segs=segs)
+        assert (np.asarray(st.scale) > 0).all()  # ratios frozen
+        grad = quad_grad(0)
+        x = jnp.zeros((D,))
+        m = v = jnp.zeros((D,))
+        key = jax.random.PRNGKey(0)
+        ids = np.repeat(np.arange(3), [512, 512, 1024])
+        frozen = None
+
+        def ratios(xv, uv):
+            r = np.ones(3, np.float32)
+            for s in range(3):
+                xn = np.linalg.norm(np.asarray(xv)[ids == s])
+                un = np.linalg.norm(np.asarray(uv)[ids == s])
+                r[s] = np.clip(xn / max(un, 1e-12), 0.05, 10.0) \
+                    if xn > 0 and un > 0 else 1.0
+            return r
+
+        for i in range(self.STEPS):
+            key, k = jax.random.split(key)
+            g = grad(x, k)
+            if i < self.WARMUP:
+                m = 0.9 * m + 0.1 * g
+                v = 0.999 * v + 0.001 * jnp.square(g)
+                u = m / (jnp.sqrt(v) + 1e-8)
+                r = ratios(x, u)
+                x = x - self.LR * u * jnp.asarray(r[ids])
+            else:
+                m = 0.9 * m + 0.1 * g
+                u = m / (jnp.sqrt(v) + 1e-8)
+                if frozen is None:
+                    frozen = ratios(x, u)
+                x = x - self.LR * u * jnp.asarray(frozen[ids])
+            np.testing.assert_allclose(xs[i], np.asarray(x), rtol=1e-5,
+                                       atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st.scale), frozen, rtol=1e-6)
+
+    def test_skipped_sync_defers_update(self):
+        """sync=False: params untouched, EF state untouched, momentum
+        accumulates; the following sync applies the mean EMA."""
+        opt = get_optimizer("zerone_adam", compressor="identity",
+                            sync_double_every=1, sync_base_interval=1,
+                            sync_max_interval=2)
+        assert opt.may_skip_sync
+        grad = quad_grad(1)
+        st = opt.init(D, 1)
+        x = rand(D, 9)
+        key = jax.random.PRNGKey(1)
+        x1, st1, _ = opt.compressed_update(grad(x, key), st, x,
+                                           jnp.float32(1e-2), sync=False)
+        np.testing.assert_array_equal(np.asarray(x1), np.asarray(x))
+        np.testing.assert_array_equal(np.asarray(st1.worker_err),
+                                      np.asarray(st.worker_err))
+        assert not np.array_equal(np.asarray(st1.m), np.asarray(st.m))
+        assert int(st1.count) == 1
+        # the deferred gradient is still in m: the next synced step moves x
+        x2, st2, _ = opt.compressed_update(grad(x1, key), st1, x1,
+                                           jnp.float32(1e-2), sync=True)
+        assert not np.array_equal(np.asarray(x2), np.asarray(x1))
+
+    def test_warmup_is_adam_for_all_optimizers(self):
+        """Without segment info every optimizer's warmup is bitwise
+        BertAdam (LAMB's trust ratio needs segments to act)."""
+        grad = quad_grad(2)
+        for name in list_optimizers():
+            opt = get_optimizer(name, compressor="identity")
+            st = opt.init(D, 1)
+            sta = adam_init(D)
+            x1 = x2 = jnp.zeros((D,))
+            key = jax.random.PRNGKey(2)
+            for _ in range(5):
+                key, k = jax.random.split(key)
+                g = grad(x1, k)
+                x1, st, _ = opt.warmup_update(g, st, x1, jnp.float32(1e-2))
+                x2, sta = adam_update(g, sta, x2, AdamConfig(),
+                                      jnp.float32(1e-2))
+                np.testing.assert_array_equal(np.asarray(x1),
+                                              np.asarray(x2)), name
+
+
+class TestZero1Parity:
+    """zero1_update vs the replicated compressed_update: bitwise-equal
+    masters on one device (satellite), for every registered optimizer."""
+
+    @pytest.mark.parametrize("name", ["onebit_adam", "zerone_adam",
+                                      "onebit_lamb"])
+    def test_flat_zero1_matches_replicated(self, name):
+        segs = SegmentInfo((1024, 1024))
+        opt = get_optimizer(name, compressor="onebit",
+                            compressor_kwargs={"block_size": 256})
+        grad = quad_grad(3)
+        # shared starting state after a simulated warmup
+        v0 = jnp.abs(rand(D, 11)) + 0.1
+        m0 = rand(D, 12, 0.1)
+        x0 = rand(D, 13)
+        st_r = opt.init(D, 1, segs.n)._replace(m=m0, v=v0)
+        st_z = opt.init_zero1(D, 1, segs.n)._replace(
+            m=m0, v_shard=v0, master_shard=x0)
+        key = jax.random.PRNGKey(3)
+        x_r = x0
+        for i in range(6):
+            key, k = jax.random.split(key)
+            g = grad(x_r, k)
+            x_r, st_r, _ = opt.compressed_update(
+                g, st_r, x_r, jnp.float32(1e-2), segs=segs)
+            xf, st_z, _ = opt.zero1_update(
+                g, st_z, jnp.float32(1e-2), segs=segs)
+            np.testing.assert_array_equal(np.asarray(st_z.master_shard),
+                                          np.asarray(x_r))
+            np.testing.assert_array_equal(np.asarray(st_z.m),
+                                          np.asarray(st_r.m))
+            np.testing.assert_array_equal(np.asarray(st_z.v_shard),
+                                          np.asarray(st_r.v))
+            np.testing.assert_array_equal(np.asarray(st_z.scale),
+                                          np.asarray(st_r.scale))
+
+    def test_step_level_zero1_matches_replicated_1dev(self):
+        """make_train_step layout='zero1' vs 'replicated' on a 1-device
+        mesh: identical master weights after compressed steps."""
+        from jax.flatten_util import ravel_pytree
+
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.train.step import (TrainStepConfig, init_opt_state,
+                                      init_zero1_opt_state, make_train_step)
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        shape = InputShape("t", 64, 4, "train")
+        stream = SyntheticStream(cfg, shape)
+        tsc = TrainStepConfig(optimizer="onebit_adam", compressor="onebit",
+                              block_size=512)
+        s_w = make_train_step(cfg, mesh,
+                              dataclasses.replace(tsc, stage="warmup"),
+                              donate=False)
+        s_c = make_train_step(cfg, mesh,
+                              dataclasses.replace(tsc, stage="compressed"),
+                              donate=False)
+        s_z = make_train_step(
+            cfg, mesh,
+            dataclasses.replace(tsc, stage="compressed", layout="zero1"),
+            donate=False)
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+        opt = init_opt_state(cfg, mesh, block=512)
+        for t in range(4):
+            params, opt, _ = s_w(params, opt, stream.batch_at(t),
+                                 jnp.float32(1e-3))
+        # convert replicated warmup state -> zero1 state (1 dev: no chunking)
+        z = init_zero1_opt_state(cfg, mesh, block=512)
+        flat, _ = ravel_pytree(params)
+        dp_len = z.master_shard.reshape(-1).shape[0]
+        master = jnp.pad(flat.astype(jnp.float32),
+                         (0, dp_len - flat.shape[0]))
+        z = z._replace(m=opt.m, v_shard=opt.v.reshape(z.v_shard.shape),
+                       master_shard=master.reshape(z.master_shard.shape),
+                       worker_err=opt.worker_err,
+                       server_err=opt.server_err, count=opt.count)
+        # one step from the SAME params/state: identical gradients, so the
+        # zero1 master must be bitwise equal to the replicated params
+        # (after this step the zero1 bf16 replica feeds slightly different
+        # gradients and the trajectories legitimately drift)
+        p_r, o_r, _ = s_c(params, opt, stream.batch_at(4),
+                          jnp.float32(1e-3))
+        p_z, z, mz = s_z(params, z, stream.batch_at(4), jnp.float32(1e-3))
+        flat_r, _ = ravel_pytree(p_r)
+        master = np.asarray(z.master_shard).reshape(-1)[:flat_r.shape[0]]
+        np.testing.assert_array_equal(master, np.asarray(flat_r))
+        # and the zero1 stage keeps training on its own bf16 trajectory
+        losses = [float(mz["loss"])]
+        for t in range(5, 8):
+            p_z, z, mz = s_z(p_z, z, stream.batch_at(t), jnp.float32(1e-3))
+            losses.append(float(mz["loss"]))
+        assert np.isfinite(losses).all()
+
+
+class TestSegments:
+    def test_segments_of_pads(self):
+        tree = {"a": jnp.zeros((3, 4)), "b": jnp.zeros((10,))}
+        segs = segments_of(tree, 32)
+        assert segs.sizes == (12, 10, 10)
+        assert segs.d == 32
+        ids = np.asarray(segs.ids())
+        assert ids.shape == (32,)
+        assert (np.bincount(ids) == [12, 10, 10]).all()
+
+    def test_no_padding_segment_when_exact(self):
+        tree = {"a": jnp.zeros((16,))}
+        assert segments_of(tree, 16).sizes == (16,)
+
+
+class TestWarmupSwitch:
+    def test_steps_mode(self):
+        sw = WarmupSwitch(mode="steps", warmup_steps=5)
+        assert not sw.compressed(4)
+        assert sw.compressed(5)
+
+    def test_auto_mode_freezes_on_plateau(self):
+        sw = WarmupSwitch(mode="auto", b2=0.9, threshold=0.96,
+                          lr_warmup_steps=5)
+        frozen_at = None
+        for t in range(200):
+            v = 100.0 * (0.9 ** min(t, 50)) + 1.0
+            sw.observe(t, {"v_l1": v})
+            if sw.compressed(t + 1) and frozen_at is None:
+                frozen_at = t + 1
+        assert frozen_at is not None and 50 <= frozen_at <= 76
+        assert sw.switch_step == frozen_at
+
+    def test_steps_mode_zero_warmup(self):
+        sw = WarmupSwitch(mode="steps", warmup_steps=0)
+        assert sw.compressed(0)
+
+
+class TestStepConfigNormalization:
+    def test_legacy_stage_strings(self):
+        from repro.train.step import TrainStepConfig
+        t = TrainStepConfig(stage="compressed_zero1").normalized()
+        assert (t.stage, t.layout) == ("compressed", "zero1")
+        t = TrainStepConfig(stage="compressed_hier").normalized()
+        assert (t.stage, t.topology) == ("compressed", "hier")
+
+    def test_legacy_opt_config_builds_onebit_adam(self):
+        from repro.train.step import TrainStepConfig
+        ocfg = OB.OneBitAdamConfig(
+            b1=0.8, compression=CompressionConfig(block_size=512))
+        opt = TrainStepConfig(opt=ocfg).build_optimizer()
+        assert opt.name == "onebit_adam"
+        assert opt.b1 == 0.8
+        assert opt.compressor.block_size == 512
+
+    def test_sync_false_requires_local_layout(self):
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.train.step import TrainStepConfig, make_train_step
+        cfg = get_config("internlm2-1.8b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(AssertionError):
+            make_train_step(cfg, mesh,
+                            TrainStepConfig(stage="compressed", sync=False))
