@@ -1,49 +1,67 @@
 """Benchmark: communication volume of the compressed allreduce
-(paper Fig. 3 / Sec. 6 / the "5x less end-to-end volume" claim).
+(paper Fig. 3 / Sec. 6 / the "5x less end-to-end volume" claim) — and
+the plan-vs-HLO validation gate (``--check-plans``).
 
 Measures the bytes that actually cross the interconnect by compiling the
 optimizer exchange on an 8-way mesh and parsing the collective operand
 bytes out of the optimized HLO — the wire format is real for EVERY
 registered compressor (packed uint8 + f32 scales for 1-bit; values +
-intra-block indices for top-k), so the reduction shows up in the compiled
-artifact, not in a simulation.
+16-bit intra-block indices for top-k), so the reduction shows up in the
+compiled artifact, not in a simulation.
 
-Also accounts for the hierarchical two-level schedule: the flat analytic
-``wire_bytes`` only describes the single-level exchange, while
-``compressed_allreduce_hierarchical`` crosses the cross-pod (DCI) hop at
-SERVER-CHUNK granularity (chunk = d/n_inner), compressed on BOTH outer
-legs (see core/comm.py). Per-pod, per exchange:
+Since the comm layer lowers every schedule through the ``repro.plan``
+IR, the same :class:`CommPlan` objects the executor ran can be priced
+analytically: ``--check-plans`` asserts, for every registered
+compressor x topology, that the cost model's predicted collective bytes
+(``plan.hlo_bytes()``) EXACTLY equal the bytes counted in the compiled
+HLO by ``repro.analysis.roofline``.  This is the invariant that keeps
+the α-β cost model (and therefore ``topology="auto"``) honest — CI runs
+it on every push and uploads the cost-model JSON as an artifact
+(``--json``).
 
-  hier:  n_inner * [wire(d/n_in)*(n_out-1)/n_out        (chunk a2a)
-                    + wire(d/(n_in*n_out))*(n_out-1)]   (chunk ag)
-  flat:  n_inner * [wire(d)*(n-1)/n + wire(d/n)*(n-1)] * (n_out-1)/n_out
-
-so the hierarchical win on the slow hop is ~n_inner× — the whole point
-of running the paper's server stage within the pod.
+Cross-pod (DCI) accounting comes from ``repro.plan.cost.cross_pod_bytes``
+over the same plans: the hierarchical schedule crosses the DCI at
+SERVER-CHUNK granularity (chunk = d/n_inner), so its per-pod DCI bytes
+shrink by ~n_inner x versus flat — the whole point of running the
+paper's server stage within the pod.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import subprocess
 import sys
 
 from repro.optim import get_compressor, list_compressors
+from repro.plan import (cross_pod_bytes, flat_schedule, get_cluster,
+                        hier_schedule, needs_outer_ef)
+
+D = 1 << 20          # 1M params
+N_FLAT = 8           # flat measurement mesh
+N_INNER, N_OUTER = 4, 2   # hier measurement mesh (pods x dp)
+BLOCK = 4096
 
 _MEASURE_CODE = """
 import json
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.analysis.roofline import analyze_compiled
-from repro.core.comm import compressed_allreduce
+from repro.core.comm import (compressed_allreduce,
+                             compressed_allreduce_hierarchical)
 from repro.launch.mesh import make_mesh
 from repro.optim import get_compressor
+from repro.plan.schedules import needs_outer_ef
 
-d, n, block = {d}, {n}, {block}
+d, block = {d}, {block}
+n, n_in, n_out = {n}, {n_in}, {n_out}
+topos = {topos!r}
 out = {{}}
 for kind in {kinds!r}:
-    mesh = make_mesh((n,), ("data",))
     comp = get_compressor(kind, block_size=block)
+
+    # --- flat: n-way single-level schedule -------------------------------
+    mesh = make_mesh((n,), ("data",))
 
     def body(x, we, se):
         o, nw, ns = compressed_allreduce(x[0], we[0], se[0], ("data",), comp)
@@ -56,51 +74,96 @@ for kind in {kinds!r}:
             jax.ShapeDtypeStruct((n, d), jnp.float32),
             jax.ShapeDtypeStruct((n, d // n), jnp.float32))
     rep = analyze_compiled(f.lower(*args).compile())
-    out[kind] = {{"bytes": rep.coll_bytes, "kinds": dict(rep.coll_by_kind)}}
+    out[f"flat/{{kind}}"] = {{"bytes": rep.coll_bytes,
+                              "kinds": dict(rep.coll_by_kind)}}
+
+    # --- hier: (n_out pods) x (n_in dp) two-level schedule ----------------
+    if "hier" not in topos:
+        continue
+    mesh2 = make_mesh((n_out, n_in), ("pod", "data"))
+    outer_ef = needs_outer_ef(comp)
+
+    def body2(x, we, se, oe):
+        res = compressed_allreduce_hierarchical(
+            x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
+            outer_axes=("pod",), cfg=comp,
+            outer_err=oe[0, 0] if outer_ef else None)
+        o, nw, ns = res[:3]
+        noe = res[3] if outer_ef else oe[0, 0]
+        return o[None, None], nw[None, None], ns[None, None], noe[None, None]
+
+    f2 = jax.jit(jax.shard_map(
+        body2, mesh=mesh2, in_specs=(P("pod", "data", None),) * 4,
+        out_specs=(P("pod", "data", None),) * 4, check_vma=False))
+    args2 = (jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
+             jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
+             jax.ShapeDtypeStruct((n_out, n_in, d // n_in), jnp.float32),
+             jax.ShapeDtypeStruct((n_out, n_in, d // n_in), jnp.float32))
+    rep2 = analyze_compiled(f2.lower(*args2).compile())
+    out[f"hier/{{kind}}"] = {{"bytes": rep2.coll_bytes,
+                              "kinds": dict(rep2.coll_by_kind)}}
 print(json.dumps(out))
 """
 
 
-def volume_for(d: int, n: int = 8, block: int = 4096, kinds=None):
-    """Measure compiled collective bytes in a subprocess with n forced host
-    devices (benchmarks themselves keep seeing the real single device)."""
+def measured_volumes(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
+                     n_out: int = N_OUTER, block: int = BLOCK, kinds=None,
+                     topologies=("flat", "hier")):
+    """Compiled collective bytes per (topology, compressor), measured in
+    a subprocess with forced host devices (benchmarks themselves keep
+    seeing the real single device). Each requested topology is a
+    separate XLA compile — ask only for what you read."""
     kinds = list(kinds or list_compressors())
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
+        str(max(n, n_in * n_out))
     src = os.path.join(os.path.dirname(__file__), "..", "src")
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     r = subprocess.run(
         [sys.executable, "-c",
-         _MEASURE_CODE.format(d=d, n=n, block=block, kinds=kinds)],
-        capture_output=True, text=True, env=env, timeout=900)
+         _MEASURE_CODE.format(d=d, n=n, n_in=n_in, n_out=n_out,
+                              block=block, kinds=kinds,
+                              topos=tuple(topologies))],
+        capture_output=True, text=True, env=env, timeout=1800)
     assert r.returncode == 0, r.stderr
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
-def hier_cross_pod_bytes(d: int, n_inner: int, n_outer: int, comp) -> int:
-    """Per-POD bytes crossing the cross-pod (DCI) hop for one
-    hierarchical exchange.  The outer legs run at SERVER-CHUNK
-    granularity (chunk = d/n_inner, see core/comm.py), on every inner
-    rank, both legs compressed."""
-    if n_outer <= 1:
-        return 0
-    chunk = d // n_inner
-    per_rank = (comp.wire_bytes(chunk) * (n_outer - 1) // n_outer  # a2a
-                + comp.wire_bytes(chunk // n_outer) * (n_outer - 1))  # ag
-    return n_inner * per_rank
+def predicted_plans(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
+                    n_out: int = N_OUTER, block: int = BLOCK, kinds=None):
+    """The SAME CommPlans the comm layer lowers, built offline."""
+    plans = {}
+    for kind in (kinds or list_compressors()):
+        comp = get_compressor(kind, block_size=block)
+        plans[f"flat/{kind}"] = flat_schedule(comp, d, n, ("data",))
+        plans[f"hier/{kind}"] = hier_schedule(
+            comp, d, n_in, n_out, ("data",), ("pod",),
+            outer_ef=needs_outer_ef(comp))
+    return plans
 
 
-def flat_cross_pod_bytes(d: int, n_inner: int, n_outer: int, comp) -> int:
-    """Per-POD bytes the flat schedule pushes over the DCI: every one of
-    the pod's n_inner ranks exchanges with the other pods' share of the
-    flat group ((n_out-1)/n_out of its a2a+ag traffic)."""
-    if n_outer <= 1:
-        return 0
-    n = n_inner * n_outer
-    per_rank = (comp.wire_bytes(d) * (n - 1) // n          # a2a send
-                + comp.wire_bytes(d // n) * (n - 1))       # ag send
-    cross_frac = (n_outer - 1) / n_outer
-    return int(n_inner * per_rank * cross_frac)
+def check_plans(verbose: bool = True):
+    """Assert predicted plan bytes == compiled HLO bytes for every
+    registered compressor x topology. Returns the comparison table."""
+    vols = measured_volumes()
+    plans = predicted_plans()
+    table = {}
+    failures = []
+    for key, plan in sorted(plans.items()):
+        want = plan.hlo_bytes()
+        got = vols[key]["bytes"]
+        ok = int(want) == int(got)
+        table[key] = {"predicted": int(want), "measured_hlo": int(got),
+                      "match": ok, "kinds": vols[key]["kinds"]}
+        if not ok:
+            failures.append(key)
+        if verbose:
+            mark = "PASS" if ok else "FAIL"
+            print(f"  [{mark}] {key:16s} predicted {int(want):>10d} "
+                  f"== HLO {int(got):>10d}")
+    assert not failures, \
+        f"cost-model bytes drifted from compiled HLO for: {failures}"
+    return table
 
 
 def endtoend_volume_ratio(warmup_ratio: float, compression: float = 32.0):
@@ -110,20 +173,22 @@ def endtoend_volume_ratio(warmup_ratio: float, compression: float = 32.0):
 
 
 def run(verbose: bool = True):
-    d = 1 << 20  # 1M params
+    d = D
     results = {}
-    vols = volume_for(d)
-    b_id = vols["identity"]["bytes"]
+    # hier numbers below come from the plans analytically; only flat
+    # needs the (expensive) compiled measurement here
+    vols = measured_volumes(topologies=("flat",))
+    b_id = vols["flat/identity"]["bytes"]
     results["uncompressed_bytes_per_dev"] = int(b_id)
     # per-compressor: compiled bytes + the registry's analytic wire bytes
     for kind in list_compressors():
-        comp = get_compressor(kind, block_size=4096)
-        b = vols[kind]["bytes"]
+        comp = get_compressor(kind, block_size=BLOCK)
+        b = vols[f"flat/{kind}"]["bytes"]
         results[f"{kind}_bytes_per_dev"] = int(b)
         results[f"{kind}_compression_x"] = round(b_id / max(b, 1), 2)
         results[f"{kind}_analytic_payload_ratio"] = round(
             4 * d / comp.wire_bytes(d), 2)
-    ratio = b_id / vols["onebit"]["bytes"]
+    ratio = b_id / vols["flat/onebit"]["bytes"]
     results["wire_compression_x"] = round(ratio, 2)
     # paper's end-to-end claim with BERT-Large warmup ratio 23K/152K
     w = 23_000 / 152_000
@@ -131,14 +196,16 @@ def run(verbose: bool = True):
         endtoend_volume_ratio(w, 16.0), 2)   # paper computes ~5x with 1/16
     results["our_endtoend_volume_x_fp32"] = round(
         endtoend_volume_ratio(w, ratio), 2)
-    # hierarchical schedule: cross-pod (DCI) accounting, 2 pods x 4 ranks
-    # (per-pod on both sides; topk is excluded from hier at runtime —
-    # its analytic row is what the EF-free legs WOULD cost)
-    n_inner, n_outer = 4, 2
+    # hierarchical schedule: cross-pod (DCI) accounting from the SAME
+    # plans the executor lowers, priced by repro.plan.cost
+    spec = get_cluster("ethernet-10g", n_inner=N_INNER, n_outer=N_OUTER)
+    plans = predicted_plans()
     for kind in list_compressors():
-        comp = get_compressor(kind, block_size=4096)
-        hier = hier_cross_pod_bytes(d, n_inner, n_outer, comp)
-        flat = flat_cross_pod_bytes(d, n_inner, n_outer, comp)
+        comp = get_compressor(kind, block_size=BLOCK)
+        hier = cross_pod_bytes(plans[f"hier/{kind}"], spec)
+        flat_plan = flat_schedule(comp, d, N_INNER * N_OUTER,
+                                  ("pod", "data"), tier="cross")
+        flat = cross_pod_bytes(flat_plan, spec)
         results[f"hier_cross_pod_bytes_{kind}"] = hier
         results[f"flat_cross_pod_bytes_{kind}"] = flat
         results[f"hier_dci_reduction_x_{kind}"] = round(
@@ -148,7 +215,7 @@ def run(verbose: bool = True):
         for k, v in results.items():
             print(f"  {k}: {v}")
         ok = ratio > 10.0
-        ok_hier = results["hier_dci_reduction_x_onebit"] > n_inner * 0.5
+        ok_hier = results["hier_dci_reduction_x_onebit"] > N_INNER * 0.5
         print(f"  [{'PASS' if ok else 'FAIL'}] compiled wire compression "
               f"{ratio:.1f}x > 10x")
         print(f"  [{'PASS' if ok_hier else 'FAIL'}] hierarchical schedule "
@@ -157,5 +224,40 @@ def run(verbose: bool = True):
     return results
 
 
+def cost_model_report():
+    """Auto-tuner tables for a few cluster presets (the CI artifact)."""
+    from repro.plan import autotune
+    report = {}
+    for cluster in ("uniform", "ethernet-10g", "infiniband"):
+        spec = get_cluster(cluster, n_inner=N_INNER, n_outer=N_OUTER)
+        res = autotune(spec, D, block_sizes=(1024, 4096, 16384))
+        report[cluster] = res.summary()
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check-plans", action="store_true",
+                    help="assert predicted plan bytes == compiled HLO "
+                         "bytes for every compressor x topology")
+    ap.add_argument("--json", default=None,
+                    help="write results + cost-model tables to this path")
+    args = ap.parse_args(argv)
+    out = {}
+    if args.check_plans:
+        print("== plan validation (predicted vs compiled HLO bytes) ==")
+        out["plan_check"] = check_plans()
+        out["cost_model"] = cost_model_report()
+        print("  all plans match the compiled HLO")
+    else:
+        out["volumes"] = run()
+        out["cost_model"] = cost_model_report()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return out
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -1,2 +1,4 @@
 from repro.analysis.roofline import (RooflineReport, analyze_compiled,  # noqa
                                      parse_hlo_costs)
+from repro.analysis.scaling import (comm_fraction, predict_point,  # noqa
+                                    predicted_scaling)

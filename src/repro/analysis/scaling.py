@@ -1,0 +1,99 @@
+"""Predicted throughput-scaling curves (the paper's Fig. 7/8 shape).
+
+Composes the α-β plan cost model (:mod:`repro.plan.cost`) with the
+analytic compute estimates (:mod:`repro.analysis.model_math`) to predict
+end-to-end training throughput for a described cluster — before ever
+touching the hardware.  This is the offline analogue of the paper's
+256-GPU BERT-Large measurement: on slow (Ethernet-class) cross-node
+links the uncompressed-Adam curve flattens as the allreduce dominates,
+while 1-bit compression keeps scaling — the ratio of the two curves is
+the paper's headline "up to 3.3x" number.
+
+``predicted_scaling`` holds the per-replica batch fixed (weak scaling,
+as in Fig. 7) and sweeps the number of pods; each point runs the
+auto-tuner so the compressed schedule also picks its best topology for
+that cluster size.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core.compression import padded_length
+from repro.plan.cost import ClusterSpec, get_cluster, predict_step_time
+from repro.plan.schedules import allreduce_schedule
+from repro.plan.tune import autotune
+
+
+def flat_param_dim(cfg: ArchConfig, tp: int = 1, n_dp: int = 1,
+                   block: int = 4096) -> int:
+    """Padded flat parameter length per model shard — what the optimizer
+    exchange actually moves (matches ``repro.train.step._flat_dim``)."""
+    from repro.train.step import _flat_dim  # lazy: step pulls in models
+    return _flat_dim(cfg, tp, n_dp, block)
+
+
+def predict_point(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
+                  spec: ClusterSpec, compressor: str = "onebit",
+                  block_size: int = 4096, tp: int = 1,
+                  d: Optional[int] = None) -> Dict[str, object]:
+    """One cluster size: predicted step time + throughput for the
+    uncompressed-Adam baseline and the auto-tuned compressed schedule."""
+    if d is None:
+        d = flat_param_dim(cfg, tp=tp, n_dp=spec.n_total, block=block_size)
+    shape = InputShape("scaling", seq_len,
+                       batch_per_replica * spec.n_total, "train")
+
+    # baseline: uncompressed dp-mean of the full gradient/momentum
+    base_axes = ("pod", "data") if spec.n_outer > 1 else ("data",)
+    base_tier = "cross" if spec.n_outer > 1 else "intra"
+    d_base = padded_length(d, spec.n_total, block_size)
+    base_plan = allreduce_schedule(d_base, spec.n_total, base_axes,
+                                   tier=base_tier)
+    base = predict_step_time(base_plan, spec, cfg, shape, tp)
+
+    tuned = autotune(spec, d, compressors=[compressor],
+                     block_sizes=[block_size])
+    comp = predict_step_time(tuned.best.plan, spec, cfg, shape, tp)
+    return {
+        "n_pods": spec.n_outer, "n_devices": spec.n_total * tp,
+        "cluster": spec.name, "topology": tuned.best.topology,
+        "d": d,
+        "t_step_adam": base["t_step"],
+        "t_step_compressed": comp["t_step"],
+        "t_comm_adam": base["t_comm"],
+        "t_comm_compressed": comp["t_comm"],
+        "t_compute": comp["t_compute"],
+        "tokens_per_s_adam": base.get("tokens_per_s", 0.0),
+        "tokens_per_s_compressed": comp.get("tokens_per_s", 0.0),
+        "speedup": base["t_step"] / comp["t_step"],
+    }
+
+
+def predicted_scaling(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
+                      cluster: str, n_inner: int,
+                      pod_counts: Sequence[int] = (1, 2, 4, 8, 16),
+                      compressor: str = "onebit", block_size: int = 4096,
+                      tp: int = 1) -> Dict[int, Dict[str, object]]:
+    """Weak-scaling sweep over pod counts on a named cluster preset.
+
+    Returns ``{n_pods: predict_point(...)}``.  On a bandwidth-starved
+    preset (``ethernet-10g``) the compressed/uncompressed speedup GROWS
+    with the pod count (Fig. 7/8); on ``uniform`` it stays near 1.
+    """
+    d = flat_param_dim(cfg, tp=tp, n_dp=n_inner * max(pod_counts),
+                       block=block_size)
+    out = {}
+    for n in pod_counts:
+        spec = get_cluster(cluster, n_inner=n_inner, n_outer=n)
+        out[n] = predict_point(cfg, seq_len, batch_per_replica, spec,
+                               compressor=compressor,
+                               block_size=block_size, tp=tp, d=d)
+    return out
+
+
+def comm_fraction(plan, spec: ClusterSpec, cfg: ArchConfig,
+                  shape: InputShape, tp: int = 1) -> float:
+    """Fraction of predicted step time spent in the exchange."""
+    p = predict_step_time(plan, spec, cfg, shape, tp)
+    return p["t_comm"] / p["t_step"] if p["t_step"] > 0 else 0.0

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import os
 import tempfile
+import warnings
 from typing import Any
 
 import jax
@@ -43,15 +44,27 @@ def save_pytree(path: str, tree: Any, step: int = 0) -> None:
             os.unlink(tmp)
 
 
-def load_pytree(path: str, like: Any):
-    """Restore into the structure of ``like`` (shapes must match)."""
+def load_pytree(path: str, like: Any, backfill: bool = False):
+    """Restore into the structure of ``like`` (shapes must match).
+
+    ``backfill=True`` fills template leaves absent from the archive with
+    the template's own values (and warns), so checkpoints written before
+    an optimizer-state field existed stay loadable — new EF slots (e.g.
+    ``outer_err``) initialise to their zeros template.  The default is
+    strict: a missing key is more often a wrong/corrupt checkpoint than
+    a schema migration, so opt in at the resume site."""
     with np.load(path) as data:
         step = int(data["__step__"]) if "__step__" in data else 0
         arrays = {k: data[k] for k in data.files if k != "__step__"}
     ref, treedef = _flatten_with_paths(like)
     missing = set(ref) - set(arrays)
     if missing:
-        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
-    leaves = [arrays[k] for k in ref]
+        if not backfill:
+            raise KeyError(
+                f"checkpoint missing keys: {sorted(missing)[:5]}...")
+        warnings.warn(f"checkpoint {path} missing "
+                      f"{sorted(missing)[:5]}; filling from the template "
+                      "(new optimizer-state fields start at their init)")
+    leaves = [arrays.get(k, ref[k]) for k in ref]
     restored = jax.tree_util.tree_unflatten(treedef, leaves)
     return restored, step

@@ -184,6 +184,9 @@ class OptimSpec:
     var_freeze_threshold: float = 0.96   # auto-mode ratio threshold
     optimizer_kwargs: Optional[dict] = None
     compressor_kwargs: Optional[dict] = None
+    # collective-schedule topology: "flat" | "hier" | "auto" ("auto" lets
+    # repro.plan.tune pick per cluster — see launch.train --cluster)
+    topology: str = "flat"
 
 
 _OPTIM_RECIPES: Dict[str, OptimSpec] = {}
@@ -223,6 +226,10 @@ for _spec in (
                                 "sync_double_every": 64,
                                 "sync_max_interval": 4}),
     OptimSpec(name="onebit_lamb", optimizer="onebit_lamb"),
+    # schedule topology picked by the repro.plan auto-tuner for the
+    # --cluster the driver is told about (flat on uniform fabrics, hier
+    # when cross-pod bandwidth is the bottleneck)
+    OptimSpec(name="onebit_adam_autotopo", topology="auto"),
 ):
     register_optim_recipe(_spec)
 

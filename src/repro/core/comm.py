@@ -1,11 +1,23 @@
 """Collectives for the compressed-optimizer family: the paper's
-``compressed_allreduce``, generalised over pluggable compressors.
+``compressed_allreduce``, generalised over pluggable compressors and
+lowered through the :mod:`repro.plan` IR.
 
 All functions here are meant to be called *inside* a ``shard_map`` body.
 ``axis_names`` is the tuple of mesh axes forming the data-parallel
 super-axis (e.g. ``("data",)`` single-pod, ``("pod", "data")`` multi-pod).
 
-The schedule is the paper's Figure 3, mapped onto TPU-native collectives:
+This module contains NO inline schedule bodies: every exchange — the
+paper's Fig. 3 flat schedule, the beyond-paper hierarchical two-level
+schedule, and the uncompressed warmup mean — is built as a declarative
+:class:`~repro.plan.ir.CommPlan` (``repro.plan.schedules``) and lowered
+by the generic executor (``repro.plan.executor``).  The SAME plan
+objects are priced by the α-β cost model (``repro.plan.cost``) and
+validated byte-for-byte against the compiled HLO in
+``benchmarks/comm_volume.py --check-plans``, so predicted and executed
+wire traffic cannot drift apart.
+
+The flat schedule is the paper's Figure 3, mapped onto TPU-native
+collectives:
 
   1. worker EF-compress of the local momentum        (Alg. 1 line 7)
   2. ``all_to_all`` of the packed payload chunks     (Fig. 3a — MPI_Alltoall)
@@ -14,23 +26,22 @@ The schedule is the paper's Figure 3, mapped onto TPU-native collectives:
   5. ``all_gather`` of the packed result             (Fig. 3c — MPI_Allgather)
 
 Each rank plays "server" for its own chunk, exactly as in the paper.
-
 The schedule never inspects the payload: a compressor hands back a tuple
-of element-ordered wire arrays (see ``repro.optim.compressors``), each of
-which is chunked, exchanged, and re-assembled independently.  The bytes
-that cross the interconnect are the compressor's real wire format, so the
-compiled HLO genuinely moves the compressed volume (~1/32 of float32 for
-1-bit at the default block size).
+of element-ordered wire arrays (see ``repro.optim.compressors``) whose
+declared ``wire_specs`` annotate the plan ops, so the bytes that cross
+the interconnect are the compressor's real wire format.
 
 ``cfg`` may be a :class:`repro.optim.compressors.Compressor` or a legacy
 :class:`repro.core.compression.CompressionConfig` (adapted on the fly).
 """
 from __future__ import annotations
 
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
+
+from repro.plan import executor as _exec
+from repro.plan import schedules as _sched
 
 AxisNames = Tuple[str, ...]
 
@@ -49,25 +60,19 @@ def axis_size(axis_names: Sequence[str]) -> int:
 
 
 def allreduce_mean(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
-    """Uncompressed baseline: mean over the dp super-axis (vanilla Adam)."""
-    if not axis_names:
+    """Uncompressed baseline: mean over the dp super-axis (vanilla Adam).
+
+    Flat (1-D) vectors — the optimizer exchange — lower through the plan
+    IR so the warmup hop is costable like every other schedule; other
+    shapes (scalars/metrics) take the plain pmean."""
+    axes = tuple(axis_names)
+    if not axes:
         return x
-    return jax.lax.pmean(x, tuple(axis_names))
-
-
-def _exchange_mean(payload, axes: AxisNames, n: int, comp) -> jax.Array:
-    """Fig. 3a+3b: chunk-exchange every payload leaf, decompress each
-    received chunk, average. Returns this rank's (d/n,) server chunk."""
-    recv = [jax.lax.all_to_all(p.reshape(n, -1), axes, split_axis=0,
-                               concat_axis=0, tiled=False) for p in payload]
-    vals = jax.vmap(lambda *leaves: comp.decompress(tuple(leaves)))(*recv)
-    return jnp.mean(vals, axis=0)
-
-
-def _gather_decompress(payload, axes: AxisNames, comp) -> jax.Array:
-    """Fig. 3c: all_gather every payload leaf, decompress the full vector."""
-    out = tuple(jax.lax.all_gather(p, axes, tiled=True) for p in payload)
-    return comp.decompress(out)
+    if x.ndim != 1:
+        return jax.lax.pmean(x, axes)
+    plan = _sched.allreduce_schedule(x.shape[0], axis_size(axes), axes)
+    out, _ = _exec.execute_plan(plan, None, x)
+    return out
 
 
 def compressed_allreduce(
@@ -93,26 +98,11 @@ def compressed_allreduce(
     n = axis_size(axes)
     d = x.shape[0]
     assert d % n == 0, (d, n)
-
-    # --- worker side -------------------------------------------------------
-    payload, new_worker_err = comp.ef_compress(x, worker_err)
-
-    if not axes:
-        # single-device degenerate case: server stage still runs (Alg. 1
-        # line 10 with n=1) so the numerics match the distributed path.
-        buf = comp.decompress(payload)
-        s_payload, new_server_err = comp.ef_compress(buf + 0.0, server_err)
-        return comp.decompress(s_payload), new_worker_err, new_server_err
-
-    # --- exchange + average (Fig. 3a/3b): rank j serves chunk j ------------
-    avg = _exchange_mean(payload, axes, n, comp)
-
-    # --- server-side EF compress (Alg. 1 line 10) ---------------------------
-    s_payload, new_server_err = comp.ef_compress(avg, server_err)
-
-    # --- all-gather the compressed result (Fig. 3c) -------------------------
-    out = _gather_decompress(s_payload, axes, comp)
-    return out, new_worker_err, new_server_err
+    plan = _sched.flat_schedule(comp, d, n, axes)
+    out, errs = _exec.execute_plan(plan, comp, x,
+                                   {"worker": worker_err,
+                                    "server": server_err})
+    return out, errs["worker"], errs["server"]
 
 
 def compressed_allreduce_hierarchical(
@@ -122,7 +112,8 @@ def compressed_allreduce_hierarchical(
     inner_axes: Sequence[str],
     outer_axes: Sequence[str],
     cfg,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    outer_err: Optional[jax.Array] = None,
+):
     """Beyond-paper: two-level compressed allreduce (intra-pod then
     cross-pod), with the cross-pod hop at SERVER-CHUNK granularity.
 
@@ -132,51 +123,45 @@ def compressed_allreduce_hierarchical(
     slow cross-pod ``outer_axes`` (DCI) — both legs carry the compressed
     wire format, and because only chunk-sized payloads cross the DCI the
     per-pod cross-pod bytes shrink by ~n_inner× versus the flat schedule
-    (an outer exchange of the full vector on every inner rank would move
-    just as many DCI bytes as the flat schedule — measured in
-    benchmarks/comm_volume.py).  Stage 1b then server-EF-compresses the
-    pod-mean chunk and all_gathers it within the pod (ICI, cheap).
+    (measured in benchmarks/comm_volume.py).  Stage 1b then
+    server-EF-compresses the pod-mean chunk and all_gathers it within the
+    pod (ICI, cheap).
 
-    The outer stage is EF-free: its residual is O(eps/n_pods) and does
-    not accumulate, because stage-1 EF sees the final value through the
-    next step's momentum.  That argument only holds for DENSE compressors
-    (1-bit quantises every coordinate); a sparse compressor (topk) would
-    systematically zero sub-threshold coordinates on the un-compensated
-    outer legs, so sparse + hierarchical is rejected until the outer hop
-    carries its own EF state (see ROADMAP).
+    For DENSE compressors the outer stage is EF-free: its residual is
+    O(eps/n_pods) and does not accumulate, because stage-1 EF sees the
+    final value through the next step's momentum.  A SPARSE compressor
+    (topk) would systematically zero sub-threshold coordinates on
+    un-compensated outer legs, so it requires ``outer_err`` — one
+    (D/n_inner,) error-feedback slot covering both cross-pod legs (the
+    all_to_all leg is error-compensated directly; the all_gather leg
+    folds its residual into the slot at this rank's sub-chunk offset for
+    the next exchange to re-send).
+
+    Returns ``(out, new_worker_err, new_server_err)`` — plus
+    ``new_outer_err`` as a fourth element when ``outer_err`` is given.
     """
     comp = _as_compressor(cfg)
     axes_in = tuple(inner_axes)
     axes_out = tuple(outer_axes)
     if not axes_out:
-        return compressed_allreduce(x, worker_err, server_err, axes_in,
-                                    comp)
-    assert comp.lossless or comp.dense, \
-        ("hierarchical topology needs a dense (or lossless) compressor: "
-         "the EF-free cross-pod legs would permanently drop the sparse "
-         f"residual of {type(comp).__name__}")
+        res = compressed_allreduce(x, worker_err, server_err, axes_in, comp)
+        return res if outer_err is None else res + (outer_err,)
+    outer_ef = _sched.needs_outer_ef(comp)
+    assert not outer_ef or outer_err is not None, \
+        ("hierarchical topology needs a dense (or lossless) compressor, "
+         "or an outer_err EF buffer: un-compensated cross-pod legs would "
+         f"permanently drop the sparse residual of {type(comp).__name__}")
 
     n_in = axis_size(axes_in)
     n_out = axis_size(axes_out)
-
-    # --- stage 1a: worker EF-compress + intra-pod exchange -> my chunk ---
-    payload, new_worker_err = comp.ef_compress(x, worker_err)
-    if axes_in:
-        chunk = _exchange_mean(payload, axes_in, n_in, comp)   # (D/n_in,)
-    else:
-        chunk = comp.decompress(payload)
-
-    # --- stage 2: cross-pod mean of the chunk (compressed both DCI legs) --
-    if comp.lossless:
-        chunk = jax.lax.pmean(chunk, axes_out)
-    else:
-        sub = _exchange_mean(comp.compress(chunk), axes_out, n_out, comp)
-        chunk = _gather_decompress(comp.compress(sub), axes_out, comp)
-
-    # --- stage 1b: server EF-compress + intra-pod all_gather -------------
-    s_payload, new_server_err = comp.ef_compress(chunk, server_err)
-    if axes_in:
-        out = _gather_decompress(s_payload, axes_in, comp)
-    else:
-        out = comp.decompress(s_payload)
-    return out, new_worker_err, new_server_err
+    d = x.shape[0]
+    plan = _sched.hier_schedule(comp, d, n_in, n_out, axes_in, axes_out,
+                                outer_ef=outer_ef)
+    errs = {"worker": worker_err, "server": server_err}
+    if outer_ef:
+        errs["outer"] = outer_err
+    out, errs = _exec.execute_plan(plan, comp, x, errs)
+    res = (out, errs["worker"], errs["server"])
+    if outer_err is None:
+        return res
+    return res + (errs.get("outer", outer_err),)

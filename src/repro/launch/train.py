@@ -34,8 +34,44 @@ from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.optim import WarmupSwitch, list_compressors, list_optimizers
-from repro.train.step import (TrainStepConfig, init_opt_state,
-                              make_train_step, mesh_axes)
+from repro.train.step import (TrainStepConfig, _flat_dim, init_opt_state,
+                              make_train_step, mesh_axes, pod_split)
+
+
+def resolve_topology(topology: str, cluster: str, cfg, mesh,
+                     compressor: str, block_size: int,
+                     compressor_kwargs=None, verbose: bool = True) -> str:
+    """``topology="auto"``: ask the repro.plan auto-tuner to pick the
+    cheapest schedule for the mesh + described cluster.
+
+    The mesh fixes the pod split (leading "pod" axis = n_outer); the
+    ``cluster`` preset fixes the link speeds. The recipe's compressor and
+    block size are pinned — only the topology is tuned here (the full
+    (topology x compressor x block) sweep is ``repro.plan.autotune``).
+    """
+    if topology != "auto":
+        return topology
+    from repro.plan import autotune, get_cluster
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
+    _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
+    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer)
+    d = _flat_dim(cfg, tp, max(n_inner * n_outer, 1), block_size)
+    topos = ("flat", "hier") if n_outer > 1 else ("flat",)
+    res = autotune(spec, d, compressors=[compressor],
+                   block_sizes=[block_size], topologies=topos,
+                   compressor_kwargs=compressor_kwargs)
+    if verbose:
+        print(f"[auto-topology] cluster={spec.name} "
+              f"({n_outer} pod(s) x {n_inner} dp): "
+              f"picked {res.best.topology!r} "
+              f"(t_exchange {res.best.t_exchange*1e3:.3f} ms, "
+              f"DCI {res.best.dci_bytes_per_pod} B/pod)")
+        for c in res.table:
+            if c.valid:
+                print(f"    {c.topology:5s} block={c.block_size:6d} "
+                      f"t={c.t_exchange*1e3:.3f} ms "
+                      f"dci={c.dci_bytes_per_pod}")
+    return res.best.topology
 
 
 def lr_schedule(step: int, base_lr: float, lr_warmup: int,
@@ -53,7 +89,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         ckpt: Optional[str] = None, resume: Optional[str] = None,
         stage_override: Optional[str] = None, log_file: Optional[str] = None,
         recipe: str = "onebit_adam", optimizer: Optional[str] = None,
-        compressor: Optional[str] = None, topology: str = "flat"):
+        compressor: Optional[str] = None, topology: Optional[str] = None,
+        cluster: str = "ethernet-10g"):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -73,8 +110,13 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
     if compressor:
         spec = dataclasses.replace(spec, compressor=compressor)
     spec = dataclasses.replace(spec, block_size=block_size)
+    if topology is None:
+        topology = spec.topology
     if stage_override == "compressed_hier":
         topology, stage_override = "hier", "compressed"
+    topology = resolve_topology(topology, cluster, cfg, mesh,
+                                spec.compressor, spec.block_size,
+                                spec.compressor_kwargs)
     base_tsc = TrainStepConfig(
         optimizer=spec.optimizer, compressor=spec.compressor,
         block_size=spec.block_size, opt_kwargs=spec.optimizer_kwargs,
@@ -89,7 +131,10 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                          hierarchical=(topology == "hier"))
     start_step = 0
     if resume:
-        (params, opt), start_step = load_pytree(resume, (params, opt))
+        # backfill: pre-plan-IR checkpoints lack new EF slots (outer_err);
+        # they start at their zeros template, with a warning listing them
+        (params, opt), start_step = load_pytree(resume, (params, opt),
+                                                backfill=True)
         print(f"resumed from {resume} at step {start_step}")
 
     steps_fns = {}
@@ -180,9 +225,14 @@ def main(argv=None):
     ap.add_argument("--compressor", default=None,
                     choices=[None] + list_compressors(),
                     help="override the recipe's compressor")
-    ap.add_argument("--topology", default="flat",
-                    choices=["flat", "hier"],
-                    help="hier = two-level cross-pod compressed allreduce")
+    ap.add_argument("--topology", default=None,
+                    choices=[None, "flat", "hier", "auto"],
+                    help="hier = two-level cross-pod compressed allreduce; "
+                         "auto = repro.plan tuner picks per --cluster; "
+                         "default = the recipe's topology")
+    ap.add_argument("--cluster", default="ethernet-10g",
+                    help="cluster preset for --topology auto "
+                         "(repro.plan.list_clusters())")
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -199,7 +249,7 @@ def main(argv=None):
         resume=args.resume, stage_override=args.stage,
         log_file=args.log_file, recipe=args.recipe,
         optimizer=args.optimizer, compressor=args.compressor,
-        topology=args.topology)
+        topology=args.topology, cluster=args.cluster)
 
 
 if __name__ == "__main__":

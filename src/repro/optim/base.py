@@ -52,6 +52,10 @@ class OptState(NamedTuple):
     count: jax.Array       # ()     i32
     v_step: jax.Array      # ()     i32 count at last variance update
     #                        (0/1 Adam's interval bookkeeping; 0 = never)
+    outer_err: jax.Array   # (D/n_inner,) f32 cross-pod EF slot: consumed
+    #                        by the hierarchical schedule's outer legs for
+    #                        SPARSE compressors; untouched zeros otherwise
+    #                        (sized like server_err)
 
 
 class ZeroOptState(NamedTuple):
@@ -60,10 +64,11 @@ class ZeroOptState(NamedTuple):
     v_shard: jax.Array       # (D/n,) f32
     master_shard: jax.Array  # (D/n,) f32
     worker_err: jax.Array    # (D,)   f32
-    server_err: jax.Array    # (D/n,) f32
+    server_err: jax.Array    # (D/n_srv,) f32 (n_srv = inner size on hier)
     scale: jax.Array         # (S,)   f32
     count: jax.Array         # ()     i32
     v_step: jax.Array        # ()     i32
+    outer_err: jax.Array     # (D/n_srv,) f32 cross-pod EF slot (see above)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,28 +137,42 @@ class TwoStageOptimizer:
     name: str = "?"
 
     # --- state ------------------------------------------------------------
-    def init(self, d: int, n_dp: int, n_segments: int = 1) -> OptState:
+    def init(self, d: int, n_dp: int, n_segments: int = 1,
+             n_inner: Optional[int] = None) -> OptState:
+        """Zeros state for a ``d``-element exchange over ``n_dp`` ranks.
+
+        For the HIERARCHICAL topology pass ``n_inner`` (the intra-pod dp
+        size): the server/outer EF chunks are then (d/n_inner,), matching
+        what the two-level schedule exchanges — the ``n_dp``-chunked
+        default only fits the flat topology (``repro.train.step``'s
+        ``init_opt_state(hierarchical=True)`` does this for the step)."""
         n = max(n_dp, 1)
-        assert d % n == 0, (d, n)
+        n_srv = max(n_inner or n, 1)
+        assert d % n == 0 and d % n_srv == 0, (d, n, n_srv)
         z = jnp.zeros
         return OptState(m=z((d,), jnp.float32), v=z((d,), jnp.float32),
                         worker_err=z((d,), jnp.float32),
-                        server_err=z((d // n,), jnp.float32),
+                        server_err=z((d // n_srv,), jnp.float32),
                         scale=z((n_segments,), jnp.float32),
-                        count=z((), jnp.int32), v_step=z((), jnp.int32))
+                        count=z((), jnp.int32), v_step=z((), jnp.int32),
+                        outer_err=z((d // n_srv,), jnp.float32))
 
-    def init_zero1(self, d: int, n_dp: int,
-                   n_segments: int = 1) -> ZeroOptState:
+    def init_zero1(self, d: int, n_dp: int, n_segments: int = 1,
+                   n_inner: Optional[int] = None) -> ZeroOptState:
+        """As :meth:`init`; ``v``/master shards stay (d/n_dp,) in every
+        topology, only the server/outer EF chunks follow ``n_inner``."""
         n = max(n_dp, 1)
-        assert d % n == 0, (d, n)
+        n_srv = max(n_inner or n, 1)
+        assert d % n == 0 and d % n_srv == 0, (d, n, n_srv)
         z = jnp.zeros
         return ZeroOptState(
             m=z((d,), jnp.float32), v_shard=z((d // n,), jnp.float32),
             master_shard=z((d // n,), jnp.float32),
             worker_err=z((d,), jnp.float32),
-            server_err=z((d // n,), jnp.float32),
+            server_err=z((d // n_srv,), jnp.float32),
             scale=z((n_segments,), jnp.float32), count=z((), jnp.int32),
-            v_step=z((), jnp.int32))
+            v_step=z((), jnp.int32),
+            outer_err=z((d // n_srv,), jnp.float32))
 
     # --- hooks (the whole per-algorithm surface) ---------------------------
     def _update_v(self, v: jax.Array, v_step: jax.Array,
@@ -263,14 +282,16 @@ class TwoStageOptimizer:
             }
             return x, state._replace(m=m_local, count=state.count + 1), stats
         if pod_axes:
-            m_bar, w_err, s_err = comm.compressed_allreduce_hierarchical(
-                m_local, state.worker_err, state.server_err,
-                inner_axes=dp_axes, outer_axes=pod_axes,
-                cfg=self.compressor)
+            m_bar, w_err, s_err, o_err = \
+                comm.compressed_allreduce_hierarchical(
+                    m_local, state.worker_err, state.server_err,
+                    inner_axes=dp_axes, outer_axes=pod_axes,
+                    cfg=self.compressor, outer_err=state.outer_err)
         else:
             m_bar, w_err, s_err = comm.compressed_allreduce(
                 m_local, state.worker_err, state.server_err,
                 tuple(dp_axes), self.compressor)
+            o_err = state.outer_err
 
         count = state.count + 1
         v, v_step = self._update_v(state.v, state.v_step, state.m, m_bar,
@@ -294,13 +315,15 @@ class TwoStageOptimizer:
         }
         new_state = state._replace(m=m_bar, v=v, worker_err=w_err,
                                    server_err=s_err, scale=scale,
-                                   count=count, v_step=v_step)
+                                   count=count, v_step=v_step,
+                                   outer_err=o_err)
         return new_x, new_state, stats
 
     # --- compression stage (ZeRO-1 layout) ---------------------------------
     def zero1_update(self, g_local: jax.Array, state: ZeroOptState,
                      lr: jax.Array, *,
                      dp_axes: Sequence[str] = (),
+                     pod_axes: Sequence[str] = (),
                      tp_axes: Sequence[str] = (),
                      segs: Optional[SegmentInfo] = None,
                      sync: bool = True,
@@ -308,28 +331,42 @@ class TwoStageOptimizer:
         """Same math on the dp-sharded layout. Returns the rebuilt bf16
         full params (one all_gather), the new state, and stats.
 
+        With ``pod_axes`` the momentum exchange runs the hierarchical
+        two-level schedule (``dp_axes`` = intra-pod, ``pod_axes`` =
+        cross-pod) while ``v``/master stay sharded over the FULL dp
+        super-axis (pod-major chunk order, matching the flat layout).
+
         ``sync=False`` behaves as in :meth:`compressed_update`: momentum
         accumulates per rank, the master update is deferred."""
+        all_axes = tuple(pod_axes) + tuple(dp_axes)
         m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
         if not sync:
-            if dp_axes:
+            if all_axes:
                 x_full = jax.lax.all_gather(
                     state.master_shard.astype(jnp.bfloat16),
-                    tuple(dp_axes), tiled=True)
+                    all_axes, tiled=True)
             else:
                 x_full = state.master_shard.astype(jnp.bfloat16)
             stats = {"v_l1": jnp.sum(jnp.abs(state.v_shard)),
                      "momentum_norm": jnp.linalg.norm(m_local)}
             return x_full, state._replace(m=m_local,
                                           count=state.count + 1), stats
-        m_bar, w_err, s_err = comm.compressed_allreduce(
-            m_local, state.worker_err, state.server_err,
-            tuple(dp_axes), self.compressor)
-        n = comm.axis_size(dp_axes)
+        if pod_axes:
+            m_bar, w_err, s_err, o_err = \
+                comm.compressed_allreduce_hierarchical(
+                    m_local, state.worker_err, state.server_err,
+                    inner_axes=dp_axes, outer_axes=pod_axes,
+                    cfg=self.compressor, outer_err=state.outer_err)
+        else:
+            m_bar, w_err, s_err = comm.compressed_allreduce(
+                m_local, state.worker_err, state.server_err,
+                tuple(dp_axes), self.compressor)
+            o_err = state.outer_err
+        n = comm.axis_size(all_axes)
         d = m_bar.shape[0]
         chunk = d // max(n, 1)
-        if dp_axes:
-            idx = jax.lax.axis_index(tuple(dp_axes)) * chunk
+        if all_axes:
+            idx = jax.lax.axis_index(all_axes) * chunk
         else:
             idx = 0
         my_mbar = jax.lax.dynamic_slice(m_bar, (idx,), (chunk,))
@@ -347,16 +384,16 @@ class TwoStageOptimizer:
         # each rank holds one chunk: segment norms need the dp psum too
         scale = self._update_scale(state.scale, state.master_shard, upd,
                                    seg_ids_fn, n_seg,
-                                   tuple(tp_axes) + tuple(dp_axes))
+                                   tuple(tp_axes) + all_axes)
         pe = self._scale_per_elem(scale, seg_ids_fn)
         if pe is not None:
             upd = upd * pe
         if self.weight_decay:
             upd = upd + self.weight_decay * state.master_shard
         new_master = state.master_shard - lr * upd
-        if dp_axes:
+        if all_axes:
             x_full = jax.lax.all_gather(new_master.astype(jnp.bfloat16),
-                                        tuple(dp_axes), tiled=True)
+                                        all_axes, tiled=True)
         else:
             x_full = new_master.astype(jnp.bfloat16)
         stats = {"v_l1": jnp.sum(jnp.abs(v_shard)),
@@ -365,7 +402,7 @@ class TwoStageOptimizer:
                                    master_shard=new_master,
                                    worker_err=w_err, server_err=s_err,
                                    scale=scale, count=count,
-                                   v_step=v_step)
+                                   v_step=v_step, outer_err=o_err)
         return x_full, new_state, stats
 
 

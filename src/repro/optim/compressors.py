@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core.compression import (CompressionConfig, DEFAULT_BLOCK,
                                     compress_onebit, decompress_onebit)
+from repro.plan.ir import WireSpec
 
 Payload = Tuple[jax.Array, ...]
 
@@ -50,8 +51,8 @@ class Compressor:
     lossless: bool = False
     # dense = every coordinate survives compression (possibly quantised);
     # sparse compressors (dense=False) drop coordinates and need error
-    # feedback on EVERY lossy hop — the EF-free outer legs of the
-    # hierarchical schedule reject them (see core/comm.py)
+    # feedback on EVERY lossy hop — the hierarchical schedule's cross-pod
+    # legs give them the dedicated ``outer`` EF slot (see core/comm.py)
     dense: bool = True
 
     def ef_compress(self, x: jax.Array, err: jax.Array
@@ -69,9 +70,17 @@ class Compressor:
     def decompress(self, payload: Payload) -> jax.Array:
         raise NotImplementedError
 
-    def wire_bytes(self, d: int) -> int:
-        """Bytes on the wire for a d-element float32 payload."""
+    def wire_specs(self, d: int) -> Tuple[WireSpec, ...]:
+        """Declared wire format (dtype + shape per payload leaf) for a
+        d-element f32 vector — the single source of truth consumed by the
+        plan executor (asserted against the real ``compress`` output) and
+        the α-β cost model (``repro.plan.cost``)."""
         raise NotImplementedError
+
+    def wire_bytes(self, d: int) -> int:
+        """Bytes on the wire for a d-element float32 payload (derived
+        from ``wire_specs`` — override the specs, not this)."""
+        return sum(ws.nbytes for ws in self.wire_specs(d))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,8 +105,9 @@ class OneBitCompressor(Compressor):
         return decompress_onebit(packed, scales, self.block_size,
                                  self.use_kernel)
 
-    def wire_bytes(self, d):
-        return d // 8 + 4 * (d // self.block_size)
+    def wire_specs(self, d):
+        return (WireSpec("uint8", (d // 8,)),
+                WireSpec("float32", (d // self.block_size,)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,8 +122,8 @@ class IdentityCompressor(Compressor):
     def decompress(self, payload):
         return payload[0]
 
-    def wire_bytes(self, d):
-        return 4 * d
+    def wire_specs(self, d):
+        return (WireSpec("float32", (d,)),)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,9 +131,12 @@ class TopKCompressor(Compressor):
     """Per-block magnitude top-k with error feedback.
 
     Each ``block_size`` block keeps its ``k = block_size // ratio`` largest
-    |x| entries as (float32 value, int32 intra-block index) pairs.
-    Intra-block indexing keeps the payload element-ordered and chunkable,
-    so the same all_to_all/all_gather schedule as 1-bit applies.
+    |x| entries as (float32 value, intra-block index) pairs.  Intra-block
+    indexing keeps the payload element-ordered and chunkable, so the same
+    all_to_all/all_gather schedule as 1-bit applies — and it bounds the
+    index range by ``block_size``, so indices pack into 16 bits whenever
+    ``block_size <= 65536`` (uint16: int16 would overflow at 32768+),
+    halving the index wire bytes; int32 is used only beyond that.
     """
 
     block_size: int = DEFAULT_BLOCK
@@ -139,25 +152,31 @@ class TopKCompressor(Compressor):
     def k(self) -> int:
         return max(self.block_size // self.ratio, 1)
 
+    @property
+    def index_dtype(self):
+        return jnp.uint16 if self.block_size <= 65536 else jnp.int32
+
     def compress(self, x):
         assert x.ndim == 1 and x.shape[0] % self.block_size == 0, (
             x.shape, self.block_size)
         xb = x.reshape(-1, self.block_size)
         _, idx = jax.lax.top_k(jnp.abs(xb), self.k)          # (nb, k) i32
         vals = jnp.take_along_axis(xb, idx, axis=1)           # (nb, k) f32
-        return vals.reshape(-1), idx.astype(jnp.int32).reshape(-1)
+        return vals.reshape(-1), idx.astype(self.index_dtype).reshape(-1)
 
     def decompress(self, payload):
         vals, idx = payload
         nb = vals.shape[0] // self.k
         vb = vals.reshape(nb, self.k)
-        ib = idx.reshape(nb, self.k)
+        ib = idx.reshape(nb, self.k).astype(jnp.int32)
         out = jnp.zeros((nb, self.block_size), vals.dtype)
         rows = jnp.arange(nb, dtype=jnp.int32)[:, None]
         return out.at[rows, ib].set(vb).reshape(-1)
 
-    def wire_bytes(self, d):
-        return (d // self.block_size) * self.k * (4 + 4)
+    def wire_specs(self, d):
+        kept = (d // self.block_size) * self.k
+        return (WireSpec("float32", (kept,)),
+                WireSpec(jnp.dtype(self.index_dtype).name, (kept,)))
 
 
 # --------------------------------------------------------------------------

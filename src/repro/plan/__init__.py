@@ -1,0 +1,35 @@
+"""repro.plan — declarative collective-schedule IR, α-β cost model, and
+cluster auto-tuner.
+
+  * :mod:`repro.plan.ir`        — CommPlan + typed collective ops
+  * :mod:`repro.plan.schedules` — flat / hierarchical / allreduce builders
+  * :mod:`repro.plan.executor`  — lower a plan to real JAX collectives
+  * :mod:`repro.plan.cost`      — ClusterSpec + α-β pricing + DCI bytes
+  * :mod:`repro.plan.tune`      — cheapest valid (topology x compressor x
+                                  block) for a cluster
+
+``repro.core.comm`` lowers every schedule through this package; the
+cost model prices the SAME plan objects the executor runs, and
+``benchmarks/comm_volume.py --check-plans`` pins the predictions to the
+compiled HLO byte-for-byte.
+"""
+from repro.plan.cost import (CLUSTERS, ClusterSpec, LinkSpec,
+                             cross_pod_bytes, get_cluster, list_clusters,
+                             op_time, plan_time, predict_step_time)
+from repro.plan.executor import execute_plan
+from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
+                           CollectiveOp, CommPlan, ReduceScatter, WireSpec)
+from repro.plan.schedules import (allreduce_schedule, flat_schedule,
+                                  hier_schedule, needs_outer_ef)
+from repro.plan.tune import (Candidate, TuneResult, autotune,
+                             build_candidate, enumerate_candidates)
+
+__all__ = [
+    "AllGather", "AllReduce", "AllToAll", "Broadcast", "CLUSTERS",
+    "Candidate", "ClusterSpec", "CollectiveOp", "CommPlan", "LinkSpec",
+    "ReduceScatter", "TuneResult", "WireSpec", "allreduce_schedule",
+    "autotune", "build_candidate", "cross_pod_bytes", "enumerate_candidates",
+    "execute_plan", "flat_schedule", "get_cluster", "hier_schedule",
+    "list_clusters", "needs_outer_ef", "op_time", "plan_time",
+    "predict_step_time",
+]

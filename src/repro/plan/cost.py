@@ -1,0 +1,205 @@
+"""α-β cost model over CommPlans + declarative cluster descriptions.
+
+A :class:`ClusterSpec` describes a two-tier cluster: ``n_outer`` pods of
+``n_inner`` data-parallel workers, with an ``intra`` link (in-pod:
+NVLink / ICI) and a ``cross`` link (between pods: TCP / InfiniBand /
+DCI).  Each link is an α-β pair — per-message latency α seconds and
+per-device bandwidth β bytes/s — the standard LogP-style model the
+paper's Sec. 6 analysis uses implicitly ("communication is the
+bottleneck on 10-100 Gbps Ethernet").
+
+Three consumers:
+
+  * ``plan_time(plan, spec)`` — predicted seconds for one execution of a
+    plan (each op priced by the α-β formula of its collective kind on
+    its tier's link);
+  * ``plan.hlo_bytes()`` + ``cross_pod_bytes`` — byte accounting matched
+    1:1 against the compiled HLO by ``comm_volume.py --check-plans``;
+  * ``predict_step_time`` — composes plan time with
+    ``analysis.model_math`` compute estimates into an absolute step-time
+    prediction (the Fig. 7/8 throughput-scaling curves come from
+    ``analysis.scaling``).
+
+Per-op α-β formulas (n = group size, S = per-device operand bytes,
+O = per-device gathered-result chunk bytes), each plus the cluster's
+per-collective launch overhead ``op_overhead``.  Latency terms use the
+concurrent-message model (pairwise exchanges overlap; gathers/reduces
+run recursive-doubling rounds); bandwidth terms count the bytes each
+device must serialize through its NIC:
+
+  AllToAll              α + S·(n-1)/n / β     pairwise, concurrent
+  AllGather      ⌈log2 n⌉·α + O·(n-1) / β     recursive doubling
+  AllReduce     2⌈log2 n⌉·α + 2S·(n-1)/n / β  reduce-scatter + gather
+  ReduceScatter  ⌈log2 n⌉·α + S·(n-1)/n / β
+  Broadcast      ⌈log2 n⌉·(α + S/β)           binomial tree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
+                           CollectiveOp, CommPlan, ReduceScatter, log2ceil)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One interconnect tier: α latency (s/message), β bandwidth
+    (bytes/s per device)."""
+
+    latency: float
+    bandwidth: float
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A two-tier cluster: ``n_outer`` pods x ``n_inner`` dp workers."""
+
+    name: str
+    intra: LinkSpec
+    cross: LinkSpec
+    n_inner: int
+    n_outer: int = 1
+    peak_flops: float = PEAK_FLOPS_BF16   # per device
+    hbm_bw: float = HBM_BW
+    # fixed cost per collective LAUNCH (kernel dispatch + group sync),
+    # independent of the link tier. This is what makes a 2-op flat
+    # schedule beat a 4-op hierarchical one on a uniform fabric where
+    # both move identical total bytes.
+    op_overhead: float = 5e-6
+
+    @property
+    def n_total(self) -> int:
+        return self.n_inner * self.n_outer
+
+    def link(self, tier: str) -> LinkSpec:
+        return self.intra if tier == "intra" else self.cross
+
+    @property
+    def uniform(self) -> bool:
+        return self.n_outer <= 1 or self.cross == self.intra
+
+
+# --------------------------------------------------------------------------
+# cluster presets (interconnect characters; sized by the caller)
+# --------------------------------------------------------------------------
+
+def _preset(name, intra, cross):
+    def build(n_inner: int, n_outer: int = 1, **kw) -> ClusterSpec:
+        return ClusterSpec(name=name, intra=intra, cross=cross,
+                           n_inner=n_inner, n_outer=n_outer, **kw)
+    return build
+
+
+CLUSTERS: Dict[str, object] = {
+    # single fast fabric everywhere (one TPU pod / NVSwitch island)
+    "uniform": _preset("uniform",
+                       LinkSpec(1e-6, 50e9), LinkSpec(1e-6, 50e9)),
+    # the paper's headline setting: fast in-node, 10 Gbps TCP between
+    "ethernet-10g": _preset("ethernet-10g",
+                            LinkSpec(1e-6, 50e9), LinkSpec(50e-6, 1.25e9)),
+    # 100 Gbps Ethernet (paper Fig. 8's middle case)
+    "ethernet-100g": _preset("ethernet-100g",
+                             LinkSpec(1e-6, 50e9), LinkSpec(20e-6, 12.5e9)),
+    # InfiniBand EDR-class cross-pod
+    "infiniband": _preset("infiniband",
+                          LinkSpec(1e-6, 50e9), LinkSpec(5e-6, 25e9)),
+    # TPU multi-pod: ICI in-pod, DCI between pods
+    "tpu-dci": _preset("tpu-dci",
+                       LinkSpec(1e-6, 50e9), LinkSpec(10e-6, 6.25e9)),
+}
+
+
+def get_cluster(name: str, n_inner: int, n_outer: int = 1,
+                **kw) -> ClusterSpec:
+    if name not in CLUSTERS:
+        raise KeyError(f"unknown cluster preset {name!r}; "
+                       f"registered: {sorted(CLUSTERS)}")
+    return CLUSTERS[name](n_inner=n_inner, n_outer=n_outer, **kw)
+
+
+def list_clusters():
+    return sorted(CLUSTERS)
+
+
+# --------------------------------------------------------------------------
+# alpha-beta op/plan pricing
+# --------------------------------------------------------------------------
+
+def op_time(op: CollectiveOp, spec: ClusterSpec) -> float:
+    """Predicted seconds for one collective op on its tier's link."""
+    n = op.n
+    if n <= 1 or not op.axes:
+        return 0.0
+    link = spec.link(op.tier)
+    a, b = link.latency, link.bandwidth
+    ov = spec.op_overhead
+    s = float(op.payload_bytes)
+    if isinstance(op, AllToAll):
+        return ov + a + s * (n - 1) / n / b
+    if isinstance(op, AllGather):
+        return ov + log2ceil(n) * a + s * (n - 1) / b
+    if isinstance(op, AllReduce):
+        return ov + 2 * log2ceil(n) * a + 2.0 * s * (n - 1) / n / b
+    if isinstance(op, ReduceScatter):
+        return ov + log2ceil(n) * a + s * (n - 1) / n / b
+    if isinstance(op, Broadcast):
+        return ov + log2ceil(n) * (a + s / b)
+    raise TypeError(f"op_time: unknown collective {type(op).__name__}")
+
+
+def plan_time(plan: CommPlan, spec: ClusterSpec) -> float:
+    """Predicted seconds for one execution of the plan (no overlap)."""
+    return sum(op_time(op, spec) for op in plan.ops)
+
+
+def cross_pod_bytes(plan: CommPlan, spec: ClusterSpec) -> int:
+    """Per-POD bytes crossing the cross-pod (DCI) link for one plan
+    execution.
+
+    Hierarchical cross ops run one group per inner rank (n == n_outer):
+    every wire byte crosses the DCI, on all ``n_inner`` concurrent
+    groups.  A flat op spanning the whole super-axis (n == n_total) puts
+    ``(n_outer-1)/n_outer`` of each rank's traffic on the DCI.
+    """
+    if spec.n_outer <= 1:
+        return 0
+    total = 0.0
+    for op in plan.ops:
+        if op.tier != "cross":
+            continue
+        frac = 1.0 if op.n <= spec.n_outer else \
+            (spec.n_outer - 1) / spec.n_outer
+        total += spec.n_inner * op.wire_send_bytes * frac
+    return int(total)
+
+
+# --------------------------------------------------------------------------
+# composing with the analytic compute model (Fig. 7/8 shape)
+# --------------------------------------------------------------------------
+
+def predict_step_time(plan: CommPlan, spec: ClusterSpec, cfg=None,
+                      shape=None, tp: int = 1,
+                      exchanges_per_step: int = 1) -> Dict[str, float]:
+    """Absolute step-time prediction: α-β comm time for the optimizer
+    exchange + 6ND compute time from ``analysis.model_math``.
+
+    Returns a dict with ``t_comm``, ``t_compute``, ``t_step`` (seconds)
+    and, when ``cfg``/``shape`` are given, ``tokens_per_s`` across the
+    whole cluster (``spec.n_total`` dp replicas x ``tp`` model shards).
+    """
+    t_comm = exchanges_per_step * plan_time(plan, spec)
+    out: Dict[str, float] = {"t_comm": t_comm, "t_compute": 0.0}
+    if cfg is not None and shape is not None:
+        from repro.analysis.model_math import model_flops  # lazy: no cycle
+        fl = model_flops(cfg, shape, tp)
+        total = fl["model_flops"] + fl["attn_flops"]
+        devices = spec.n_total * tp
+        out["t_compute"] = total / (devices * spec.peak_flops)
+        out["flops_total"] = total
+    out["t_step"] = out["t_compute"] + t_comm
+    if cfg is not None and shape is not None and out["t_step"] > 0:
+        tokens = shape.global_batch * shape.seq_len
+        out["tokens_per_s"] = tokens / out["t_step"]
+    return out

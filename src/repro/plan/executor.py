@@ -1,0 +1,150 @@
+"""Lower a :class:`~repro.plan.ir.CommPlan` to real JAX collectives.
+
+``execute_plan`` is meant to be called *inside* a ``shard_map`` body, on
+per-rank flat f32 vectors.  It walks the plan op by op, carrying
+
+  * ``value`` — the current represented f32 vector (its length follows
+    the plan's ``d_in``/``d_out`` chain), and
+  * ``errs``  — a dict of error-feedback buffers keyed by slot name
+    (``plan.err_slots`` lists the required keys).
+
+Compression points are implicit in the ops: an op with ``err_slot`` does
+an error-compensated ``comp.ef_compress`` (consuming and replacing that
+slot); an op without one does a plain ``comp.compress``; ``AllReduce`` /
+``ReduceScatter`` / ``Broadcast`` move the raw f32 value.
+
+The executor asserts, at trace time, that the arrays the compressor
+actually hands it match the op's declared ``payload`` WireSpecs — the
+same annotations the cost model prices — so a plan can never move bytes
+the coster didn't see (``comm_volume.py --check-plans`` closes the loop
+against the compiled HLO).
+
+Numerics are bit-for-bit the pre-IR inline schedules of
+``repro.core.comm``: chunk exchange is ``all_to_all`` per payload leaf +
+vmapped decompress + ``jnp.mean``; gather is tiled ``all_gather`` per
+leaf + decompress (see tests/test_distributed.py parity tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
+                           CollectiveOp, CommPlan, ReduceScatter)
+
+Errs = Dict[str, jax.Array]
+
+
+def _check_payload(op: CollectiveOp, payload) -> None:
+    got = tuple((jnp.asarray(p).dtype.name, tuple(p.shape)) for p in payload)
+    want = tuple((w.dtype, w.shape) for w in op.payload)
+    assert got == want, (
+        f"{op.kind}: compressor payload {got} != plan annotation {want} — "
+        "the compressor's wire_specs() and compress() disagree")
+
+
+def _compress(op: CollectiveOp, comp, value: jax.Array, errs: Errs
+              ) -> Tuple[Tuple[jax.Array, ...], Errs]:
+    if op.err_slot is not None:
+        payload, new_err = comp.ef_compress(value, errs[op.err_slot])
+        errs = dict(errs)
+        errs[op.err_slot] = new_err
+    else:
+        payload = comp.compress(value)
+    _check_payload(op, payload)
+    return payload, errs
+
+
+def _exec_all_to_all(op: AllToAll, comp, value, errs):
+    payload, errs = _compress(op, comp, value, errs)
+    if op.axes:
+        recv = [jax.lax.all_to_all(p.reshape(op.n, -1), op.axes,
+                                   split_axis=0, concat_axis=0, tiled=False)
+                for p in payload]
+        vals = jax.vmap(lambda *leaves: comp.decompress(tuple(leaves)))(*recv)
+        if op.combine == "mean":
+            value = jnp.mean(vals, axis=0)
+        else:
+            value = jnp.sum(vals, axis=0)
+    else:
+        # degenerate single-group: the compress/decompress roundtrip still
+        # runs so single-device numerics match the distributed path
+        value = comp.decompress(payload)
+    return value, errs
+
+
+def _exec_all_gather(op: AllGather, comp, value, errs):
+    if op.fold_err_slot is not None:
+        # EF for the compress side of a gather: park this rank's residual
+        # in the slot at this rank's chunk offset; the next exchange that
+        # consumes the slot re-sends it (no coordinate is dropped forever)
+        payload = comp.compress(value)
+        _check_payload(op, payload)
+        resid = value - comp.decompress(payload)
+        err = errs[op.fold_err_slot]
+        idx = (jax.lax.axis_index(op.axes) if op.axes else 0) * value.shape[0]
+        patch = jax.lax.dynamic_slice(err, (idx,), (value.shape[0],)) + resid
+        errs = dict(errs)
+        errs[op.fold_err_slot] = jax.lax.dynamic_update_slice(
+            err, patch, (idx,))
+    else:
+        payload, errs = _compress(op, comp, value, errs)
+    if op.axes:
+        out = tuple(jax.lax.all_gather(p, op.axes, tiled=op.tiled)
+                    for p in payload)
+        value = comp.decompress(out)
+    else:
+        value = comp.decompress(payload)
+    return value, errs
+
+
+def _exec_all_reduce(op: AllReduce, comp, value, errs):
+    if op.axes:
+        value = (jax.lax.pmean(value, op.axes) if op.reduce == "mean"
+                 else jax.lax.psum(value, op.axes))
+    return value, errs
+
+
+def _exec_reduce_scatter(op: ReduceScatter, comp, value, errs):
+    if op.axes:
+        value = jax.lax.psum_scatter(value, op.axes, scatter_dimension=0,
+                                     tiled=True)
+        if op.reduce == "mean":
+            value = value / op.n
+    return value, errs
+
+
+def _exec_broadcast(op: Broadcast, comp, value, errs):
+    if op.axes:
+        mine = jax.lax.axis_index(op.axes) == op.root
+        value = jax.lax.psum(jnp.where(mine, value, jnp.zeros_like(value)),
+                             op.axes)
+    return value, errs
+
+
+_EXEC = {
+    AllToAll: _exec_all_to_all,
+    AllGather: _exec_all_gather,
+    AllReduce: _exec_all_reduce,
+    ReduceScatter: _exec_reduce_scatter,
+    Broadcast: _exec_broadcast,
+}
+
+
+def execute_plan(plan: CommPlan, comp, value: jax.Array,
+                 errs: Optional[Errs] = None
+                 ) -> Tuple[jax.Array, Errs]:
+    """Run ``plan`` on this rank's ``value``; returns (result, new errs).
+
+    ``errs`` must contain exactly the keys in ``plan.err_slots`` (extra
+    keys pass through untouched).
+    """
+    errs = dict(errs or {})
+    missing = [s for s in plan.err_slots if s not in errs]
+    assert not missing, f"plan {plan.name!r} needs EF slots {missing}"
+    assert value.shape == (plan.d,), (value.shape, plan.d)
+    for op in plan.ops:
+        value, errs = _EXEC[type(op)](op, comp, value, errs)
+    return value, errs

@@ -1,0 +1,303 @@
+"""CommPlan — a declarative IR for collective schedules.
+
+A :class:`CommPlan` is a straight-line sequence of typed collective ops
+(:class:`AllToAll`, :class:`AllGather`, :class:`AllReduce`,
+:class:`ReduceScatter`, :class:`Broadcast`).  Every op is annotated with
+
+  * ``payload``   — the wire arrays the op moves, as :class:`WireSpec`
+                    (dtype, shape) pairs PER DEVICE.  For compressed
+                    schedules these are exactly the compressor's wire
+                    format (``Compressor.wire_specs``), so the same
+                    annotation is the single source of truth for the
+                    executor (what gets exchanged), the cost model (what
+                    it costs), and the HLO validation in
+                    ``benchmarks/comm_volume.py --check-plans``;
+  * ``axes``      — the mesh axes the op runs over (``()`` = degenerate
+                    single-group, executed as a local roundtrip);
+  * ``n``         — the static product of those axis sizes;
+  * ``tier``      — ``"intra"`` (fast in-pod links, e.g. NVLink/ICI) or
+                    ``"cross"`` (slow cross-pod links, e.g. TCP/DCI) —
+                    purely a cost-model annotation, the executor ignores
+                    it;
+  * ``err_slot``  — name of the error-feedback buffer consumed/produced
+                    at this op's compress point (``None`` = plain, non-EF
+                    compression).
+
+Plans are frozen, hashable pytree-free data: they are built at trace
+time from static shapes and closed over by jitted step functions.  The
+executor (:mod:`repro.plan.executor`) lowers a plan to real JAX
+collectives; the cost model (:mod:`repro.plan.cost`) prices it against a
+:class:`~repro.plan.cost.ClusterSpec` without touching a device.
+
+Adding a new collective op to the IR (see README "Planning & tuning"):
+subclass :class:`CollectiveOp` with a frozen dataclass, implement
+``d_out`` (value-length transition) and ``wire_send_bytes``/``hlo_bytes``
+(cost accounting), register an execution rule in
+``repro.plan.executor._EXEC``, and give it a latency/bandwidth formula in
+``repro.plan.cost.op_time``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import numpy as np
+
+TIERS = ("intra", "cross")
+
+
+@dataclasses.dataclass(frozen=True)
+class WireSpec:
+    """One payload leaf on the wire: dtype name + per-device shape."""
+
+    dtype: str
+    shape: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """Base collective: one hop of a schedule.
+
+    ``d_in`` is the length of the represented f32 vector ENTERING the op
+    (what the compressor saw); ``payload`` is what that vector looks like
+    on the wire after this op's compress point.
+    """
+
+    axes: Tuple[str, ...]
+    n: int
+    tier: str
+    payload: Tuple[WireSpec, ...]
+    d_in: int
+    err_slot: Optional[str] = None
+
+    # --- value-length transition -------------------------------------------
+    @property
+    def d_out(self) -> int:
+        return self.d_in
+
+    @property
+    def kind(self) -> str:
+        return type(self).__name__
+
+    @property
+    def payload_bytes(self) -> int:
+        """Per-device operand bytes (what the device hands the collective)."""
+        return sum(ws.nbytes for ws in self.payload)
+
+    # --- cost accounting ----------------------------------------------------
+    @property
+    def wire_send_bytes(self) -> float:
+        """Bytes one device actually puts on the wire (ring/pairwise)."""
+        raise NotImplementedError
+
+    @property
+    def hlo_bytes(self) -> float:
+        """Bytes as ``repro.analysis.roofline`` counts this op in compiled
+        HLO (all-to-all/reduce-scatter: 1x operand; all-gather: 1x result;
+        all-reduce: 2x operand). Must stay in lockstep with
+        ``roofline._line_cost`` — ``comm_volume.py --check-plans`` asserts
+        the two agree on real compiled programs."""
+        raise NotImplementedError
+
+    def validate(self) -> None:
+        assert self.tier in TIERS, self.tier
+        assert self.n >= 1, self.n
+        assert self.d_in >= 1, self.d_in
+        for ws in self.payload:
+            assert len(ws.shape) >= 1 and all(s >= 0 for s in ws.shape), ws
+
+
+@dataclasses.dataclass(frozen=True)
+class AllToAll(CollectiveOp):
+    """Chunk exchange + local combine: every device splits each payload
+    leaf into ``n`` leading chunks, sends chunk j to device j, then
+    decompresses the ``n`` received chunks and combines them (Fig. 3a+3b
+    of the paper). Value length: ``d_in -> d_in // n``."""
+
+    combine: str = "mean"
+
+    @property
+    def d_out(self) -> int:
+        return self.d_in // max(self.n, 1)
+
+    @property
+    def wire_send_bytes(self) -> float:
+        return self.payload_bytes * (self.n - 1) / max(self.n, 1)
+
+    @property
+    def hlo_bytes(self) -> float:
+        return float(self.payload_bytes)
+
+    def validate(self) -> None:
+        super().validate()
+        assert self.combine in ("mean", "sum"), self.combine
+        for ws in self.payload:
+            assert ws.shape[0] % max(self.n, 1) == 0, (
+                "all_to_all payload leaf must chunk evenly", ws, self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class AllGather(CollectiveOp):
+    """Gather every device's (compressed) chunk and decompress the full
+    vector (Fig. 3c). Value length: ``d_in -> d_in * n``.
+
+    ``fold_err_slot``: optional error-feedback for the COMPRESS side of a
+    gather — the compression residual of this rank's chunk is accumulated
+    into the named slot at this rank's chunk offset, to be re-sent by the
+    next exchange that consumes the slot (used by the hierarchical
+    schedule's cross-pod leg for sparse compressors)."""
+
+    tiled: bool = True
+    fold_err_slot: Optional[str] = None
+
+    @property
+    def d_out(self) -> int:
+        return self.d_in * max(self.n, 1)
+
+    @property
+    def wire_send_bytes(self) -> float:
+        # ring all-gather: each device forwards its chunk n-1 times
+        return self.payload_bytes * (self.n - 1)
+
+    @property
+    def hlo_bytes(self) -> float:
+        # roofline counts the gathered RESULT for all-gather
+        return float(self.payload_bytes * max(self.n, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class AllReduce(CollectiveOp):
+    """Uncompressed reduce over ``axes`` (the warmup baseline, and the
+    lossless fast path of the hierarchical cross-pod hop)."""
+
+    reduce: str = "mean"
+
+    @property
+    def wire_send_bytes(self) -> float:
+        # ring: reduce-scatter + all-gather, each (n-1)/n of the buffer
+        return 2.0 * self.payload_bytes * (self.n - 1) / max(self.n, 1)
+
+    @property
+    def hlo_bytes(self) -> float:
+        return 2.0 * self.payload_bytes
+
+    def validate(self) -> None:
+        super().validate()
+        assert self.reduce in ("mean", "sum"), self.reduce
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceScatter(CollectiveOp):
+    """Reduce + scatter: each device keeps its reduced chunk.
+    Value length: ``d_in -> d_in // n``."""
+
+    reduce: str = "mean"
+
+    @property
+    def d_out(self) -> int:
+        return self.d_in // max(self.n, 1)
+
+    @property
+    def wire_send_bytes(self) -> float:
+        return self.payload_bytes * (self.n - 1) / max(self.n, 1)
+
+    @property
+    def hlo_bytes(self) -> float:
+        return float(self.payload_bytes)
+
+    def validate(self) -> None:
+        super().validate()
+        assert self.reduce in ("mean", "sum"), self.reduce
+        assert self.d_in % max(self.n, 1) == 0, (self.d_in, self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class Broadcast(CollectiveOp):
+    """One-to-all from rank ``root`` of ``axes`` (tree; cost log2(n))."""
+
+    root: int = 0
+
+    @property
+    def wire_send_bytes(self) -> float:
+        return float(self.payload_bytes)
+
+    @property
+    def hlo_bytes(self) -> float:
+        return float(self.payload_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class CommPlan:
+    """A named, validated sequence of collective ops.
+
+    ``d`` is the represented f32 vector length entering the plan;
+    ``err_slots`` names the EF buffers the plan consumes (the executor
+    requires exactly these keys in its ``errs`` dict).
+    """
+
+    name: str
+    d: int
+    ops: Tuple[CollectiveOp, ...]
+
+    @property
+    def err_slots(self) -> Tuple[str, ...]:
+        out = []
+        for op in self.ops:
+            for s in (op.err_slot, getattr(op, "fold_err_slot", None)):
+                if s is not None and s not in out:
+                    out.append(s)
+        return tuple(out)
+
+    @property
+    def d_out(self) -> int:
+        d = self.d
+        for op in self.ops:
+            assert op.d_in == d, (self.name, op, d)
+            d = op.d_out
+        return d
+
+    def validate(self) -> "CommPlan":
+        d = self.d
+        for op in self.ops:
+            op.validate()
+            assert op.d_in == d, (
+                f"plan {self.name!r}: op {op.kind} expects d_in={op.d_in}, "
+                f"previous op left d={d}")
+            d = op.d_out
+        return self
+
+    # --- byte accounting (see cost.py for the alpha-beta TIME model) -------
+    def hlo_bytes(self, tier: Optional[str] = None) -> float:
+        """Collective bytes as the roofline HLO parser would count this
+        plan's compiled program (per device)."""
+        return sum(op.hlo_bytes for op in self.ops
+                   if tier is None or op.tier == tier)
+
+    def wire_send_bytes(self, tier: Optional[str] = None) -> float:
+        """Bytes one device puts on the wire executing the plan."""
+        return sum(op.wire_send_bytes for op in self.ops
+                   if tier is None or op.tier == tier)
+
+    def describe(self) -> str:
+        lines = [f"CommPlan {self.name!r} (d={self.d})"]
+        for op in self.ops:
+            leaves = ", ".join(f"{w.dtype}{list(w.shape)}" for w in op.payload)
+            ef = f" ef={op.err_slot}" if op.err_slot else ""
+            fold = getattr(op, "fold_err_slot", None)
+            ef += f" fold={fold}" if fold else ""
+            lines.append(
+                f"  {op.kind:13s} axes={op.axes} n={op.n} tier={op.tier}"
+                f" d={op.d_in}->{op.d_out} [{leaves}]{ef}")
+        return "\n".join(lines)
+
+
+def log2ceil(n: int) -> int:
+    return max(int(math.ceil(math.log2(max(n, 1)))), 0) if n > 1 else 0

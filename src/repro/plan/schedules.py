@@ -1,0 +1,101 @@
+"""Plan builders: the repo's collective schedules expressed as CommPlans.
+
+These are the ONLY places the paper's Fig. 3 schedule (and the
+beyond-paper hierarchical variant) are spelled out; ``repro.core.comm``
+lowers them through :mod:`repro.plan.executor`, and the cost model /
+auto-tuner price the very same objects.  A new schedule is a new builder
+here — no executor or comm-layer changes needed.
+
+Builders take the compressor (for ``wire_specs``) plus STATIC sizes and
+axis names; they never touch device state, so they are equally usable at
+trace time (inside shard_map) and offline (tuner, benchmarks).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+from repro.plan.ir import (AllGather, AllReduce, AllToAll, CommPlan,
+                           WireSpec)
+
+AxisNames = Tuple[str, ...]
+
+
+def _f32(d: int) -> Tuple[WireSpec, ...]:
+    return (WireSpec("float32", (d,)),)
+
+
+def needs_outer_ef(comp) -> bool:
+    """Sparse (coordinate-dropping) compressors need error feedback on
+    EVERY lossy hop; the hierarchical cross-pod legs are EF-free for
+    dense compressors (their residual is O(eps/n_pods) and does not
+    accumulate) but would systematically drop sub-threshold coordinates
+    of a sparse compressor — those get the ``outer`` EF slot."""
+    return not comp.dense and not comp.lossless
+
+
+def flat_schedule(comp, d: int, n: int, axes: Sequence[str],
+                  tier: str = "intra") -> CommPlan:
+    """The paper's Fig. 3 schedule: worker EF-compress -> all_to_all ->
+    local average -> server EF-compress -> all_gather.
+
+    ``tier`` is a cost-model annotation: pass "cross" when ``axes`` span
+    pods (the flat schedule pushes its full volume over the slowest link
+    in the group)."""
+    axes = tuple(axes)
+    n = max(n, 1)
+    assert d % n == 0, (d, n)
+    chunk = d // n
+    ops = (
+        AllToAll(axes=axes, n=n, tier=tier, payload=comp.wire_specs(d),
+                 d_in=d, err_slot="worker"),
+        AllGather(axes=axes, n=n, tier=tier, payload=comp.wire_specs(chunk),
+                  d_in=chunk, err_slot="server"),
+    )
+    return CommPlan(name=f"flat/{comp.name}", d=d, ops=ops).validate()
+
+
+def hier_schedule(comp, d: int, n_inner: int, n_outer: int,
+                  inner_axes: Sequence[str], outer_axes: Sequence[str],
+                  outer_ef: bool = False) -> CommPlan:
+    """Two-level schedule: the paper's server stage within the pod
+    (intra tier), the cross-pod hop at SERVER-CHUNK granularity (cross
+    tier, compressed on both legs, ~n_inner x fewer DCI bytes than flat).
+
+    Lossless compressors take a plain cross-pod all-reduce; lossy dense
+    ones run EF-free compressed legs (bitwise the pre-IR schedule);
+    sparse ones require ``outer_ef=True``, which adds the ``outer`` EF
+    slot (one (d/n_inner,) buffer): the all_to_all leg is
+    error-compensated and the all_gather leg folds its residual into the
+    same slot at this rank's sub-chunk offset.
+    """
+    inner_axes, outer_axes = tuple(inner_axes), tuple(outer_axes)
+    n_inner, n_outer = max(n_inner, 1), max(n_outer, 1)
+    assert d % (n_inner * n_outer) == 0, (d, n_inner, n_outer)
+    chunk = d // n_inner
+    sub = chunk // n_outer
+    ops = [AllToAll(axes=inner_axes, n=n_inner, tier="intra",
+                    payload=comp.wire_specs(d), d_in=d, err_slot="worker")]
+    if comp.lossless:
+        ops.append(AllReduce(axes=outer_axes, n=n_outer, tier="cross",
+                             payload=_f32(chunk), d_in=chunk))
+    else:
+        ops.append(AllToAll(axes=outer_axes, n=n_outer, tier="cross",
+                            payload=comp.wire_specs(chunk), d_in=chunk,
+                            err_slot="outer" if outer_ef else None))
+        ops.append(AllGather(axes=outer_axes, n=n_outer, tier="cross",
+                             payload=comp.wire_specs(sub), d_in=sub,
+                             fold_err_slot="outer" if outer_ef else None))
+    ops.append(AllGather(axes=inner_axes, n=n_inner, tier="intra",
+                         payload=comp.wire_specs(chunk), d_in=chunk,
+                         err_slot="server"))
+    name = f"hier/{comp.name}" + ("+outer_ef" if outer_ef else "")
+    return CommPlan(name=name, d=d, ops=tuple(ops)).validate()
+
+
+def allreduce_schedule(d: int, n: int, axes: Sequence[str],
+                       tier: str = "intra") -> CommPlan:
+    """Uncompressed dp-mean (the warmup stage / vanilla-Adam baseline)."""
+    return CommPlan(
+        name="allreduce", d=d,
+        ops=(AllReduce(axes=tuple(axes), n=max(n, 1), tier=tier,
+                       payload=_f32(d), d_in=d),)).validate()

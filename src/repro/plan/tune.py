@@ -1,0 +1,146 @@
+"""Cluster auto-tuner: pick the cheapest valid collective schedule.
+
+``autotune`` enumerates (topology x compressor x block_size) for a given
+:class:`~repro.plan.cost.ClusterSpec` + flat model dimension, prices
+every candidate with the α-β model, and returns the cheapest VALID plan.
+Validity is structural, not heuristic:
+
+  * ``hier`` needs a real pod split (``spec.n_outer > 1``); when it runs
+    a sparse compressor it gets the ``outer`` EF slot (one extra
+    (d/n_inner,) f32 buffer per rank, reported on the candidate);
+  * the flat dimension is re-padded per block size
+    (``padded_length(d, n_total, block)``), so candidates with different
+    block sizes are priced on the vector they would actually move.
+
+``launch.train --topology auto`` uses this with the compressor/block
+pinned by the recipe; benchmarks and tests sweep the full product.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.compression import padded_length
+from repro.plan import schedules
+from repro.plan.cost import ClusterSpec, cross_pod_bytes, plan_time
+from repro.plan.ir import CommPlan
+
+TOPOLOGIES = ("flat", "hier")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One priced point of the (topology x compressor x block) grid."""
+
+    topology: str
+    compressor: str
+    block_size: int
+    plan: Optional[CommPlan]
+    t_exchange: float            # alpha-beta seconds per sync exchange
+    hlo_bytes: float             # per-device collective bytes (HLO conv.)
+    dci_bytes_per_pod: int       # bytes/pod over the cross tier
+    d_padded: int
+    outer_ef: bool = False       # plan carries the outer EF slot
+    valid: bool = True
+    why: str = ""                # reason when invalid
+
+    def summary(self) -> Dict[str, object]:
+        return {"topology": self.topology, "compressor": self.compressor,
+                "block_size": self.block_size, "valid": self.valid,
+                "t_exchange_s": self.t_exchange,
+                "hlo_bytes": self.hlo_bytes,
+                "dci_bytes_per_pod": self.dci_bytes_per_pod,
+                "outer_ef": self.outer_ef,
+                "why": self.why}
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    best: Candidate
+    table: Tuple[Candidate, ...]   # every enumerated candidate, priced
+
+    def summary(self) -> Dict[str, object]:
+        return {"best": self.best.summary(),
+                "table": [c.summary() for c in self.table]}
+
+
+def _axes_for(spec: ClusterSpec, topology: str):
+    """Representative axis names for offline plan construction (the cost
+    model only needs group sizes; real axis names are bound by the
+    caller that executes the plan)."""
+    if topology == "hier":
+        return ("data",), ("pod",)
+    return (("pod", "data") if spec.n_outer > 1 else ("data",)), ()
+
+
+def build_candidate(spec: ClusterSpec, d: int, topology: str,
+                    compressor: str, block_size: int,
+                    compressor_kwargs: Optional[dict] = None) -> Candidate:
+    """Price one (topology, compressor, block_size) point."""
+    from repro.optim.compressors import get_compressor  # lazy: no cycle
+    kw = dict(compressor_kwargs or {})
+    kw["block_size"] = block_size
+    try:
+        comp = get_compressor(compressor, **kw)
+    except (AssertionError, TypeError, KeyError) as e:
+        return Candidate(topology, compressor, block_size, None,
+                         float("inf"), 0.0, 0, d, valid=False, why=str(e))
+    d_pad = padded_length(d, spec.n_total, block_size)
+    if topology == "hier":
+        if spec.n_outer <= 1:
+            return Candidate(topology, compressor, block_size, None,
+                             float("inf"), 0.0, 0, d_pad, valid=False,
+                             why="hier needs n_outer > 1")
+        inner_axes, outer_axes = _axes_for(spec, topology)
+        outer_ef = schedules.needs_outer_ef(comp)
+        plan = schedules.hier_schedule(comp, d_pad, spec.n_inner,
+                                       spec.n_outer, inner_axes, outer_axes,
+                                       outer_ef=outer_ef)
+    else:
+        axes, _ = _axes_for(spec, topology)
+        tier = "intra" if spec.n_outer <= 1 else "cross"
+        plan = schedules.flat_schedule(comp, d_pad, spec.n_total, axes,
+                                       tier=tier)
+        outer_ef = False
+    return Candidate(topology, compressor, block_size, plan,
+                     plan_time(plan, spec), plan.hlo_bytes(),
+                     cross_pod_bytes(plan, spec), d_pad,
+                     outer_ef=outer_ef)
+
+
+def enumerate_candidates(spec: ClusterSpec, d: int,
+                         compressors: Optional[Sequence[str]] = None,
+                         block_sizes: Sequence[int] = (1024, 4096, 16384),
+                         topologies: Sequence[str] = TOPOLOGIES,
+                         compressor_kwargs: Optional[dict] = None
+                         ) -> Tuple[Candidate, ...]:
+    from repro.optim.compressors import list_compressors
+    names = list(compressors) if compressors else list_compressors()
+    out = []
+    for topo in topologies:
+        assert topo in TOPOLOGIES, topo
+        for name in names:
+            for block in block_sizes:
+                out.append(build_candidate(spec, d, topo, name, block,
+                                           compressor_kwargs))
+    return tuple(out)
+
+
+def autotune(spec: ClusterSpec, d: int,
+             compressors: Optional[Sequence[str]] = None,
+             block_sizes: Sequence[int] = (1024, 4096, 16384),
+             topologies: Sequence[str] = TOPOLOGIES,
+             compressor_kwargs: Optional[dict] = None) -> TuneResult:
+    """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
+
+    Ties break toward ``flat`` (fewer stages, no outer EF state), then
+    toward the larger block size (fewer scale bytes).
+    """
+    table = enumerate_candidates(spec, d, compressors, block_sizes,
+                                 topologies, compressor_kwargs)
+    valid = [c for c in table if c.valid]
+    assert valid, f"no valid plan for {spec.name} (d={d})"
+    best = min(valid, key=lambda c: (c.t_exchange,
+                                     TOPOLOGIES.index(c.topology),
+                                     -c.block_size))
+    return TuneResult(best=best, table=table)

@@ -42,9 +42,13 @@ parameter size, n_dp = product of dp axis sizes, S = number of
 
   m, v        (tp, Dp)                 P("model", None)  — dp-replicated
   worker_err  (*dp_sizes, tp, Dp)      P(*dp, "model", None) — per dp rank
-  server_err  (*dp_sizes, tp, Dp/n_dp) P(*dp, "model", None) — per dp rank
+  server_err  (*dp_sizes, tp, Dp/n_s)  P(*dp, "model", None) — per dp rank
+  outer_err   (*dp_sizes, tp, Dp/n_s)  P(*dp, "model", None) — per dp rank
   scale       (tp, S)                  P("model", None)  — per-segment
   count       ()                       P()
+  [n_s = n_dp on "flat", the INNER dp size on "hier"; outer_err is the
+   hierarchical schedule's cross-pod EF slot, zeros/untouched unless the
+   compressor is sparse]
   ["local" layout: m, v, scale gain the leading (*dp_sizes,) dims]
 
 Replicating m/v over dp is paper-faithful (DeepSpeed's 1-bit Adam does not
@@ -146,6 +150,7 @@ class FlatOptState(NamedTuple):
     scale: jax.Array
     count: jax.Array
     v_step: jax.Array
+    outer_err: jax.Array
 
 
 def mesh_axes(mesh: Mesh, model_axis: str = "model"):
@@ -154,6 +159,27 @@ def mesh_axes(mesh: Mesh, model_axis: str = "model"):
     dp_sizes = tuple(mesh.shape[a] for a in dp_axes)
     tp = mesh.shape[model_axis] if model_axis in mesh.axis_names else 1
     return dp_axes, dp_sizes, tp
+
+
+def pod_split(dp_axes, dp_sizes):
+    """THE pod-axis convention, in one place: when the mesh has more
+    than one dp axis, the LEADING one is the pod (cross-DCI) axis and
+    the rest are intra-pod. Returns (inner_axes, outer_axes, n_inner,
+    n_outer); a single-dp-axis mesh is one pod (outer empty).
+
+    Everything that must agree on the split uses this — the step's
+    hierarchical axes, the EF-state chunk sizing, and the auto-topology
+    tuner's ClusterSpec (launch.train.resolve_topology)."""
+    if len(dp_axes) > 1:
+        n_inner = 1
+        for s in dp_sizes[1:]:
+            n_inner *= s
+        return (tuple(dp_axes[1:]), tuple(dp_axes[:1]), n_inner,
+                dp_sizes[0])
+    n_inner = 1
+    for s in dp_sizes:
+        n_inner *= s
+    return tuple(dp_axes), (), n_inner, 1
 
 
 def _param_shapes(cfg: ArchConfig, tp: int):
@@ -202,6 +228,7 @@ def opt_state_specs(mesh: Mesh, model_axis: str = "model",
         scale=state,
         count=P(),
         v_step=P(),
+        outer_err=per_rank,
     )
 
 
@@ -225,10 +252,9 @@ def init_opt_state(cfg: ArchConfig, mesh: Mesh, model_axis: str = "model",
     for s in dp_sizes:
         n_dp *= s
     dp_ = _flat_dim(cfg, tp, n_dp, block)
-    if hierarchical and len(dp_sizes) > 1:
-        n_dp = 1  # server chunks span the INNER axes only
-        for s in dp_sizes[1:]:
-            n_dp *= s
+    if hierarchical:
+        # server chunks span the INNER axes only
+        _, _, n_dp, _ = pod_split(dp_axes, dp_sizes)
     n_seg = _n_segments(cfg, tp, dp_)
     lead = tuple(dp_sizes) if layout == "local" else ()
     shapes = FlatOptState(
@@ -239,6 +265,7 @@ def init_opt_state(cfg: ArchConfig, mesh: Mesh, model_axis: str = "model",
         scale=(lead + (tp, n_seg), jnp.float32),
         count=((), jnp.int32),
         v_step=((), jnp.int32),
+        outer_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
     )
     if abstract:
         return FlatOptState(*(jax.ShapeDtypeStruct(s, d)
@@ -274,10 +301,11 @@ class ZeroFlatOptState(NamedTuple):
     v_shard: jax.Array       # (*dp, tp, Dp/n)          P(*dp, model, None)
     master_shard: jax.Array  # (*dp, tp, Dp/n)
     worker_err: jax.Array    # (*dp, tp, Dp)
-    server_err: jax.Array    # (*dp, tp, Dp/n)
+    server_err: jax.Array    # (*dp, tp, Dp/n_s)  (n_s = inner on "hier")
     scale: jax.Array         # (tp, S)                  P(model, None)
     count: jax.Array
     v_step: jax.Array
+    outer_err: jax.Array     # (*dp, tp, Dp/n_s) cross-pod EF slot
 
 
 def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
@@ -290,26 +318,37 @@ def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
         worker_err=P(*dp, model_axis, None),
         server_err=P(*dp, model_axis, None),
         scale=P(model_axis, None),
-        count=P(), v_step=P())
+        count=P(), v_step=P(),
+        outer_err=P(*dp, model_axis, None))
 
 
 def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
                          model_axis: str = "model", block: int = 4096,
-                         abstract: bool = False) -> ZeroFlatOptState:
+                         abstract: bool = False,
+                         hierarchical: bool = False) -> ZeroFlatOptState:
+    """ZeRO-1 global state (zeros). ``v``/master shard over the FULL dp
+    super-axis regardless of topology; with ``hierarchical=True`` the
+    server/outer EF chunks are sized by the INNER (intra-pod) dp size,
+    exactly as in :func:`init_opt_state`."""
     dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
     n_dp = 1
     for s in dp_sizes:
         n_dp *= s
     dp_ = _flat_dim(cfg, tp, n_dp, block)
+    n_srv = n_dp
+    if hierarchical:
+        # server chunks span the INNER axes only
+        _, _, n_srv, _ = pod_split(dp_axes, dp_sizes)
     n_seg = _n_segments(cfg, tp, dp_)
     shapes = ZeroFlatOptState(
         m=((tp, dp_), jnp.float32),
         v_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
         master_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
         worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
-        server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
+        server_err=(tuple(dp_sizes) + (tp, dp_ // n_srv), jnp.float32),
         scale=((tp, n_seg), jnp.float32),
-        count=((), jnp.int32), v_step=((), jnp.int32))
+        count=((), jnp.int32), v_step=((), jnp.int32),
+        outer_err=(tuple(dp_sizes) + (tp, dp_ // n_srv), jnp.float32))
     if abstract:
         return ZeroFlatOptState(*(jax.ShapeDtypeStruct(s, d)
                                   for s, d in shapes))
@@ -352,8 +391,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
 
     hier = tsc.topology == "hier" and len(dp_axes) > 1
     if hier:
-        assert tsc.layout != "zero1", "hier topology + zero1 unsupported"
-        inner_axes, outer_axes = dp_axes[1:], dp_axes[:1]
+        inner_axes, outer_axes, _, _ = pod_split(dp_axes, dp_sizes)
     else:
         inner_axes, outer_axes = dp_axes, ()
     # padding basis: the flat vector must chunk into n_dp_total * block in
@@ -402,10 +440,11 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                 worker_err=opt.worker_err.reshape(-1),
                 server_err=opt.server_err.reshape(-1),
                 scale=opt.scale.reshape(-1), count=opt.count,
-                v_step=opt.v_step)
+                v_step=opt.v_step,
+                outer_err=opt.outer_err.reshape(-1))
             x_full, st, stats = optimizer.zero1_update(
-                g_flat, st, lr, dp_axes=dp_axes, tp_axes=tp_axes,
-                segs=segs, sync=tsc.sync)
+                g_flat, st, lr, dp_axes=inner_axes, pod_axes=outer_axes,
+                tp_axes=tp_axes, segs=segs, sync=tsc.sync)
             new_params = unravel(x_full[:d_r].astype(flat0.dtype))
             new_opt = ZeroFlatOptState(
                 m=st.m.reshape(opt.m.shape),
@@ -415,7 +454,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                 worker_err=st.worker_err.reshape(opt.worker_err.shape),
                 server_err=st.server_err.reshape(opt.server_err.shape),
                 scale=st.scale.reshape(opt.scale.shape),
-                count=st.count, v_step=st.v_step)
+                count=st.count, v_step=st.v_step,
+                outer_err=st.outer_err.reshape(opt.outer_err.shape))
             out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
                            for k, v in metrics.items()}
             v_l1 = stats["v_l1"]
@@ -433,7 +473,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
             worker_err=opt.worker_err.reshape(-1),
             server_err=opt.server_err.reshape(-1),
             scale=opt.scale.reshape(-1), count=opt.count,
-            v_step=opt.v_step)
+            v_step=opt.v_step,
+            outer_err=opt.outer_err.reshape(-1))
         x = jnp.pad(flat0, (0, d_pad - d_r))
 
         if tsc.stage == "warmup":
@@ -452,7 +493,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
             worker_err=st.worker_err.reshape(opt.worker_err.shape),
             server_err=st.server_err.reshape(opt.server_err.shape),
             scale=st.scale.reshape(opt.scale.shape),
-            count=st.count, v_step=st.v_step)
+            count=st.count, v_step=st.v_step,
+            outer_err=st.outer_err.reshape(opt.outer_err.shape))
 
         # metrics: mean over dp (a no-op while replicated; the honest
         # cross-rank mean in the "local" layout); v_l1 summed over model

@@ -75,9 +75,35 @@ class TestCompressorRegistry:
         assert get_compressor("identity").wire_bytes(D) == 4 * D
         ob = get_compressor("onebit", block_size=256)
         assert ob.wire_bytes(D) == D // 8 + 4 * (D // 256)
+        # block_size <= 65536: intra-block indices pack into 16 bits
         tk = get_compressor("topk", block_size=256, ratio=8)
-        assert tk.wire_bytes(D) == (D // 256) * 32 * 8
+        assert tk.wire_bytes(D) == (D // 256) * 32 * (4 + 2)
         assert tk.wire_bytes(D) < 4 * D
+
+    def test_topk_index_packing(self):
+        """Satellite: 16-bit intra-block indices whenever they fit
+        (block_size <= 65536), int32 beyond; wire_bytes must follow."""
+        import numpy as _np
+        small = get_compressor("topk", block_size=256, ratio=8)
+        assert small.index_dtype == jnp.uint16
+        payload = small.compress(rand(D, 4))
+        assert payload[1].dtype == jnp.uint16
+        # the packed payload must round-trip exactly: rebuild the sparse
+        # vector from the uint16 wire format in pure numpy and compare
+        x = rand(D, 5)
+        a = _np.asarray(small.decompress(small.compress(x)))
+        vals, idx = (
+            _np.asarray(p) for p in small.compress(x))
+        want = _np.zeros((D // 256, 256), _np.float32)
+        rows = _np.repeat(_np.arange(D // 256), small.k)
+        want[rows, idx.astype(_np.int64)] = vals
+        _np.testing.assert_array_equal(a, want.reshape(-1))
+        big = get_compressor("topk", block_size=131072, ratio=8)
+        assert big.index_dtype == jnp.int32
+        assert big.wire_bytes(1 << 20) == (1 << 20) // 8 * (4 + 4)
+        # 16-bit packing halves the index bytes vs the int32 format
+        kept = (D // 256) * small.k
+        assert small.wire_bytes(D) == kept * 4 + kept * 2
 
     def test_topk_keeps_largest(self):
         comp = get_compressor("topk", block_size=256, ratio=8)
@@ -418,6 +444,63 @@ class TestWarmupSwitch:
     def test_steps_mode_zero_warmup(self):
         sw = WarmupSwitch(mode="steps", warmup_steps=0)
         assert sw.compressed(0)
+
+    # --- variance-ratio auto-freeze boundary conditions (satellite) --------
+
+    def test_auto_mode_step_zero_never_compressed(self):
+        """Step 0 must always run warmup in auto mode: the ratio needs a
+        Delta-step history, which cannot exist yet."""
+        sw = WarmupSwitch(mode="auto", b2=0.9, threshold=0.96,
+                          lr_warmup_steps=0)
+        assert not sw.compressed(0)
+        # even an (absurd) immediately-flat signal cannot freeze at 0:
+        # observe(0) has a 1-element history < Delta+1
+        assert not sw.observe(0, {"v_l1": 1.0})
+        assert not sw.compressed(1)
+        assert sw.ratio is None
+
+    def test_auto_mode_exactly_at_threshold_freezes(self):
+        """The Sec. 7.1 rule is >= threshold: a ratio landing EXACTLY on
+        the threshold must freeze (and one epsilon below must not)."""
+        b2 = 0.9   # Delta = 10
+        # v_10 / v_0 == 96/100 == the 0.96 threshold double, exactly
+        for v10, expect_frozen in ((96.0, True), (95.9999, False)):
+            sw = WarmupSwitch(mode="auto", b2=b2, threshold=0.96,
+                              lr_warmup_steps=0)
+            frozen = False
+            for t in range(10):
+                frozen = sw.observe(t, {"v_l1": 100.0})
+                assert not frozen
+            frozen = sw.observe(10, {"v_l1": v10})
+            assert frozen == expect_frozen, (v10, sw.ratio)
+            if expect_frozen:
+                # first decidable step: history must cover Delta steps
+                assert sw.switch_step == 11
+                assert not sw.compressed(10) and sw.compressed(11)
+
+    def test_auto_mode_all_zero_variance_never_freezes(self):
+        """All-zero v (e.g. frozen/empty model): the ratio is undefined
+        (0/0) — the rule must neither freeze nor divide by zero."""
+        sw = WarmupSwitch(mode="auto", b2=0.9, threshold=0.96,
+                          lr_warmup_steps=0)
+        for t in range(50):
+            assert not sw.observe(t, {"v_l1": 0.0})
+        assert sw.switch_step is None
+        assert sw.ratio is None
+        assert not sw.compressed(50)
+
+    def test_auto_mode_respects_lr_warmup_gate(self):
+        """A flat variance during LR warmup must not trigger the freeze
+        before lr_warmup_steps, even though the ratio is over threshold."""
+        sw = WarmupSwitch(mode="auto", b2=0.9, threshold=0.96,
+                          lr_warmup_steps=30)
+        for t in range(30):
+            sw.observe(t, {"v_l1": 100.0})
+        assert sw.switch_step is None      # gated by LR warmup
+        assert sw.observe(30, {"v_l1": 100.0})
+        assert sw.switch_step == 31        # freeze applies from step+1
+        assert not sw.compressed(30)
+        assert sw.compressed(31)
 
 
 class TestStepConfigNormalization:

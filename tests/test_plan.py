@@ -1,0 +1,369 @@
+"""repro.plan subsystem tests: IR validation, plan/compressor wire-spec
+agreement, executor parity with the pre-IR inline schedules, the α-β
+cost model, DCI accounting, the auto-tuner, and predicted scaling."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import (compressed_allreduce,
+                             compressed_allreduce_hierarchical)
+from repro.optim import get_compressor, list_compressors
+from repro.plan import (AllGather, AllReduce, AllToAll, Broadcast,
+                        ClusterSpec, CommPlan, LinkSpec, ReduceScatter,
+                        WireSpec, allreduce_schedule, autotune,
+                        cross_pod_bytes, enumerate_candidates, execute_plan,
+                        flat_schedule, get_cluster, hier_schedule,
+                        list_clusters, needs_outer_ef, op_time, plan_time)
+
+D = 4096
+BLOCK = 256
+
+
+def rand(d, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(d,)).astype(np.float32) * scale)
+
+
+class TestIR:
+    def test_wire_spec_bytes(self):
+        assert WireSpec("float32", (8,)).nbytes == 32
+        assert WireSpec("uint8", (8,)).nbytes == 8
+        assert WireSpec("uint16", (8,)).nbytes == 16
+
+    @pytest.mark.parametrize("name", ["onebit", "identity", "topk"])
+    def test_wire_specs_match_compress_output(self, name):
+        """The declared wire format must be exactly what compress()
+        emits — the executor asserts this at trace time; here we pin it
+        for every registered compressor."""
+        comp = get_compressor(name, block_size=BLOCK)
+        x = rand(D, 1)
+        payload = comp.compress(x)
+        specs = comp.wire_specs(D)
+        assert len(payload) == len(specs)
+        for p, ws in zip(payload, specs):
+            assert p.dtype.name == ws.dtype, (name, p.dtype, ws)
+            assert tuple(p.shape) == ws.shape, (name, p.shape, ws)
+        assert comp.wire_bytes(D) == sum(ws.nbytes for ws in specs)
+
+    def test_plan_chaining_validated(self):
+        comp = get_compressor("onebit", block_size=BLOCK)
+        plan = flat_schedule(comp, D, 4, ("data",))
+        assert plan.d_out == D
+        assert plan.err_slots == ("worker", "server")
+        bad = CommPlan(name="bad", d=D, ops=(
+            AllToAll(axes=("data",), n=4, tier="intra",
+                     payload=comp.wire_specs(D), d_in=D),
+            AllGather(axes=("data",), n=4, tier="intra",
+                      payload=comp.wire_specs(D), d_in=D),  # wrong d_in
+        ))
+        with pytest.raises(AssertionError):
+            bad.validate()
+
+    def test_bad_tier_rejected(self):
+        with pytest.raises(AssertionError):
+            AllReduce(axes=("data",), n=2, tier="dci",
+                      payload=(WireSpec("float32", (8,)),),
+                      d_in=8).validate()
+
+    def test_flat_plan_bytes(self):
+        comp = get_compressor("onebit", block_size=BLOCK)
+        n = 4
+        plan = flat_schedule(comp, D, n, ("data",))
+        a2a, ag = plan.ops
+        assert a2a.payload_bytes == comp.wire_bytes(D)
+        assert ag.payload_bytes == comp.wire_bytes(D // n)
+        # HLO convention: a2a counts operands, ag counts the result
+        assert plan.hlo_bytes() == comp.wire_bytes(D) + \
+            n * comp.wire_bytes(D // n)
+
+    def test_hier_plan_structure(self):
+        comp = get_compressor("onebit", block_size=BLOCK)
+        plan = hier_schedule(comp, D, 4, 2, ("data",), ("pod",))
+        kinds = [op.kind for op in plan.ops]
+        assert kinds == ["AllToAll", "AllToAll", "AllGather", "AllGather"]
+        tiers = [op.tier for op in plan.ops]
+        assert tiers == ["intra", "cross", "cross", "intra"]
+        # lossless outer hop collapses to a plain allreduce
+        ident = get_compressor("identity")
+        plan_i = hier_schedule(ident, D, 4, 2, ("data",), ("pod",))
+        assert [op.kind for op in plan_i.ops] == \
+            ["AllToAll", "AllReduce", "AllGather"]
+
+    def test_hier_sparse_gets_outer_ef_slot(self):
+        comp = get_compressor("topk", block_size=BLOCK, ratio=8)
+        assert needs_outer_ef(comp)
+        plan = hier_schedule(comp, D, 4, 2, ("data",), ("pod",),
+                             outer_ef=True)
+        assert plan.err_slots == ("worker", "outer", "server")
+        # dense compressors keep the EF-free outer legs (bitwise parity
+        # with the pre-IR schedule)
+        ob = get_compressor("onebit", block_size=BLOCK)
+        assert not needs_outer_ef(ob)
+        assert hier_schedule(ob, D, 4, 2, ("data",), ("pod",)).err_slots \
+            == ("worker", "server")
+
+    def test_describe_mentions_every_op(self):
+        comp = get_compressor("topk", block_size=BLOCK, ratio=8)
+        txt = hier_schedule(comp, D, 4, 2, ("data",), ("pod",),
+                            outer_ef=True).describe()
+        assert "AllToAll" in txt and "AllGather" in txt
+        assert "ef=outer" in txt and "fold=outer" in txt
+
+
+class TestExecutorParity:
+    """The plan executor must reproduce the pre-IR inline schedules
+    bit-for-bit (single-device degenerate path here; the multi-device
+    shard_map parity lives in test_distributed.py)."""
+
+    def _legacy_flat_single(self, x, we, se, comp):
+        # verbatim pre-refactor core/comm.py single-device path
+        payload, new_worker_err = comp.ef_compress(x, we)
+        buf = comp.decompress(payload)
+        s_payload, new_server_err = comp.ef_compress(buf + 0.0, se)
+        return comp.decompress(s_payload), new_worker_err, new_server_err
+
+    @pytest.mark.parametrize("name", ["onebit", "identity", "topk"])
+    def test_single_device_bitwise(self, name):
+        comp = get_compressor(name, block_size=BLOCK)
+        x, we, se = rand(D, 2), rand(D, 3, 0.1), rand(D, 4, 0.1)
+        got = compressed_allreduce(x, we, se, (), comp)
+        want = self._legacy_flat_single(x, we, se, comp)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+    def test_ef_mass_conservation(self):
+        comp = get_compressor("topk", block_size=BLOCK, ratio=8)
+        x, we, se = rand(D, 6), rand(D, 7, 0.1), rand(D, 8, 0.1)
+        out, nw, ns = compressed_allreduce(x, we, se, (), comp)
+        np.testing.assert_allclose(np.asarray(out + nw + ns),
+                                   np.asarray(x + we + se), rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_missing_err_slot_raises(self):
+        comp = get_compressor("onebit", block_size=BLOCK)
+        plan = flat_schedule(comp, D, 1, ())
+        with pytest.raises(AssertionError, match="EF slots"):
+            execute_plan(plan, comp, rand(D), {"worker": rand(D, 1, 0.1)})
+
+    def test_payload_annotation_enforced(self):
+        """A plan whose payload annotation disagrees with the compressor
+        must fail at trace time, not silently move other bytes."""
+        comp = get_compressor("onebit", block_size=BLOCK)
+        wrong = CommPlan(name="wrong", d=D, ops=(
+            AllToAll(axes=(), n=1, tier="intra",
+                     payload=get_compressor("identity").wire_specs(D),
+                     d_in=D, err_slot="worker"),))
+        with pytest.raises(AssertionError, match="wire_specs"):
+            execute_plan(wrong, comp, rand(D),
+                         {"worker": jnp.zeros((D,))})
+
+    def test_hier_sparse_requires_outer_err(self):
+        comp = get_compressor("topk", block_size=BLOCK, ratio=8)
+        with pytest.raises(AssertionError, match="dense"):
+            compressed_allreduce_hierarchical(
+                jnp.zeros((D,)), jnp.zeros((D,)), jnp.zeros((D,)),
+                inner_axes=(), outer_axes=("pod",), cfg=comp)
+
+    def test_hier_degenerate_passthrough_returns_outer_err(self):
+        """No outer axes: falls back to flat, outer_err passes through."""
+        comp = get_compressor("topk", block_size=BLOCK, ratio=8)
+        x, we, se = rand(D, 2), rand(D, 3, 0.1), rand(D, 4, 0.1)
+        oe = rand(D, 5, 0.1)
+        out = compressed_allreduce_hierarchical(
+            x, we, se, inner_axes=(), outer_axes=(), cfg=comp,
+            outer_err=oe)
+        assert len(out) == 4
+        np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(oe))
+
+
+class TestCostModel:
+    def _spec(self, cross_bw, n_inner=4, n_outer=2, cross_lat=50e-6):
+        return ClusterSpec(name="t", intra=LinkSpec(1e-6, 50e9),
+                           cross=LinkSpec(cross_lat, cross_bw),
+                           n_inner=n_inner, n_outer=n_outer)
+
+    def test_op_time_formulas(self):
+        spec = self._spec(1.25e9)
+        a, b = spec.intra.latency, spec.intra.bandwidth
+        ov = spec.op_overhead
+        pl = (WireSpec("float32", (1024,)),)
+        s = 4096.0
+        a2a = AllToAll(axes=("data",), n=4, tier="intra", payload=pl,
+                       d_in=1024)
+        assert op_time(a2a, spec) == pytest.approx(ov + a + s * 3 / 4 / b)
+        ag = AllGather(axes=("data",), n=4, tier="intra", payload=pl,
+                       d_in=1024)
+        assert op_time(ag, spec) == pytest.approx(ov + 2 * a + s * 3 / b)
+        ar = AllReduce(axes=("data",), n=4, tier="intra", payload=pl,
+                       d_in=1024)
+        assert op_time(ar, spec) == pytest.approx(
+            ov + 4 * a + 2 * s * 3 / 4 / b)
+        rs = ReduceScatter(axes=("data",), n=4, tier="intra", payload=pl,
+                           d_in=1024)
+        assert op_time(rs, spec) == pytest.approx(ov + 2 * a + s * 3 / 4 / b)
+        bc = Broadcast(axes=("data",), n=4, tier="intra", payload=pl,
+                       d_in=1024)
+        assert op_time(bc, spec) == pytest.approx(ov + 2 * (a + s / b))
+        # degenerate group: free
+        none = AllReduce(axes=(), n=1, tier="intra", payload=pl, d_in=1024)
+        assert op_time(none, spec) == 0.0
+
+    def test_cross_tier_priced_on_cross_link(self):
+        slow = self._spec(1e8)
+        fast = self._spec(50e9, cross_lat=1e-6)
+        pl = (WireSpec("float32", (1 << 18,)),)
+        op = AllReduce(axes=("pod",), n=2, tier="cross", payload=pl,
+                       d_in=1 << 18)
+        assert op_time(op, slow) > 10 * op_time(op, fast)
+
+    def test_hier_beats_flat_when_cross_is_slow(self):
+        comp = get_compressor("onebit", block_size=BLOCK)
+        d = 1 << 20
+        slow = self._spec(1.25e9)
+        flat = flat_schedule(comp, d, 8, ("pod", "data"), tier="cross")
+        hier = hier_schedule(comp, d, 4, 2, ("data",), ("pod",))
+        assert plan_time(hier, slow) < plan_time(flat, slow)
+        # uniform fabric: the 2-op flat schedule wins (fewer launches,
+        # same total bytes)
+        uni = ClusterSpec(name="u", intra=LinkSpec(1e-6, 50e9),
+                          cross=LinkSpec(1e-6, 50e9), n_inner=4, n_outer=2)
+        flat_u = flat_schedule(comp, d, 8, ("pod", "data"), tier="cross")
+        assert plan_time(flat_u, uni) < plan_time(hier, uni)
+
+    def test_cross_pod_bytes_closed_form(self):
+        """Plan-derived DCI accounting must equal the legacy closed-form
+        per-pod formulas (pre-IR benchmarks/comm_volume.py)."""
+        d, n_in, n_out = 1 << 20, 4, 2
+        spec = self._spec(1.25e9, n_inner=n_in, n_outer=n_out)
+        for name in list_compressors():
+            comp = get_compressor(name, block_size=4096)
+            chunk = d // n_in
+            if comp.lossless:
+                # pmean outer hop: ring allreduce of the chunk
+                want_hier = n_in * int(2 * 4 * chunk * (n_out - 1) / n_out)
+            else:
+                want_hier = n_in * (
+                    comp.wire_bytes(chunk) * (n_out - 1) // n_out
+                    + comp.wire_bytes(chunk // n_out) * (n_out - 1))
+            hier = hier_schedule(comp, d, n_in, n_out, ("data",), ("pod",),
+                                 outer_ef=needs_outer_ef(comp))
+            assert cross_pod_bytes(hier, spec) == want_hier, name
+            n = n_in * n_out
+            per_rank = (comp.wire_bytes(d) * (n - 1) / n
+                        + comp.wire_bytes(d // n) * (n - 1))
+            want_flat = int(n_in * per_rank * (n_out - 1) / n_out)
+            flat = flat_schedule(comp, d, n, ("pod", "data"), tier="cross")
+            assert cross_pod_bytes(flat, spec) == want_flat, name
+            # the whole point: ~n_inner x fewer DCI bytes
+            if not comp.lossless:
+                assert want_flat / max(cross_pod_bytes(hier, spec), 1) \
+                    > n_in * 0.5, name
+
+    def test_allreduce_schedule_prices_warmup(self):
+        spec = self._spec(1.25e9)
+        plan = allreduce_schedule(1 << 20, 8, ("pod", "data"), tier="cross")
+        t = plan_time(plan, spec)
+        # 2 x 4MiB x (7/8) over 1.25 GB/s ≈ 5.9 ms
+        assert 1e-3 < t < 1e-1
+
+    def test_cluster_presets(self):
+        assert set(list_clusters()) >= {"uniform", "ethernet-10g",
+                                        "infiniband"}
+        spec = get_cluster("ethernet-10g", n_inner=8, n_outer=4)
+        assert spec.n_total == 32
+        assert not spec.uniform
+        assert get_cluster("uniform", n_inner=8, n_outer=4).uniform
+        with pytest.raises(KeyError):
+            get_cluster("myrinet", n_inner=8)
+
+
+class TestAutoTuner:
+    def test_selects_hier_on_slow_cross_flat_on_uniform(self):
+        """Acceptance: low cross-pod bandwidth -> hier; uniform -> flat."""
+        d = 1 << 20
+        slow = get_cluster("ethernet-10g", n_inner=8, n_outer=4)
+        uni = get_cluster("uniform", n_inner=8, n_outer=4)
+        best_slow = autotune(slow, d, compressors=["onebit"],
+                             block_sizes=[4096]).best
+        best_uni = autotune(uni, d, compressors=["onebit"],
+                            block_sizes=[4096]).best
+        assert best_slow.topology == "hier"
+        assert best_uni.topology == "flat"
+
+    def test_hier_invalid_without_pods(self):
+        spec = get_cluster("ethernet-10g", n_inner=8, n_outer=1)
+        cands = enumerate_candidates(spec, 1 << 20,
+                                     compressors=["onebit"],
+                                     block_sizes=[4096])
+        hier = [c for c in cands if c.topology == "hier"]
+        assert hier and all(not c.valid for c in hier)
+        best = autotune(spec, 1 << 20, compressors=["onebit"],
+                        block_sizes=[4096]).best
+        assert best.topology == "flat"
+
+    def test_sparse_hier_candidate_carries_outer_ef(self):
+        spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
+        res = autotune(spec, 1 << 20, compressors=["topk"],
+                       block_sizes=[4096], topologies=["hier"])
+        assert res.best.valid and res.best.outer_ef
+        assert "outer" in res.best.plan.err_slots
+
+    def test_repads_per_block_size(self):
+        spec = get_cluster("uniform", n_inner=4, n_outer=1)
+        d = 4096 * 4 + 1   # not divisible by n*block
+        res = autotune(spec, d, compressors=["onebit"],
+                       block_sizes=[1024, 4096])
+        for c in res.table:
+            if c.valid:
+                assert c.d_padded % (spec.n_total * c.block_size) == 0
+                assert c.d_padded >= d
+
+    def test_full_sweep_all_valid_on_two_pods(self):
+        spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
+        res = autotune(spec, 1 << 20)
+        assert all(c.valid for c in res.table)
+        assert res.best.t_exchange == min(c.t_exchange for c in res.table)
+        summary = res.summary()
+        assert summary["best"]["topology"] == res.best.topology
+        assert len(summary["table"]) == len(res.table)
+
+
+class TestPredictedScaling:
+    def test_fig7_shape(self):
+        """Paper Fig. 7/8 shape: on Ethernet the compressed/uncompressed
+        speedup is large and grows from 1 pod to many; on a uniform
+        fabric it stays modest."""
+        from repro.analysis.scaling import predicted_scaling
+        from repro.configs import get_config
+        cfg = get_config("internlm2-1.8b")
+        eth = predicted_scaling(cfg, 512, 4, "ethernet-10g", n_inner=8,
+                                pod_counts=(1, 4))
+        uni = predicted_scaling(cfg, 512, 4, "uniform", n_inner=8,
+                                pod_counts=(1, 4))
+        assert eth[4]["speedup"] > eth[1]["speedup"]
+        assert eth[4]["speedup"] > 3 * uni[4]["speedup"]
+        assert eth[4]["topology"] == "hier"
+        assert uni[4]["topology"] == "flat"
+        # absolute times are positive and compute is cluster-independent
+        assert eth[4]["t_step_compressed"] > 0
+        assert eth[4]["t_compute"] == pytest.approx(uni[4]["t_compute"])
+
+    def test_predict_step_time_composes_model_math(self):
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.plan import predict_step_time
+        cfg = get_config("internlm2-1.8b")
+        shape = InputShape("t", 512, 32, "train")
+        comp = get_compressor("onebit")
+        spec = get_cluster("ethernet-10g", n_inner=8, n_outer=4)
+        plan = hier_schedule(comp, 1 << 24, spec.n_inner, spec.n_outer,
+                             ("data",), ("pod",))
+        out = predict_step_time(plan, spec, cfg, shape)
+        assert out["t_step"] == pytest.approx(
+            out["t_comm"] + out["t_compute"])
+        assert out["t_compute"] > 0 and out["t_comm"] > 0
+        assert out["tokens_per_s"] == pytest.approx(
+            512 * 32 / out["t_step"])

@@ -102,6 +102,27 @@ class TestCheckpoint:
                 np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
             assert jax.tree.structure(o2) == jax.tree.structure(opt)
 
+    def test_load_backfills_new_state_fields(self):
+        """Checkpoints written before an optimizer-state field existed
+        (e.g. pre-plan-IR, no ``outer_err``) must stay loadable with
+        backfill=True (the --resume path): leaves absent from the
+        archive fill from the template, with a warning. The default
+        stays strict — missing keys usually mean a wrong checkpoint."""
+        old = {"m": jnp.arange(4.0)}
+        template = {"m": jnp.zeros(4), "outer_err": jnp.full((2,), 9.0)}
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ck.npz")
+            save_pytree(path, old, step=3)
+            with pytest.warns(UserWarning, match="outer_err"):
+                got, step = load_pytree(path, template, backfill=True)
+            assert step == 3
+            np.testing.assert_array_equal(np.asarray(got["m"]),
+                                          np.arange(4.0))
+            np.testing.assert_array_equal(np.asarray(got["outer_err"]),
+                                          np.full((2,), 9.0))
+            with pytest.raises(KeyError):
+                load_pytree(path, template)
+
     def test_resume_continues_identically(self):
         """save -> load -> next step == uninterrupted next step."""
         cfg, mesh, ocfg, params, opt = small_setup()
