@@ -1,0 +1,206 @@
+"""Benchmark: measure per-tier α/β (and the per-collective launch
+overhead) from TIMED collectives, and emit the JSON that
+``repro.plan.cost.ClusterSpec.from_measured`` consumes.
+
+The α-β presets in ``repro.plan.cost`` are guessed interconnect
+characters; this sweep calibrates them on whatever fabric the process
+actually runs on (ROADMAP: "calibrate LinkSpec presets (and
+op_overhead) from a measured all_reduce sweep").  For every tier of the
+mesh (intra = the trailing dp axes, cross = the leading pod axis — the
+``pod_split`` convention) it times
+
+  * ``all_reduce``      t = ov + 2·⌈log2 n⌉·α + 2·S·(n-1)/n / β
+  * ``reduce_scatter``  t = ov +   ⌈log2 n⌉·α +   S·(n-1)/n / β
+
+over a geometric payload sweep, then solves the joint least-squares
+system for (ov, α_tier, 1/β_tier): two collective FAMILIES with
+different latency/bandwidth coefficients are what make the shared
+launch overhead ``ov`` separable from the per-message α — a
+single-collective sweep can only fit their sum.  The formulas are the
+SAME ones ``repro.plan.cost.op_time`` prices, so a spec built from the
+output reproduces the measured timings by construction.
+
+Run on real hardware (the numbers from forced-host CPU meshes are only
+good for exercising the machinery):
+
+  PYTHONPATH=src python benchmarks/comm_sweep.py --mesh 2x4 \\
+      --json measured.json
+  >>> spec = ClusterSpec.from_measured("measured.json")
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+# payload sweep: spans the latency- and bandwidth-dominated regimes
+SIZES = tuple(1 << k for k in range(12, 23, 2))   # 4 KiB .. 4 MiB f32 bytes
+ITERS = 8
+
+
+def _coeffs(op: str, n: int, nbytes: float):
+    """(overhead, latency, inv-bandwidth) coefficients of one sample row
+    — in lockstep with ``repro.plan.cost.op_time``."""
+    from repro.plan.ir import log2ceil
+    lg = log2ceil(n)
+    if op == "allreduce":
+        return 1.0, 2.0 * lg, 2.0 * nbytes * (n - 1) / n
+    if op == "reduce_scatter":
+        return 1.0, float(lg), nbytes * (n - 1) / n
+    raise KeyError(op)
+
+
+def fit_cluster(samples: Sequence[dict]) -> Dict[str, object]:
+    """Joint least-squares fit of (op_overhead, α/β per tier) from
+    timed samples ``{tier, op, n, nbytes, seconds}``.
+
+    One shared overhead column + two columns per tier; negative
+    solutions (noise) clamp to tiny positive values so the resulting
+    ClusterSpec stays physical."""
+    assert samples, "fit_cluster needs at least one timed sample"
+    assert all(s["n"] >= 2 for s in samples), (
+        "a size-1 group moves no bytes: its alpha/beta rows are all-zero "
+        "and the fit is rank-deficient (sweep() skips such tiers)")
+    tiers = sorted({s["tier"] for s in samples})
+    cols = 1 + 2 * len(tiers)
+    rows, ts = [], []
+    for s in samples:
+        ov, al, ib = _coeffs(s["op"], s["n"], float(s["nbytes"]))
+        row = [ov] + [0.0] * (cols - 1)
+        j = 1 + 2 * tiers.index(s["tier"])
+        row[j], row[j + 1] = al, ib
+        rows.append(row)
+        ts.append(float(s["seconds"]))
+    x, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ts), rcond=None)
+    out: Dict[str, object] = {
+        "op_overhead": float(max(x[0], 1e-9)), "tiers": {}}
+    for i, tier in enumerate(tiers):
+        alpha = float(max(x[1 + 2 * i], 1e-9))
+        inv_b = float(max(x[2 + 2 * i], 1e-15))
+        out["tiers"][tier] = {"latency": alpha, "bandwidth": 1.0 / inv_b}
+    return out
+
+
+def _timed(fn, *args) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))   # compile outside the clock
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep(mesh_shape: Sequence[int],
+          sizes: Sequence[int] = SIZES) -> List[dict]:
+    """Time all_reduce + reduce_scatter per tier on a real mesh."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+
+    axes = ("data",) if len(mesh_shape) == 1 else ("pod", "data")
+    mesh = make_mesh(tuple(mesh_shape), axes)
+    # a size-1 group can't be calibrated (it moves no bytes) — skip it
+    tiers = {}
+    if mesh.shape["data"] > 1:
+        tiers["intra"] = ("data",)
+    if "pod" in axes and mesh.shape["pod"] > 1:
+        tiers["cross"] = ("pod",)
+    lead = tuple(mesh.shape[a] for a in axes)
+    samples = []
+    for tier, taxes in tiers.items():
+        n = mesh.shape[taxes[0]]
+        for nbytes in sizes:
+            d = max(nbytes // 4, n)
+            d -= d % n
+            x = jnp.ones(lead + (d,), jnp.float32)
+
+            def ar(v):
+                return jax.shard_map(
+                    lambda u: jax.lax.psum(u.reshape(-1), taxes)[None],
+                    mesh=mesh, in_specs=P(*axes, None),
+                    out_specs=P(*axes, None), check_vma=False)(v)
+
+            def rs(v):
+                return jax.shard_map(
+                    lambda u: jax.lax.psum_scatter(
+                        u.reshape(-1), taxes, scatter_dimension=0,
+                        tiled=True)[None],
+                    mesh=mesh, in_specs=P(*axes, None),
+                    out_specs=P(*axes, None), check_vma=False)(v)
+
+            for op, fn in (("allreduce", jax.jit(ar)),
+                           ("reduce_scatter", jax.jit(rs))):
+                samples.append({"tier": tier, "op": op, "n": int(n),
+                                "nbytes": 4 * d,
+                                "seconds": _timed(fn, x)})
+    return samples
+
+
+def run(mesh_shape: Optional[Sequence[int]] = None,
+        sizes: Sequence[int] = SIZES,
+        json_path: Optional[str] = None, verbose: bool = True
+        ) -> Dict[str, object]:
+    import jax
+    if mesh_shape is None:   # harness default: one tier, all devices
+        mesh_shape = (jax.device_count(),)
+    samples = sweep(mesh_shape, sizes)
+    if not samples:
+        msg = (f"comm_sweep: every tier of mesh {tuple(mesh_shape)} has "
+               "size 1 — nothing to calibrate (need >= 2 devices; use "
+               "XLA_FLAGS=--xla_force_host_platform_device_count=N to "
+               "exercise the machinery on CPU)")
+        if verbose:
+            print(msg)
+        return {"skipped": msg}
+    fit = fit_cluster(samples)
+    n_outer = mesh_shape[0] if len(mesh_shape) > 1 else 1
+    n_inner = mesh_shape[-1]
+    tiers = fit["tiers"]
+    out = {
+        "name": f"measured-{jax.devices()[0].platform}",
+        # a sweep whose only measurable tier was the pod axis still
+        # yields one calibrated link; from_measured keys on "intra"
+        "intra": tiers.get("intra") or tiers.get("cross"),
+        "cross": tiers.get("cross") if "intra" in tiers else None,
+        "op_overhead": fit["op_overhead"],
+        "n_inner": int(n_inner), "n_outer": int(n_outer),
+        "samples": samples,
+    }
+    if verbose:
+        print("== comm_sweep (measured alpha-beta) ==")
+        for tier in ("intra", "cross"):
+            if out[tier]:
+                print(f"  {tier:5s} alpha {out[tier]['latency']*1e6:8.2f} us"
+                      f"  beta {out[tier]['bandwidth']/1e9:8.2f} GB/s")
+        print(f"  op_overhead {out['op_overhead']*1e6:.2f} us "
+              f"({len(samples)} samples)")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {json_path}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", default="1x8",
+                    help="dp mesh, e.g. 8 (one tier) or 2x4 (pod x data)")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated payload bytes (default 4K..4M)")
+    ap.add_argument("--json", default=None,
+                    help="write the ClusterSpec.from_measured JSON here")
+    args = ap.parse_args(argv)
+    shape = tuple(int(x) for x in args.mesh.split("x"))
+    sizes = tuple(int(x) for x in args.sizes.split(",")) if args.sizes \
+        else SIZES
+    return run(shape, sizes, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -24,6 +24,12 @@ over the same plans: the hierarchical schedule crosses the DCI at
 SERVER-CHUNK granularity (chunk = d/n_inner), so its per-pod DCI bytes
 shrink by ~n_inner x versus flat — the whole point of running the
 paper's server stage within the pod.
+
+``--check-plans`` also pins the PIPELINED executor (``repro.pipeline``,
+``n_buckets=2``): bucketing must rearrange WHEN bytes move, never how
+many, so ``PipelinedPlan.hlo_bytes()`` — the figure the pipelined cost
+mode prices — is asserted against the compiled HLO of the bucketed
+exchange with the same exactness as serial.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ D = 1 << 20          # 1M params
 N_FLAT = 8           # flat measurement mesh
 N_INNER, N_OUTER = 4, 2   # hier measurement mesh (pods x dp)
 BLOCK = 4096
+PIPE_BUCKETS = 2     # bucket count for the pipelined HLO pin
 
 _MEASURE_CODE = """
 import json
@@ -56,6 +63,7 @@ from repro.plan.schedules import needs_outer_ef
 d, block = {d}, {block}
 n, n_in, n_out = {n}, {n_in}, {n_out}
 topos = {topos!r}
+pipe_buckets = {pipe_buckets}
 out = {{}}
 for kind in {kinds!r}:
     comp = get_compressor(kind, block_size=block)
@@ -63,19 +71,26 @@ for kind in {kinds!r}:
     # --- flat: n-way single-level schedule -------------------------------
     mesh = make_mesh((n,), ("data",))
 
-    def body(x, we, se):
-        o, nw, ns = compressed_allreduce(x[0], we[0], se[0], ("data",), comp)
-        return o[None], nw[None], ns[None]
+    def measure_flat(key, n_buckets):
+        def body(x, we, se):
+            o, nw, ns = compressed_allreduce(x[0], we[0], se[0],
+                                             ("data",), comp,
+                                             n_buckets=n_buckets)
+            return o[None], nw[None], ns[None]
 
-    f = jax.jit(jax.shard_map(
-        body, mesh=mesh, in_specs=(P("data", None),) * 3,
-        out_specs=(P("data", None),) * 3, check_vma=False))
-    args = (jax.ShapeDtypeStruct((n, d), jnp.float32),
-            jax.ShapeDtypeStruct((n, d), jnp.float32),
-            jax.ShapeDtypeStruct((n, d // n), jnp.float32))
-    rep = analyze_compiled(f.lower(*args).compile())
-    out[f"flat/{{kind}}"] = {{"bytes": rep.coll_bytes,
-                              "kinds": dict(rep.coll_by_kind)}}
+        f = jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=(P("data", None),) * 3,
+            out_specs=(P("data", None),) * 3, check_vma=False))
+        args = (jax.ShapeDtypeStruct((n, d), jnp.float32),
+                jax.ShapeDtypeStruct((n, d), jnp.float32),
+                jax.ShapeDtypeStruct((n, d // n), jnp.float32))
+        rep = analyze_compiled(f.lower(*args).compile())
+        out[key] = {{"bytes": rep.coll_bytes,
+                     "kinds": dict(rep.coll_by_kind)}}
+
+    measure_flat(f"flat/{{kind}}", 1)
+    if pipe_buckets > 1:
+        measure_flat(f"pipe/flat/{{kind}}", pipe_buckets)
 
     # --- hier: (n_out pods) x (n_in dp) two-level schedule ----------------
     if "hier" not in topos:
@@ -83,32 +98,41 @@ for kind in {kinds!r}:
     mesh2 = make_mesh((n_out, n_in), ("pod", "data"))
     outer_ef = needs_outer_ef(comp)
 
-    def body2(x, we, se, oe):
-        res = compressed_allreduce_hierarchical(
-            x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
-            outer_axes=("pod",), cfg=comp,
-            outer_err=oe[0, 0] if outer_ef else None)
-        o, nw, ns = res[:3]
-        noe = res[3] if outer_ef else oe[0, 0]
-        return o[None, None], nw[None, None], ns[None, None], noe[None, None]
+    def measure_hier(key, n_buckets):
+        def body2(x, we, se, oe):
+            res = compressed_allreduce_hierarchical(
+                x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
+                outer_axes=("pod",), cfg=comp,
+                outer_err=oe[0, 0] if outer_ef else None,
+                n_buckets=n_buckets)
+            o, nw, ns = res[:3]
+            noe = res[3] if outer_ef else oe[0, 0]
+            return (o[None, None], nw[None, None], ns[None, None],
+                    noe[None, None])
 
-    f2 = jax.jit(jax.shard_map(
-        body2, mesh=mesh2, in_specs=(P("pod", "data", None),) * 4,
-        out_specs=(P("pod", "data", None),) * 4, check_vma=False))
-    args2 = (jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
-             jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
-             jax.ShapeDtypeStruct((n_out, n_in, d // n_in), jnp.float32),
-             jax.ShapeDtypeStruct((n_out, n_in, d // n_in), jnp.float32))
-    rep2 = analyze_compiled(f2.lower(*args2).compile())
-    out[f"hier/{{kind}}"] = {{"bytes": rep2.coll_bytes,
-                              "kinds": dict(rep2.coll_by_kind)}}
+        f2 = jax.jit(jax.shard_map(
+            body2, mesh=mesh2, in_specs=(P("pod", "data", None),) * 4,
+            out_specs=(P("pod", "data", None),) * 4, check_vma=False))
+        args2 = (jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
+                 jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
+                 jax.ShapeDtypeStruct((n_out, n_in, d // n_in),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((n_out, n_in, d // n_in),
+                                      jnp.float32))
+        rep2 = analyze_compiled(f2.lower(*args2).compile())
+        out[key] = {{"bytes": rep2.coll_bytes,
+                     "kinds": dict(rep2.coll_by_kind)}}
+
+    measure_hier(f"hier/{{kind}}", 1)
+    if pipe_buckets > 1:
+        measure_hier(f"pipe/hier/{{kind}}", pipe_buckets)
 print(json.dumps(out))
 """
 
 
 def measured_volumes(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
                      n_out: int = N_OUTER, block: int = BLOCK, kinds=None,
-                     topologies=("flat", "hier")):
+                     topologies=("flat", "hier"), pipe_buckets: int = 0):
     """Compiled collective bytes per (topology, compressor), measured in
     a subprocess with forced host devices (benchmarks themselves keep
     seeing the real single device). Each requested topology is a
@@ -123,15 +147,19 @@ def measured_volumes(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
         [sys.executable, "-c",
          _MEASURE_CODE.format(d=d, n=n, n_in=n_in, n_out=n_out,
                               block=block, kinds=kinds,
-                              topos=tuple(topologies))],
+                              topos=tuple(topologies),
+                              pipe_buckets=pipe_buckets)],
         capture_output=True, text=True, env=env, timeout=1800)
     assert r.returncode == 0, r.stderr
     return json.loads(r.stdout.strip().splitlines()[-1])
 
 
 def predicted_plans(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
-                    n_out: int = N_OUTER, block: int = BLOCK, kinds=None):
-    """The SAME CommPlans the comm layer lowers, built offline."""
+                    n_out: int = N_OUTER, block: int = BLOCK, kinds=None,
+                    pipe_buckets: int = 0):
+    """The SAME CommPlans the comm layer lowers, built offline — plus,
+    with ``pipe_buckets > 1``, their pipelined lowerings (the very
+    PipelinedPlans the bucketed executor runs)."""
     plans = {}
     for kind in (kinds or list_compressors()):
         comp = get_compressor(kind, block_size=block)
@@ -139,14 +167,21 @@ def predicted_plans(d: int = D, n: int = N_FLAT, n_in: int = N_INNER,
         plans[f"hier/{kind}"] = hier_schedule(
             comp, d, n_in, n_out, ("data",), ("pod",),
             outer_ef=needs_outer_ef(comp))
+        if pipe_buckets > 1:
+            from repro.pipeline import Bucketer, lower_to_pipelined
+            for topo, n_tot in (("flat", n), ("hier", n_in * n_out)):
+                bk = Bucketer.for_exchange(d, n_tot, block, pipe_buckets)
+                plans[f"pipe/{topo}/{kind}"] = lower_to_pipelined(
+                    plans[f"{topo}/{kind}"], comp, bk)
     return plans
 
 
 def check_plans(verbose: bool = True):
     """Assert predicted plan bytes == compiled HLO bytes for every
-    registered compressor x topology. Returns the comparison table."""
-    vols = measured_volumes()
-    plans = predicted_plans()
+    registered compressor x topology, serial AND pipelined. Returns the
+    comparison table."""
+    vols = measured_volumes(pipe_buckets=PIPE_BUCKETS)
+    plans = predicted_plans(pipe_buckets=PIPE_BUCKETS)
     table = {}
     failures = []
     for key, plan in sorted(plans.items()):
@@ -225,13 +260,31 @@ def run(verbose: bool = True):
 
 
 def cost_model_report():
-    """Auto-tuner tables for a few cluster presets (the CI artifact)."""
-    from repro.plan import autotune
+    """Auto-tuner tables for a few cluster presets (the CI artifact),
+    including the pipelined bucket-count search."""
+    from repro.plan import autotune, pipeline_breakdown
+    from repro.pipeline import Bucketer, lower_to_pipelined
     report = {}
     for cluster in ("uniform", "ethernet-10g", "infiniband"):
         spec = get_cluster(cluster, n_inner=N_INNER, n_outer=N_OUTER)
-        res = autotune(spec, D, block_sizes=(1024, 4096, 16384))
+        res = autotune(spec, D, block_sizes=(1024, 4096, 16384),
+                       n_buckets_options=(1, 2, 4, 8))
         report[cluster] = res.summary()
+    # per-bucket pipelined pricing of the hier/onebit exchange (the
+    # overlap-vs-launch-latency trade the tuner searches)
+    comp = get_compressor("onebit", block_size=BLOCK)
+    plan = hier_schedule(comp, D, N_INNER, N_OUTER, ("data",), ("pod",))
+    pipe = {}
+    for cluster in ("uniform", "ethernet-10g", "infiniband"):
+        spec = get_cluster(cluster, n_inner=N_INNER, n_outer=N_OUTER)
+        rows = {}
+        for nb in (1, 2, 4, 8):
+            pplan = lower_to_pipelined(
+                plan, comp,
+                Bucketer.for_exchange(D, N_INNER * N_OUTER, BLOCK, nb))
+            rows[nb] = pipeline_breakdown(pplan, spec)
+        pipe[cluster] = rows
+    report["pipelined_hier_onebit"] = pipe
     return report
 
 
@@ -239,13 +292,15 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--check-plans", action="store_true",
                     help="assert predicted plan bytes == compiled HLO "
-                         "bytes for every compressor x topology")
+                         "bytes for every compressor x topology, serial "
+                         "and pipelined (n_buckets=2)")
     ap.add_argument("--json", default=None,
                     help="write results + cost-model tables to this path")
     args = ap.parse_args(argv)
     out = {}
     if args.check_plans:
-        print("== plan validation (predicted vs compiled HLO bytes) ==")
+        print("== plan validation (predicted vs compiled HLO bytes, "
+              "serial + pipelined) ==")
         out["plan_check"] = check_plans()
         out["cost_model"] = cost_model_report()
         print("  all plans match the compiled HLO")

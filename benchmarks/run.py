@@ -9,6 +9,8 @@
   throughput_scaling  Fig. 5 / Fig. 9  (scalability / bandwidth sweep)
   kernel_micro        (system)         (Pallas kernel vs oracle + wire)
   block_size_ablation (ablation)       (scale granularity vs error/bits)
+  comm_sweep          (system)         (measured per-tier α/β ->
+                                        ClusterSpec.from_measured)
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 One:     PYTHONPATH=src python -m benchmarks.run --only convergence
@@ -19,10 +21,10 @@ import argparse
 import json
 import time
 
-from benchmarks import (block_size_ablation, comm_fraction, comm_volume,
-                        convergence, dcgan_convergence, kernel_micro,
-                        resnet_convergence, throughput_scaling,
-                        variance_stability)
+from benchmarks import (block_size_ablation, comm_fraction, comm_sweep,
+                        comm_volume, convergence, dcgan_convergence,
+                        kernel_micro, resnet_convergence,
+                        throughput_scaling, variance_stability)
 
 ALL = {
     "comm_volume": comm_volume.run,
@@ -34,6 +36,7 @@ ALL = {
     "throughput_scaling": throughput_scaling.run,
     "kernel_micro": kernel_micro.run,
     "block_size_ablation": block_size_ablation.run,
+    "comm_sweep": comm_sweep.run,
 }
 
 

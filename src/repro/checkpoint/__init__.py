@@ -1,1 +1,2 @@
-from repro.checkpoint.io import load_pytree, save_pytree  # noqa: F401
+from repro.checkpoint.io import (load_meta, load_pytree,  # noqa: F401
+                                 save_pytree)

@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 _SEP = "|"
+_META = "__meta_"
 
 
 def _flatten_with_paths(tree: Any):
@@ -28,9 +29,15 @@ def _flatten_with_paths(tree: Any):
     return out, treedef
 
 
-def save_pytree(path: str, tree: Any, step: int = 0) -> None:
+def save_pytree(path: str, tree: Any, step: int = 0,
+                meta: Any = None) -> None:
+    """``meta``: optional dict of scalars describing how the state was
+    produced (e.g. the pipeline bucket count that fixes the EF-slot
+    layout) — read back with :func:`load_meta`."""
     arrays, _ = _flatten_with_paths(tree)
     arrays["__step__"] = np.asarray(step)
+    for k, v in (meta or {}).items():
+        arrays[f"{_META}{k}__"] = np.asarray(v)
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
@@ -55,7 +62,8 @@ def load_pytree(path: str, like: Any, backfill: bool = False):
     a schema migration, so opt in at the resume site."""
     with np.load(path) as data:
         step = int(data["__step__"]) if "__step__" in data else 0
-        arrays = {k: data[k] for k in data.files if k != "__step__"}
+        arrays = {k: data[k] for k in data.files
+                  if k != "__step__" and not k.startswith(_META)}
     ref, treedef = _flatten_with_paths(like)
     missing = set(ref) - set(arrays)
     if missing:
@@ -68,3 +76,11 @@ def load_pytree(path: str, like: Any, backfill: bool = False):
     leaves = [arrays.get(k, ref[k]) for k in ref]
     restored = jax.tree_util.tree_unflatten(treedef, leaves)
     return restored, step
+
+
+def load_meta(path: str) -> dict:
+    """The ``meta`` dict a checkpoint was saved with ({} for checkpoints
+    predating metadata)."""
+    with np.load(path) as data:
+        return {k[len(_META):-2]: data[k].item()
+                for k in data.files if k.startswith(_META)}

@@ -187,6 +187,10 @@ class OptimSpec:
     # collective-schedule topology: "flat" | "hier" | "auto" ("auto" lets
     # repro.plan.tune pick per cluster — see launch.train --cluster)
     topology: str = "flat"
+    # bucketed pipelined exchange (repro.pipeline): "off", a bucket
+    # count N, or "auto" (repro.plan.tune searches the bucket count for
+    # the described cluster; resolved by launch.train)
+    pipeline: object = "off"
 
 
 _OPTIM_RECIPES: Dict[str, OptimSpec] = {}
@@ -230,6 +234,10 @@ for _spec in (
     # --cluster the driver is told about (flat on uniform fabrics, hier
     # when cross-pod bandwidth is the bottleneck)
     OptimSpec(name="onebit_adam_autotopo", topology="auto"),
+    # ...and the bucket count searched alongside: overlap the cross-pod
+    # (DCI) legs with the next bucket's compress + intra-pod work
+    OptimSpec(name="onebit_adam_pipelined", topology="auto",
+              pipeline="auto"),
 ):
     register_optim_recipe(_spec)
 

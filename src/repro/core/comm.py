@@ -46,6 +46,25 @@ from repro.plan import schedules as _sched
 AxisNames = Tuple[str, ...]
 
 
+def _execute(plan, comp, value, errs, n_buckets: int, n_total: int):
+    """Lower a plan serially, or — for ``n_buckets > 1`` — through the
+    bucketed pipelined executor (``repro.pipeline``): the plan is split
+    into block-aligned per-bucket stages issued in wavefront order so
+    XLA can overlap one bucket's cross-pod leg with the next bucket's
+    compress + intra-pod work.  ``n_buckets`` clamps to the alignment
+    unit count; 1 is byte-for-byte the serial executor."""
+    if n_buckets <= 1:
+        return _exec.execute_plan(plan, comp, value, errs)
+    from repro.pipeline import (Bucketer, execute_pipelined,  # no cycle
+                                lower_to_pipelined)
+    # comp.block_size is required: bucket alignment to compressor blocks
+    # is what makes per-bucket compression bitwise the serial schedule
+    bucketer = Bucketer.for_exchange(plan.d, n_total, comp.block_size,
+                                     n_buckets)
+    return execute_pipelined(lower_to_pipelined(plan, comp, bucketer),
+                             comp, value, errs)
+
+
 def _as_compressor(cfg):
     if hasattr(cfg, "ef_compress") and hasattr(cfg, "decompress"):
         return cfg
@@ -81,6 +100,7 @@ def compressed_allreduce(
     server_err: jax.Array,
     axis_names: Sequence[str],
     cfg,
+    n_buckets: int = 1,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Error-compensated compressed allreduce (Alg. 1 lines 7-11 / Fig. 3).
 
@@ -90,6 +110,8 @@ def compressed_allreduce(
       server_err: (D/n,) float32 this rank's server-chunk error (delta-bar).
       axis_names: dp mesh axes.
       cfg:        a Compressor or legacy CompressionConfig.
+      n_buckets:  >1 = bucketed pipelined execution (repro.pipeline);
+                  bitwise the serial schedule, EF slots bucket-major.
 
     Returns (averaged (D,) replicated over dp, new worker_err, new server_err).
     """
@@ -99,9 +121,9 @@ def compressed_allreduce(
     d = x.shape[0]
     assert d % n == 0, (d, n)
     plan = _sched.flat_schedule(comp, d, n, axes)
-    out, errs = _exec.execute_plan(plan, comp, x,
-                                   {"worker": worker_err,
-                                    "server": server_err})
+    out, errs = _execute(plan, comp, x,
+                         {"worker": worker_err, "server": server_err},
+                         n_buckets, n)
     return out, errs["worker"], errs["server"]
 
 
@@ -113,6 +135,7 @@ def compressed_allreduce_hierarchical(
     outer_axes: Sequence[str],
     cfg,
     outer_err: Optional[jax.Array] = None,
+    n_buckets: int = 1,
 ):
     """Beyond-paper: two-level compressed allreduce (intra-pod then
     cross-pod), with the cross-pod hop at SERVER-CHUNK granularity.
@@ -137,6 +160,10 @@ def compressed_allreduce_hierarchical(
     folds its residual into the slot at this rank's sub-chunk offset for
     the next exchange to re-send).
 
+    ``n_buckets > 1`` pipelines the whole two-level schedule over
+    block-aligned buckets (``repro.pipeline``): bucket *i*'s cross-pod
+    legs overlap bucket *i+1*'s intra-pod work.
+
     Returns ``(out, new_worker_err, new_server_err)`` — plus
     ``new_outer_err`` as a fourth element when ``outer_err`` is given.
     """
@@ -144,7 +171,8 @@ def compressed_allreduce_hierarchical(
     axes_in = tuple(inner_axes)
     axes_out = tuple(outer_axes)
     if not axes_out:
-        res = compressed_allreduce(x, worker_err, server_err, axes_in, comp)
+        res = compressed_allreduce(x, worker_err, server_err, axes_in, comp,
+                                   n_buckets=n_buckets)
         return res if outer_err is None else res + (outer_err,)
     outer_ef = _sched.needs_outer_ef(comp)
     assert not outer_ef or outer_err is not None, \
@@ -160,7 +188,7 @@ def compressed_allreduce_hierarchical(
     errs = {"worker": worker_err, "server": server_err}
     if outer_ef:
         errs["outer"] = outer_err
-    out, errs = _exec.execute_plan(plan, comp, x, errs)
+    out, errs = _execute(plan, comp, x, errs, n_buckets, n_in * n_out)
     res = (out, errs["worker"], errs["server"])
     if outer_err is None:
         return res

@@ -26,7 +26,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import load_meta, load_pytree, save_pytree
 from repro.configs import (SHAPES, get_config, get_optim_recipe, list_archs,
                            list_optim_recipes)
 from repro.configs.base import InputShape
@@ -38,40 +38,80 @@ from repro.train.step import (TrainStepConfig, _flat_dim, init_opt_state,
                               make_train_step, mesh_axes, pod_split)
 
 
-def resolve_topology(topology: str, cluster: str, cfg, mesh,
+def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
                      compressor: str, block_size: int,
-                     compressor_kwargs=None, verbose: bool = True) -> str:
-    """``topology="auto"``: ask the repro.plan auto-tuner to pick the
-    cheapest schedule for the mesh + described cluster.
+                     compressor_kwargs=None, verbose: bool = True):
+    """Resolve the ``"auto"`` axes of the collective schedule with ONE
+    joint ``repro.plan.autotune`` search; returns ``(topology,
+    n_buckets)``.
 
     The mesh fixes the pod split (leading "pod" axis = n_outer); the
-    ``cluster`` preset fixes the link speeds. The recipe's compressor and
-    block size are pinned — only the topology is tuned here (the full
-    (topology x compressor x block) sweep is ``repro.plan.autotune``).
+    ``cluster`` preset fixes the link speeds; the recipe's compressor
+    and block size are pinned.  Topology and bucket count are tuned
+    TOGETHER when both are "auto" — tuning topology on serial plans and
+    then buckets with the topology pinned can miss the joint optimum
+    (e.g. a pipelined hier beating serial flat on a uniform fabric).
+    Explicit values pass through (``pipeline``: "off" -> 1, N -> N) and
+    pin their axis of the search.
     """
-    if topology != "auto":
-        return topology
+    pipe_auto = pipeline == "auto"
+    topo_auto = topology == "auto"
+    n_buckets = 1
+    if not pipe_auto and pipeline not in (None, "off"):
+        n_buckets = int(pipeline)
+        assert n_buckets >= 1, pipeline
+    if not topo_auto and not pipe_auto:
+        return topology, n_buckets
     from repro.plan import autotune, get_cluster
     dp_axes, dp_sizes, tp = mesh_axes(mesh)
     _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
     spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer)
     d = _flat_dim(cfg, tp, max(n_inner * n_outer, 1), block_size)
-    topos = ("flat", "hier") if n_outer > 1 else ("flat",)
+    if topo_auto:
+        topos = ("flat", "hier") if n_outer > 1 else ("flat",)
+    else:
+        # a forced "hier" on a single-pod mesh degrades to flat in the
+        # step; price what will actually run
+        topos = (topology if (topology != "hier" or n_outer > 1)
+                 else "flat",)
     res = autotune(spec, d, compressors=[compressor],
                    block_sizes=[block_size], topologies=topos,
-                   compressor_kwargs=compressor_kwargs)
+                   compressor_kwargs=compressor_kwargs,
+                   n_buckets_options=(1, 2, 4, 8) if pipe_auto
+                   else (n_buckets,))
+    best = res.best
     if verbose:
-        print(f"[auto-topology] cluster={spec.name} "
-              f"({n_outer} pod(s) x {n_inner} dp): "
-              f"picked {res.best.topology!r} "
-              f"(t_exchange {res.best.t_exchange*1e3:.3f} ms, "
-              f"DCI {res.best.dci_bytes_per_pod} B/pod)")
+        print(f"[auto-schedule] cluster={spec.name} "
+              f"({n_outer} pod(s) x {n_inner} dp): picked "
+              f"{best.topology!r} x {best.n_buckets} bucket(s) "
+              f"(t_exchange {best.t_exchange*1e3:.3f} ms, "
+              f"DCI {best.dci_bytes_per_pod} B/pod)")
         for c in res.table:
             if c.valid:
-                print(f"    {c.topology:5s} block={c.block_size:6d} "
+                print(f"    {c.topology:5s} buckets={c.n_buckets} "
                       f"t={c.t_exchange*1e3:.3f} ms "
                       f"dci={c.dci_bytes_per_pod}")
-    return res.best.topology
+    return (best.topology if topo_auto else topology,
+            best.n_buckets if pipe_auto else n_buckets)
+
+
+def resolve_topology(topology: str, cluster: str, cfg, mesh,
+                     compressor: str, block_size: int,
+                     compressor_kwargs=None, verbose: bool = True) -> str:
+    """``topology="auto"`` with serial execution (see resolve_schedule)."""
+    return resolve_schedule(topology, "off", cluster, cfg, mesh,
+                            compressor, block_size, compressor_kwargs,
+                            verbose)[0]
+
+
+def resolve_pipeline(pipeline, topology: str, cluster: str, cfg, mesh,
+                     compressor: str, block_size: int,
+                     compressor_kwargs=None, verbose: bool = True) -> int:
+    """``pipeline="auto"`` with the topology pinned (see
+    resolve_schedule)."""
+    return resolve_schedule(topology, pipeline, cluster, cfg, mesh,
+                            compressor, block_size, compressor_kwargs,
+                            verbose)[1]
 
 
 def lr_schedule(step: int, base_lr: float, lr_warmup: int,
@@ -90,7 +130,7 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         stage_override: Optional[str] = None, log_file: Optional[str] = None,
         recipe: str = "onebit_adam", optimizer: Optional[str] = None,
         compressor: Optional[str] = None, topology: Optional[str] = None,
-        cluster: str = "ethernet-10g"):
+        cluster: str = "ethernet-10g", pipeline=None):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -114,13 +154,31 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         topology = spec.topology
     if stage_override == "compressed_hier":
         topology, stage_override = "hier", "compressed"
-    topology = resolve_topology(topology, cluster, cfg, mesh,
-                                spec.compressor, spec.block_size,
-                                spec.compressor_kwargs)
+    pipeline_explicit = pipeline is not None
+    if pipeline is None:
+        pipeline = spec.pipeline
+    topology, n_buckets = resolve_schedule(
+        topology, pipeline, cluster, cfg, mesh, spec.compressor,
+        spec.block_size, spec.compressor_kwargs)
+    def effective_buckets(nb: int) -> int:
+        """The bucket count the executor will actually use on THIS run's
+        padded flat dimension (Bucketer clamps to the alignment-unit
+        count) — the quantity that fixes the EF-slot layout."""
+        from repro.pipeline import Bucketer
+        return Bucketer.for_exchange(
+            _flat_dim(cfg, tp, max(n_dp, 1), block_size), max(n_dp, 1),
+            spec.block_size, nb).n_buckets
+
+    if n_buckets > 1:
+        # store/compare the EFFECTIVE (clamped) count: an explicit
+        # --pipeline N above the alignment-unit count clamps inside the
+        # executor anyway
+        n_buckets = effective_buckets(n_buckets)
     base_tsc = TrainStepConfig(
         optimizer=spec.optimizer, compressor=spec.compressor,
         block_size=spec.block_size, opt_kwargs=spec.optimizer_kwargs,
-        comp_kwargs=spec.compressor_kwargs, topology=topology)
+        comp_kwargs=spec.compressor_kwargs, topology=topology,
+        pipeline=n_buckets)
     optim = base_tsc.build_optimizer()
     layout = "local" if optim.may_skip_sync else "replicated"
     base_tsc = dataclasses.replace(base_tsc, layout=layout)
@@ -131,6 +189,31 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                          hierarchical=(topology == "hier"))
     start_step = 0
     if resume:
+        # the chunk EF slots (server_err/outer_err) are bucket-major
+        # under pipelining: their layout is fixed by the bucket count
+        # the checkpoint was trained with — absent metadata means the
+        # checkpoint predates pipelining, i.e. was written serially
+        ck_nb = load_meta(resume).get("n_buckets", 1)
+        if int(ck_nb) != n_buckets:
+            msg = (f"checkpoint {resume} was written with "
+                   f"pipeline={int(ck_nb)} bucket(s); its EF slots are "
+                   f"laid out bucket-major and cannot be resumed with "
+                   f"{n_buckets}")
+            if pipeline_explicit:
+                raise ValueError(
+                    msg + f" (drop --pipeline or pass --pipeline {int(ck_nb)})")
+            if effective_buckets(int(ck_nb)) != int(ck_nb):
+                # e.g. a different --block-size changed the alignment
+                # units: this run cannot reproduce the checkpoint's
+                # bucket layout at all
+                raise ValueError(
+                    msg + f"; pipeline={int(ck_nb)} is not expressible "
+                    f"on this run either (block_size={block_size} "
+                    "alignment clamps it) — resume with the original "
+                    "block size")
+            print(msg + f" — adopting pipeline={int(ck_nb)}")
+            n_buckets = int(ck_nb)
+            base_tsc = dataclasses.replace(base_tsc, pipeline=n_buckets)
         # backfill: pre-plan-IR checkpoints lack new EF slots (outer_err);
         # they start at their zeros template, with a warning listing them
         (params, opt), start_step = load_pytree(resume, (params, opt),
@@ -193,9 +276,11 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                   f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
                   f"({dt:.1f}s)")
         if ckpt and (step + 1) % 100 == 0:
-            save_pytree(ckpt, (params, opt), step + 1)
+            save_pytree(ckpt, (params, opt), step + 1,
+                        meta={"n_buckets": n_buckets})
     if ckpt:
-        save_pytree(ckpt, (params, opt), steps)
+        save_pytree(ckpt, (params, opt), steps,
+                    meta={"n_buckets": n_buckets})
     if log_file:
         with open(log_file, "w") as f:
             json.dump(history, f)
@@ -231,8 +316,12 @@ def main(argv=None):
                          "auto = repro.plan tuner picks per --cluster; "
                          "default = the recipe's topology")
     ap.add_argument("--cluster", default="ethernet-10g",
-                    help="cluster preset for --topology auto "
+                    help="cluster preset for --topology/--pipeline auto "
                          "(repro.plan.list_clusters())")
+    ap.add_argument("--pipeline", default=None,
+                    help="bucketed pipelined exchange: off, auto, or a "
+                         "bucket count N (>1 overlaps cross-pod legs "
+                         "with intra-pod work; default = the recipe's)")
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -249,7 +338,8 @@ def main(argv=None):
         resume=args.resume, stage_override=args.stage,
         log_file=args.log_file, recipe=args.recipe,
         optimizer=args.optimizer, compressor=args.compressor,
-        topology=args.topology, cluster=args.cluster)
+        topology=args.topology, cluster=args.cluster,
+        pipeline=args.pipeline)
 
 
 if __name__ == "__main__":

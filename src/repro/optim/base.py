@@ -43,7 +43,14 @@ from repro.optim.compressors import Compressor, OneBitCompressor
 
 
 class OptState(NamedTuple):
-    """Replicated-layout optimizer state (per model-shard flat views)."""
+    """Replicated-layout optimizer state (per model-shard flat views).
+
+    Pipelined execution (``n_buckets > 1``) slices these SAME buffers
+    into per-bucket EF slots: ``worker_err`` by value offset, the
+    chunk-sized ``server_err``/``outer_err`` by offset/stride — the
+    latter then hold their per-element residuals bucket-major, so one
+    training run keeps one bucket count (see repro.pipeline.executor).
+    """
     m: jax.Array           # (D,)   f32 momentum
     v: jax.Array           # (D,)   f32 second moment
     worker_err: jax.Array  # (D,)   f32 per-dp-rank worker EF error
@@ -59,7 +66,9 @@ class OptState(NamedTuple):
 
 
 class ZeroOptState(NamedTuple):
-    """ZeRO-1 layout: ``v`` and the f32 master weights dp-sharded."""
+    """ZeRO-1 layout: ``v`` and the f32 master weights dp-sharded.
+    Per-bucket EF slot semantics under pipelining as in
+    :class:`OptState`."""
     m: jax.Array             # (D,)   f32 (Alg. 1 needs the full momentum)
     v_shard: jax.Array       # (D/n,) f32
     master_shard: jax.Array  # (D/n,) f32
@@ -257,9 +266,16 @@ class TwoStageOptimizer:
                           tp_axes: Sequence[str] = (),
                           segs: Optional[SegmentInfo] = None,
                           sync: bool = True,
+                          n_buckets: int = 1,
                           ) -> Tuple[jax.Array, OptState, dict]:
         """Compressed (or, with ``sync=False``, purely local) momentum
         step preconditioned by the (hook-governed) second moment.
+
+        ``n_buckets > 1`` runs the exchange through the bucketed
+        pipelined executor (``repro.pipeline``): numerically bitwise the
+        serial schedule, with the chunk-sized EF slots (``server_err``,
+        ``outer_err``) stored bucket-major — keep the bucket count fixed
+        for the life of those buffers.
 
         A ``sync=False`` ("0-bit") step moves NO bytes and applies NO
         model update: the local gradient folds into the per-rank momentum
@@ -286,11 +302,12 @@ class TwoStageOptimizer:
                 comm.compressed_allreduce_hierarchical(
                     m_local, state.worker_err, state.server_err,
                     inner_axes=dp_axes, outer_axes=pod_axes,
-                    cfg=self.compressor, outer_err=state.outer_err)
+                    cfg=self.compressor, outer_err=state.outer_err,
+                    n_buckets=n_buckets)
         else:
             m_bar, w_err, s_err = comm.compressed_allreduce(
                 m_local, state.worker_err, state.server_err,
-                tuple(dp_axes), self.compressor)
+                tuple(dp_axes), self.compressor, n_buckets=n_buckets)
             o_err = state.outer_err
 
         count = state.count + 1
@@ -327,6 +344,7 @@ class TwoStageOptimizer:
                      tp_axes: Sequence[str] = (),
                      segs: Optional[SegmentInfo] = None,
                      sync: bool = True,
+                     n_buckets: int = 1,
                      ) -> Tuple[jax.Array, ZeroOptState, dict]:
         """Same math on the dp-sharded layout. Returns the rebuilt bf16
         full params (one all_gather), the new state, and stats.
@@ -337,7 +355,10 @@ class TwoStageOptimizer:
         super-axis (pod-major chunk order, matching the flat layout).
 
         ``sync=False`` behaves as in :meth:`compressed_update`: momentum
-        accumulates per rank, the master update is deferred."""
+        accumulates per rank, the master update is deferred.
+        ``n_buckets > 1`` pipelines the momentum exchange exactly as in
+        :meth:`compressed_update` (the sharded v/master updates and the
+        param all_gather are untouched)."""
         all_axes = tuple(pod_axes) + tuple(dp_axes)
         m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
         if not sync:
@@ -356,11 +377,12 @@ class TwoStageOptimizer:
                 comm.compressed_allreduce_hierarchical(
                     m_local, state.worker_err, state.server_err,
                     inner_axes=dp_axes, outer_axes=pod_axes,
-                    cfg=self.compressor, outer_err=state.outer_err)
+                    cfg=self.compressor, outer_err=state.outer_err,
+                    n_buckets=n_buckets)
         else:
             m_bar, w_err, s_err = comm.compressed_allreduce(
                 m_local, state.worker_err, state.server_err,
-                tuple(dp_axes), self.compressor)
+                tuple(dp_axes), self.compressor, n_buckets=n_buckets)
             o_err = state.outer_err
         n = comm.axis_size(all_axes)
         d = m_bar.shape[0]

@@ -1,0 +1,25 @@
+"""repro.pipeline — bucketed, dependency-aware pipelined execution of
+collective schedules.
+
+  * :mod:`repro.pipeline.bucket`   — Bucketer: block-aligned partition
+                                     of the flat exchange (size policy +
+                                     remainder handling)
+  * :mod:`repro.pipeline.ir`       — PipelinedPlan + the lowering pass
+                                     CommPlan -> per-bucket stages with
+                                     stream/dependency edges
+  * :mod:`repro.pipeline.executor` — wavefront-unrolled staged executor
+                                     (cross-pod legs overlap the next
+                                     bucket's compress + intra-pod work)
+
+``repro.core.comm`` lowers any exchange through this package when asked
+for ``n_buckets > 1``; ``repro.plan.cost.pipelined_plan_time`` prices
+the SAME PipelinedPlan objects (bottleneck-stream busy time + fill and
+drain), and ``repro.plan.tune`` searches the bucket count alongside
+(topology x compressor x block_size).
+"""
+from repro.pipeline.bucket import Bucketer
+from repro.pipeline.executor import execute_pipelined
+from repro.pipeline.ir import BucketPlan, PipelinedPlan, lower_to_pipelined
+
+__all__ = ["BucketPlan", "Bucketer", "PipelinedPlan", "execute_pipelined",
+           "lower_to_pipelined"]

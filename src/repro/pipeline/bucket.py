@@ -1,0 +1,87 @@
+"""Bucketer — partition a flat gradient into compressor-aligned buckets.
+
+A bucket is a contiguous slice of the padded flat exchange vector that
+can run the WHOLE collective schedule independently: its size must be a
+multiple of the *alignment unit* ``align = n_total * block_size`` so
+that
+
+  * every compressor block falls entirely inside one bucket (per-block
+    quantisation/sparsification of a bucket is then bitwise identical
+    to compressing the full vector — the basis of the pipelined
+    executor's parity guarantee);
+  * every all_to_all / all_gather chunk boundary inside the bucket is
+    itself block-aligned (``d_bucket % n == 0`` for every group size
+    ``n`` dividing ``n_total``), so the per-bucket sub-plans validate.
+
+Size policy: the ``d // align`` alignment units are split as evenly as
+possible over ``n_buckets``; when the unit count does not divide, the
+REMAINDER goes to the TRAILING buckets, so the leading buckets are the
+small ones — the pipeline fills faster (the first cross-pod leg starts
+after the smallest possible intra-pod leg) and the drain tail, which
+nothing overlaps less, absorbs the slack.  Asking for more buckets than
+there are alignment units clamps to one unit per bucket (the degenerate
+``n_buckets=1`` is exactly the serial plan).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucketer:
+    """Frozen bucket partition of a ``d``-element flat exchange."""
+
+    d: int
+    align: int
+    sizes: Tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        out, off = [], 0
+        for s in self.sizes:
+            out.append(off)
+            off += s
+        return tuple(out)
+
+    def validate(self) -> "Bucketer":
+        assert self.d >= 1 and self.align >= 1
+        assert self.d % self.align == 0, (self.d, self.align)
+        assert sum(self.sizes) == self.d, (self.sizes, self.d)
+        for s in self.sizes:
+            assert s >= self.align and s % self.align == 0, (s, self.align)
+        return self
+
+    @classmethod
+    def build(cls, d: int, n_buckets: int, align: int) -> "Bucketer":
+        """Evenly split ``d`` into up to ``n_buckets`` aligned buckets.
+
+        ``n_buckets`` is clamped to the number of alignment units (more
+        buckets than units would leave empty buckets); the remainder
+        units go to the trailing buckets (see module docstring).
+        """
+        assert d >= 1, d
+        assert align >= 1, align
+        assert d % align == 0, (
+            f"bucketed exchange needs d ({d}) divisible by the alignment "
+            f"unit n_total*block ({align})")
+        assert n_buckets >= 1, n_buckets
+        units = d // align
+        n = min(n_buckets, units)
+        base, rem = divmod(units, n)
+        # leading (n - rem) buckets get `base` units, trailing get base+1
+        sizes = tuple(base * align for _ in range(n - rem)) + \
+            tuple((base + 1) * align for _ in range(rem))
+        return cls(d=d, align=align, sizes=sizes).validate()
+
+    @classmethod
+    def for_exchange(cls, d: int, n_total: int, block_size: int,
+                     n_buckets: int) -> "Bucketer":
+        """The standard alignment for an optimizer exchange: every bucket
+        a multiple of ``n_total * block_size`` (``padded_length``
+        guarantees ``d`` itself is)."""
+        return cls.build(d, n_buckets, max(n_total, 1) * max(block_size, 1))

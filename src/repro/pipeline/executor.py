@@ -1,0 +1,101 @@
+"""Pipelined executor — run a :class:`~repro.pipeline.ir.PipelinedPlan`
+inside a ``shard_map`` body, overlapping cross-pod legs with intra-pod
+work.
+
+``execute_pipelined`` slices the rank's flat value and every EF buffer
+into per-bucket views (static offsets from the bucketer — see
+``PipelinedPlan.slot_strides``), then issues the (bucket x stage) grid
+in *wavefront order*: at tick ``t`` it emits stage ``s`` of bucket
+``t - s`` for every live stage, so bucket *i*'s cross-pod collective is
+traced beside bucket *i+1*'s compress + intra-pod collective with NO
+data dependency between them.  That independence is the whole trick:
+XLA's latency-hiding scheduler turns independent collectives into
+async start/done pairs and runs the DCI transfer of one bucket under
+the ICI traffic and (de)compress compute of the next — double-buffered
+because at any tick at most one bucket occupies each stream.
+
+The schedule is UNROLLED, not a ``lax.scan``: a scan body is one
+program XLA schedules per-iteration, so a cross-pod collective inside
+iteration *i* could never overlap an intra-pod collective of iteration
+*i+1* — exactly the overlap we are after.  Unrolling costs trace size
+(n_buckets x ops, buckets are single digits) and buys the scheduler a
+flat dependency DAG.  Bucket sizes need not be uniform, which the
+remainder-handling size policy exploits.
+
+Numerics: per-bucket execution is BITWISE identical to the serial
+executor on the value and worker-error outputs whenever buckets are
+block-aligned (``Bucketer`` enforces it): per-block compression cannot
+see bucket boundaries that coincide with block boundaries, and the
+per-rank chunk means reduce the same operands in the same order.  The
+chunk-sized EF slots (``server``/``outer``) hold the same per-element
+residuals in a BUCKET-MAJOR layout (each rank's buffer concatenates
+its per-bucket sub-chunks instead of one contiguous serial chunk), so
+a training run must keep one bucket count for those buffers to stay
+self-consistent — switching mid-run re-interprets (not loses) the
+residual layout, and ``n_buckets=1`` is byte-for-byte the serial plan.
+
+One genuine semantic caveat: the sparse outer-EF FOLD of the
+hierarchical schedule (``AllGather.fold_err_slot``) parks each rank's
+gather residual for the elements THAT RANK holds — and bucketing
+changes which global elements a rank holds (bucket-major sub-chunks
+instead of one contiguous serial sub-chunk).  So for hier + sparse
+compressors the pipelined trajectory is bitwise-identical to serial on
+the FIRST exchange (all EF starts at zero) and thereafter remains an
+exact error-feedback trajectory — every parked coordinate is re-sent
+by the next exchange — but over a different residual partition, hence
+not bitwise.  Dense/lossless compressors, and sparse ones on the flat
+schedule, have no fold and stay bitwise for the whole run
+(tests/test_distributed.py::TestPipelinedParity pins both claims).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.plan.executor import Errs, execute_op
+
+from repro.pipeline.ir import PipelinedPlan
+
+
+def execute_pipelined(pplan: PipelinedPlan, comp, value: jax.Array,
+                      errs: Optional[Errs] = None
+                      ) -> Tuple[jax.Array, Errs]:
+    """Run ``pplan`` on this rank's ``value``; returns (result, new errs).
+
+    Same contract as :func:`repro.plan.executor.execute_plan`: ``errs``
+    must contain the keys in ``pplan.err_slots`` (full-size buffers;
+    extra keys pass through untouched).
+    """
+    errs = dict(errs or {})
+    missing = [s for s in pplan.err_slots if s not in errs]
+    assert not missing, f"plan {pplan.name!r} needs EF slots {missing}"
+    assert value.shape == (pplan.d,), (value.shape, pplan.d)
+    strides = pplan.slot_strides()
+
+    vals = []
+    bucket_errs = []
+    for bp in pplan.buckets:
+        vals.append(jax.lax.slice(value, (bp.offset,),
+                                  (bp.offset + bp.size,)))
+        be = {}
+        for slot, f in strides.items():
+            lo, hi = bp.offset // f, (bp.offset + bp.size) // f
+            be[slot] = jax.lax.slice(errs[slot], (lo,), (hi,))
+        bucket_errs.append(be)
+
+    # wavefront issue: stage s of bucket t-s at tick t — ops of one tick
+    # are mutually independent, the overlap surface for the scheduler
+    for b, s in pplan.issue_order():
+        op = pplan.buckets[b].plan.ops[s]
+        vals[b], bucket_errs[b] = execute_op(op, comp, vals[b],
+                                             bucket_errs[b])
+
+    out = vals[0] if pplan.n_buckets == 1 else jnp.concatenate(vals)
+    new_errs = dict(errs)
+    for slot in strides:
+        parts = [be[slot] for be in bucket_errs]
+        new_errs[slot] = parts[0] if len(parts) == 1 \
+            else jnp.concatenate(parts)
+    return out, new_errs

@@ -1,0 +1,202 @@
+"""PipelinedPlan — a CommPlan lowered onto buckets with stage/stream
+dependency structure.
+
+``lower_to_pipelined`` takes any straight-line :class:`~repro.plan.ir
+.CommPlan` and a :class:`~repro.pipeline.bucket.Bucketer` and produces a
+:class:`PipelinedPlan`: one re-specialised sub-plan per bucket (same op
+sequence, every ``d_in``/payload scaled to the bucket), arranged on a
+(bucket x stage) grid with the dependency edges of a classic software
+pipeline:
+
+  * ``(b, s) <- (b, s-1)`` — a bucket runs its own ops in order;
+  * ``(b, s) <- (b-1, s)`` — a stage is one resource: the link of its
+    tier carries one bucket at a time, in bucket order.
+
+Nothing ELSE is ordered: bucket *i*'s cross-pod leg is independent of
+bucket *i+1*'s compress + intra-pod leg, which is exactly the overlap
+the pipelined executor exposes to XLA's async collective scheduler and
+the cost model prices (``repro.plan.cost.pipelined_plan_time``).  Each
+op's *stream* is its link tier (``"intra"``/``"cross"``): ops on
+different streams may run concurrently, ops on one stream serialize.
+
+Re-specialising an op is mechanical because payloads are declarative:
+a leaf that is the compressor's wire format for ``d_in`` becomes the
+wire format for the bucket's ``d_in``; a raw float32 leaf scales
+directly.  Plans whose payloads are neither (a custom op moving bytes
+that do not scale linearly with the represented length) refuse to
+lower — better loud than silently mispriced.
+
+Byte accounting is preserved exactly: the per-bucket wire formats of a
+block-aligned bucketing concatenate to the serial wire format, so
+``PipelinedPlan.hlo_bytes() == plan.hlo_bytes()`` and the compiled-HLO
+pin in ``benchmarks/comm_volume.py --check-plans`` covers pipelined
+execution with the same exactness as serial.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional, Tuple
+
+from repro.plan.ir import CollectiveOp, CommPlan, WireSpec
+
+from repro.pipeline.bucket import Bucketer
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """One bucket's slice of the exchange: offset/size into the flat
+    vector plus the re-specialised serial plan that moves it."""
+
+    index: int
+    offset: int
+    size: int
+    plan: CommPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinedPlan:
+    """A CommPlan lowered onto buckets (see module docstring)."""
+
+    name: str
+    d: int
+    buckets: Tuple[BucketPlan, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.buckets[0].plan.ops)
+
+    @property
+    def streams(self) -> Tuple[str, ...]:
+        """Per-stage stream (= link tier): equal-stream stages serialize
+        across buckets, different-stream stages overlap."""
+        return tuple(op.tier for op in self.buckets[0].plan.ops)
+
+    @property
+    def err_slots(self) -> Tuple[str, ...]:
+        return self.buckets[0].plan.err_slots
+
+    def edges(self) -> Iterator[Tuple[Tuple[int, int], Tuple[int, int]]]:
+        """Dependency edges ((b, s) <- pred) of the pipeline grid."""
+        for b in range(self.n_buckets):
+            for s in range(self.n_stages):
+                if s > 0:
+                    yield (b, s), (b, s - 1)
+                if b > 0:
+                    yield (b, s), (b - 1, s)
+
+    def issue_order(self) -> Iterator[Tuple[int, int]]:
+        """(bucket, stage) pairs in wavefront (tick) order: at tick t the
+        ready front is {(t-s, s)} — bucket t's first stage issues beside
+        bucket t-1's second stage, double-buffered down the grid."""
+        for tick in range(self.n_buckets + self.n_stages - 1):
+            for s in range(self.n_stages):
+                b = tick - s
+                if 0 <= b < self.n_buckets:
+                    yield b, s
+
+    def slot_lengths(self) -> Dict[str, Tuple[int, ...]]:
+        """Per-bucket EF-slot lengths, keyed by slot name."""
+        out: Dict[str, Tuple[int, ...]] = {}
+        for slot in self.err_slots:
+            out[slot] = tuple(_slot_len(bp.plan, slot)
+                              for bp in self.buckets)
+        return out
+
+    def slot_strides(self) -> Dict[str, int]:
+        """Elements of flat vector per EF-slot element (slicing factor):
+        bucket b's slice of slot ``s`` is
+        ``[offset // stride, (offset + size) // stride)``."""
+        out: Dict[str, int] = {}
+        for slot, lens in self.slot_lengths().items():
+            strides = {bp.size // ln
+                       for bp, ln in zip(self.buckets, lens)}
+            assert len(strides) == 1, (slot, strides)
+            out[slot] = strides.pop()
+        return out
+
+    def validate(self) -> "PipelinedPlan":
+        assert self.buckets, "pipelined plan needs at least one bucket"
+        off, kinds = 0, None
+        for bp in self.buckets:
+            assert bp.offset == off, (bp.offset, off)
+            assert bp.plan.d == bp.size, (bp.plan.d, bp.size)
+            bp.plan.validate()
+            ks = tuple((op.kind, op.tier, op.err_slot,
+                        getattr(op, "fold_err_slot", None))
+                       for op in bp.plan.ops)
+            assert kinds is None or ks == kinds, (
+                "buckets must share one op sequence", kinds, ks)
+            kinds = ks
+            off += bp.size
+        assert off == self.d, (off, self.d)
+        self.slot_strides()   # asserts per-slot consistency
+        return self
+
+    # --- byte accounting (must match the serial plan exactly) -------------
+    def hlo_bytes(self, tier: Optional[str] = None) -> float:
+        return sum(bp.plan.hlo_bytes(tier) for bp in self.buckets)
+
+    def wire_send_bytes(self, tier: Optional[str] = None) -> float:
+        return sum(bp.plan.wire_send_bytes(tier) for bp in self.buckets)
+
+    def describe(self) -> str:
+        lines = [f"PipelinedPlan {self.name!r} (d={self.d}, "
+                 f"{self.n_buckets} buckets x {self.n_stages} stages, "
+                 f"streams={list(self.streams)})"]
+        for bp in self.buckets:
+            lines.append(f" bucket {bp.index} [{bp.offset}:"
+                         f"{bp.offset + bp.size}]")
+            lines.extend("  " + ln
+                         for ln in bp.plan.describe().splitlines()[1:])
+        return "\n".join(lines)
+
+
+def _slot_len(plan: CommPlan, slot: str) -> int:
+    """EF-buffer length a plan requires for ``slot`` (matches what the
+    executor's compress/fold rules index)."""
+    for op in plan.ops:
+        if op.err_slot == slot:
+            return op.d_in
+        if getattr(op, "fold_err_slot", None) == slot:
+            # the fold slot spans the gather group's full chunk
+            return op.d_in * max(op.n, 1)
+    raise KeyError(f"plan {plan.name!r} has no err slot {slot!r}")
+
+
+def _rebucket_op(op: CollectiveOp, comp, d: int, d_b: int) -> CollectiveOp:
+    """Re-specialise one op from the full exchange (``d``) to a bucket
+    (``d_b``); payloads follow the compressor's declared wire format."""
+    assert op.d_in * d_b % d == 0, (
+        f"{op.kind}: d_in={op.d_in} does not scale to bucket {d_b}/{d}")
+    d_in_b = op.d_in * d_b // d
+    raw = (WireSpec("float32", (op.d_in,)),)
+    if comp is not None and op.payload == tuple(comp.wire_specs(op.d_in)):
+        payload = tuple(comp.wire_specs(d_in_b))
+    elif op.payload == raw:
+        payload = (WireSpec("float32", (d_in_b,)),)
+    else:
+        raise ValueError(
+            f"cannot lower {op.kind} to buckets: payload {op.payload} is "
+            f"neither the compressor wire format for d={op.d_in} nor raw "
+            "float32 — give the op a linear wire format or keep it serial")
+    return dataclasses.replace(op, d_in=d_in_b, payload=payload)
+
+
+def lower_to_pipelined(plan: CommPlan, comp,
+                       bucketer: Bucketer) -> PipelinedPlan:
+    """Lower ``plan`` onto ``bucketer``'s partition (see module doc)."""
+    assert bucketer.d == plan.d, (bucketer.d, plan.d)
+    buckets = []
+    for i, (off, size) in enumerate(zip(bucketer.offsets, bucketer.sizes)):
+        ops = tuple(_rebucket_op(op, comp, plan.d, size)
+                    for op in plan.ops)
+        sub = CommPlan(name=f"{plan.name}@b{i}", d=size,
+                       ops=ops).validate()
+        buckets.append(BucketPlan(index=i, offset=off, size=size,
+                                  plan=sub))
+    return PipelinedPlan(name=f"pipe({plan.name})x{len(buckets)}",
+                         d=plan.d, buckets=tuple(buckets)).validate()

@@ -80,6 +80,36 @@ class ClusterSpec:
     def uniform(self) -> bool:
         return self.n_outer <= 1 or self.cross == self.intra
 
+    @classmethod
+    def from_measured(cls, path: str, n_inner: Optional[int] = None,
+                      n_outer: Optional[int] = None,
+                      **kw) -> "ClusterSpec":
+        """Build a spec from a ``benchmarks/comm_sweep.py`` JSON — α/β
+        per tier (and ``op_overhead``) CALIBRATED from timed collectives
+        on the real fabric instead of the guessed presets.
+
+        The file carries the sweep's mesh split; pass ``n_inner`` /
+        ``n_outer`` to re-size the spec for a different deployment on
+        the same interconnect.  ``cross`` falls back to ``intra`` for a
+        single-tier (one-pod) sweep."""
+        import json
+        with open(path) as f:
+            data = json.load(f)
+        intra = LinkSpec(latency=float(data["intra"]["latency"]),
+                         bandwidth=float(data["intra"]["bandwidth"]))
+        cross = (LinkSpec(latency=float(data["cross"]["latency"]),
+                          bandwidth=float(data["cross"]["bandwidth"]))
+                 if data.get("cross") else intra)
+        if "op_overhead" in data:
+            kw.setdefault("op_overhead", float(data["op_overhead"]))
+        return cls(name=str(data.get("name", "measured")),
+                   intra=intra, cross=cross,
+                   n_inner=int(n_inner if n_inner is not None
+                               else data.get("n_inner", 1)),
+                   n_outer=int(n_outer if n_outer is not None
+                               else data.get("n_outer", 1)),
+                   **kw)
+
 
 # --------------------------------------------------------------------------
 # cluster presets (interconnect characters; sized by the caller)
@@ -127,31 +157,91 @@ def list_clusters():
 # alpha-beta op/plan pricing
 # --------------------------------------------------------------------------
 
+# α-β formulas per collective kind, WITHOUT the per-launch overhead —
+# op_time adds spec.op_overhead exactly once for every priced op, so no
+# kind (Broadcast included) can drift out of the overhead accounting
+_LINK_TIME = {
+    AllToAll: lambda n, s, a, b: a + s * (n - 1) / n / b,
+    AllGather: lambda n, s, a, b: log2ceil(n) * a + s * (n - 1) / b,
+    AllReduce: lambda n, s, a, b: (2 * log2ceil(n) * a
+                                   + 2.0 * s * (n - 1) / n / b),
+    ReduceScatter: lambda n, s, a, b: (log2ceil(n) * a
+                                       + s * (n - 1) / n / b),
+    Broadcast: lambda n, s, a, b: log2ceil(n) * (a + s / b),
+}
+
+
 def op_time(op: CollectiveOp, spec: ClusterSpec) -> float:
     """Predicted seconds for one collective op on its tier's link."""
     n = op.n
     if n <= 1 or not op.axes:
         return 0.0
+    if type(op) not in _LINK_TIME:
+        raise TypeError(f"op_time: unknown collective {type(op).__name__}")
     link = spec.link(op.tier)
-    a, b = link.latency, link.bandwidth
-    ov = spec.op_overhead
     s = float(op.payload_bytes)
-    if isinstance(op, AllToAll):
-        return ov + a + s * (n - 1) / n / b
-    if isinstance(op, AllGather):
-        return ov + log2ceil(n) * a + s * (n - 1) / b
-    if isinstance(op, AllReduce):
-        return ov + 2 * log2ceil(n) * a + 2.0 * s * (n - 1) / n / b
-    if isinstance(op, ReduceScatter):
-        return ov + log2ceil(n) * a + s * (n - 1) / n / b
-    if isinstance(op, Broadcast):
-        return ov + log2ceil(n) * (a + s / b)
-    raise TypeError(f"op_time: unknown collective {type(op).__name__}")
+    return spec.op_overhead + _LINK_TIME[type(op)](n, s, link.latency,
+                                                   link.bandwidth)
 
 
 def plan_time(plan: CommPlan, spec: ClusterSpec) -> float:
     """Predicted seconds for one execution of the plan (no overlap)."""
     return sum(op_time(op, spec) for op in plan.ops)
+
+
+# --------------------------------------------------------------------------
+# pipelined pricing (repro.pipeline.PipelinedPlan — duck-typed: anything
+# with .buckets / .issue_order() / per-bucket .plan.ops)
+# --------------------------------------------------------------------------
+
+def pipeline_breakdown(pplan, spec: ClusterSpec) -> Dict[str, object]:
+    """Price a pipelined plan by simulating its dependency grid.
+
+    Each link tier is one *stream* (resource): ops on a stream run
+    serially in issue order, ops on different streams overlap.  Op
+    ``(b, s)`` starts at ``max(stream free, finish(b, s-1))`` — the
+    wavefront issue order makes the implicit ``(b-1, s)`` edge a
+    consequence of stream exclusivity.  The total decomposes as the
+    classic pipeline bound: the bottleneck stream's busy time plus the
+    fill/drain it spends waiting on the other streams.
+
+    Returns ``t_total`` (predicted seconds), ``t_serial`` (the SAME
+    per-bucket ops run back-to-back with no overlap — note this carries
+    the bucketing's extra per-op launches; compare against
+    ``plan_time`` of the unlowered plan for the end-to-end win),
+    ``saved``, per-stream ``busy`` seconds, the ``bottleneck`` stream,
+    and its ``fill_drain`` slack.
+    """
+    free: Dict[str, float] = {}
+    busy: Dict[str, float] = {}
+    finish = [[0.0] * len(bp.plan.ops) for bp in pplan.buckets]
+    t_total = 0.0
+    for b, s in pplan.issue_order():
+        op = pplan.buckets[b].plan.ops[s]
+        t = op_time(op, spec)
+        dep = finish[b][s - 1] if s > 0 else 0.0
+        start = max(free.get(op.tier, 0.0), dep)
+        finish[b][s] = start + t
+        free[op.tier] = start + t
+        busy[op.tier] = busy.get(op.tier, 0.0) + t
+        t_total = max(t_total, start + t)
+    t_serial = sum(sum(op_time(op, spec) for op in bp.plan.ops)
+                   for bp in pplan.buckets)
+    bottleneck = max(busy, key=busy.get) if busy else "intra"
+    return {"t_total": t_total, "t_serial": t_serial,
+            "saved": t_serial - t_total, "busy": busy,
+            "bottleneck": bottleneck,
+            "fill_drain": t_total - busy.get(bottleneck, 0.0)}
+
+
+def pipelined_plan_time(pplan, spec: ClusterSpec) -> float:
+    """Predicted seconds for one pipelined execution (overlap priced).
+
+    With one bucket this equals ``plan_time`` of the serial plan; more
+    buckets trade per-op launch latency (each op splits into one per
+    bucket) against cross-stream overlap — the tuner searches that
+    trade (``repro.plan.tune``)."""
+    return pipeline_breakdown(pplan, spec)["t_total"]
 
 
 def cross_pod_bytes(plan: CommPlan, spec: ClusterSpec) -> int:

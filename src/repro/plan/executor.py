@@ -133,6 +133,13 @@ _EXEC = {
 }
 
 
+def execute_op(op: CollectiveOp, comp, value: jax.Array, errs: Errs
+               ) -> Tuple[jax.Array, Errs]:
+    """Lower ONE collective op (the public entry the pipelined executor
+    in :mod:`repro.pipeline.executor` steps through in wavefront order)."""
+    return _EXEC[type(op)](op, comp, value, errs)
+
+
 def execute_plan(plan: CommPlan, comp, value: jax.Array,
                  errs: Optional[Errs] = None
                  ) -> Tuple[jax.Array, Errs]:

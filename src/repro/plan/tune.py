@@ -1,8 +1,9 @@
 """Cluster auto-tuner: pick the cheapest valid collective schedule.
 
-``autotune`` enumerates (topology x compressor x block_size) for a given
-:class:`~repro.plan.cost.ClusterSpec` + flat model dimension, prices
-every candidate with the α-β model, and returns the cheapest VALID plan.
+``autotune`` enumerates (topology x compressor x block_size x
+n_buckets) for a given :class:`~repro.plan.cost.ClusterSpec` + flat
+model dimension, prices every candidate with the α-β model (pipelined
+pricing when ``n_buckets > 1``), and returns the cheapest VALID plan.
 Validity is structural, not heuristic:
 
   * ``hier`` needs a real pod split (``spec.n_outer > 1``); when it runs
@@ -10,10 +11,26 @@ Validity is structural, not heuristic:
     (d/n_inner,) f32 buffer per rank, reported on the candidate);
   * the flat dimension is re-padded per block size
     (``padded_length(d, n_total, block)``), so candidates with different
-    block sizes are priced on the vector they would actually move.
+    block sizes are priced on the vector they would actually move;
+  * ``n_buckets`` clamps to the alignment-unit count (the ``Bucketer``
+    policy) — a clamped candidate is priced at its EFFECTIVE bucket
+    count, never at a fictional one.
 
-``launch.train --topology auto`` uses this with the compressor/block
-pinned by the recipe; benchmarks and tests sweep the full product.
+Update frequency is a second objective axis (0/1 Adam, 2202.06009): a
+``sync_interval`` of k means the optimizer exchanges once every k
+steps, so the AVERAGE per-step cost is ``t_exchange / k`` (and
+``hlo_bytes / k`` bytes).  With ``sync_intervals`` the tuner enumerates
+that axis too, under an optional per-step comm budget
+(``max_bytes_per_step`` / ``max_t_per_step``): selection prefers the
+SMALLEST interval whose cheapest plan fits the budget — i.e. it buys
+back update frequency with schedule/compressor savings and skips syncs
+only when no plan fits otherwise.  Without a budget every interval is
+valid and the most frequent (best-converging) schedule wins, priced
+per step.
+
+``launch.train --topology auto`` / ``--pipeline auto`` use this with
+the compressor/block pinned by the recipe; benchmarks and tests sweep
+the full product.
 """
 from __future__ import annotations
 
@@ -22,7 +39,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.compression import padded_length
 from repro.plan import schedules
-from repro.plan.cost import ClusterSpec, cross_pod_bytes, plan_time
+from repro.plan.cost import (ClusterSpec, cross_pod_bytes,
+                             pipelined_plan_time, plan_time)
 from repro.plan.ir import CommPlan
 
 TOPOLOGIES = ("flat", "hier")
@@ -30,7 +48,8 @@ TOPOLOGIES = ("flat", "hier")
 
 @dataclasses.dataclass(frozen=True)
 class Candidate:
-    """One priced point of the (topology x compressor x block) grid."""
+    """One priced point of the (topology x compressor x block x buckets
+    x sync interval) grid."""
 
     topology: str
     compressor: str
@@ -43,12 +62,28 @@ class Candidate:
     outer_ef: bool = False       # plan carries the outer EF slot
     valid: bool = True
     why: str = ""                # reason when invalid
+    n_buckets: int = 1           # EFFECTIVE pipeline bucket count
+    sync_interval: int = 1       # steps between exchanges (0/1 Adam)
+
+    @property
+    def t_step_avg(self) -> float:
+        """Average exchange seconds per TRAINING step."""
+        return self.t_exchange / max(self.sync_interval, 1)
+
+    @property
+    def bytes_per_step(self) -> float:
+        """Average per-device collective bytes per training step."""
+        return self.hlo_bytes / max(self.sync_interval, 1)
 
     def summary(self) -> Dict[str, object]:
         return {"topology": self.topology, "compressor": self.compressor,
                 "block_size": self.block_size, "valid": self.valid,
+                "n_buckets": self.n_buckets,
+                "sync_interval": self.sync_interval,
                 "t_exchange_s": self.t_exchange,
+                "t_step_avg_s": self.t_step_avg,
                 "hlo_bytes": self.hlo_bytes,
+                "bytes_per_step": self.bytes_per_step,
                 "dci_bytes_per_pod": self.dci_bytes_per_pod,
                 "outer_ef": self.outer_ef,
                 "why": self.why}
@@ -73,24 +108,35 @@ def _axes_for(spec: ClusterSpec, topology: str):
     return (("pod", "data") if spec.n_outer > 1 else ("data",)), ()
 
 
+def _invalid(topology, compressor, block_size, d, why,
+             n_buckets=1, sync_interval=1) -> Candidate:
+    # record the REQUESTED bucket count so the table/CI artifact shows
+    # every enumerated grid point, not one collapsed row
+    return Candidate(topology, compressor, block_size, None,
+                     float("inf"), 0.0, 0, d, valid=False, why=why,
+                     n_buckets=n_buckets, sync_interval=sync_interval)
+
+
 def build_candidate(spec: ClusterSpec, d: int, topology: str,
                     compressor: str, block_size: int,
-                    compressor_kwargs: Optional[dict] = None) -> Candidate:
-    """Price one (topology, compressor, block_size) point."""
+                    compressor_kwargs: Optional[dict] = None,
+                    n_buckets: int = 1,
+                    sync_interval: int = 1) -> Candidate:
+    """Price one (topology, compressor, block_size, n_buckets) point."""
     from repro.optim.compressors import get_compressor  # lazy: no cycle
     kw = dict(compressor_kwargs or {})
     kw["block_size"] = block_size
     try:
         comp = get_compressor(compressor, **kw)
     except (AssertionError, TypeError, KeyError) as e:
-        return Candidate(topology, compressor, block_size, None,
-                         float("inf"), 0.0, 0, d, valid=False, why=str(e))
+        return _invalid(topology, compressor, block_size, d, str(e),
+                        n_buckets, sync_interval)
     d_pad = padded_length(d, spec.n_total, block_size)
     if topology == "hier":
         if spec.n_outer <= 1:
-            return Candidate(topology, compressor, block_size, None,
-                             float("inf"), 0.0, 0, d_pad, valid=False,
-                             why="hier needs n_outer > 1")
+            return _invalid(topology, compressor, block_size, d_pad,
+                            "hier needs n_outer > 1", n_buckets,
+                            sync_interval)
         inner_axes, outer_axes = _axes_for(spec, topology)
         outer_ef = schedules.needs_outer_ef(comp)
         plan = schedules.hier_schedule(comp, d_pad, spec.n_inner,
@@ -102,17 +148,30 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         plan = schedules.flat_schedule(comp, d_pad, spec.n_total, axes,
                                        tier=tier)
         outer_ef = False
+    if n_buckets > 1:
+        from repro.pipeline import Bucketer, lower_to_pipelined
+        bk = Bucketer.for_exchange(d_pad, spec.n_total, block_size,
+                                   n_buckets)
+        pplan = lower_to_pipelined(plan, comp, bk)
+        t_ex = pipelined_plan_time(pplan, spec)
+        eff_buckets = bk.n_buckets
+    else:
+        t_ex = plan_time(plan, spec)
+        eff_buckets = 1
     return Candidate(topology, compressor, block_size, plan,
-                     plan_time(plan, spec), plan.hlo_bytes(),
+                     t_ex, plan.hlo_bytes(),
                      cross_pod_bytes(plan, spec), d_pad,
-                     outer_ef=outer_ef)
+                     outer_ef=outer_ef, n_buckets=eff_buckets,
+                     sync_interval=max(sync_interval, 1))
 
 
 def enumerate_candidates(spec: ClusterSpec, d: int,
                          compressors: Optional[Sequence[str]] = None,
                          block_sizes: Sequence[int] = (1024, 4096, 16384),
                          topologies: Sequence[str] = TOPOLOGIES,
-                         compressor_kwargs: Optional[dict] = None
+                         compressor_kwargs: Optional[dict] = None,
+                         n_buckets_options: Sequence[int] = (1,),
+                         sync_intervals: Sequence[int] = (1,)
                          ) -> Tuple[Candidate, ...]:
     from repro.optim.compressors import list_compressors
     names = list(compressors) if compressors else list_compressors()
@@ -121,8 +180,28 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
         assert topo in TOPOLOGIES, topo
         for name in names:
             for block in block_sizes:
-                out.append(build_candidate(spec, d, topo, name, block,
-                                           compressor_kwargs))
+                for nb in n_buckets_options:
+                    # build/price the plan ONCE; the sync interval only
+                    # rescales the derived per-step figures
+                    base = build_candidate(spec, d, topo, name, block,
+                                           compressor_kwargs, n_buckets=nb)
+                    out.extend(dataclasses.replace(
+                        base, sync_interval=max(si, 1))
+                        for si in sync_intervals)
+    return tuple(out)
+
+
+def _dedupe(cands: Tuple[Candidate, ...]) -> Tuple[Candidate, ...]:
+    """Clamped bucket counts collapse onto the same effective candidate;
+    keep the first of each (topology, comp, block, buckets, interval)."""
+    seen, out = set(), []
+    for c in cands:
+        key = (c.topology, c.compressor, c.block_size, c.n_buckets,
+               c.sync_interval, c.valid)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(c)
     return tuple(out)
 
 
@@ -130,17 +209,40 @@ def autotune(spec: ClusterSpec, d: int,
              compressors: Optional[Sequence[str]] = None,
              block_sizes: Sequence[int] = (1024, 4096, 16384),
              topologies: Sequence[str] = TOPOLOGIES,
-             compressor_kwargs: Optional[dict] = None) -> TuneResult:
+             compressor_kwargs: Optional[dict] = None,
+             n_buckets_options: Sequence[int] = (1,),
+             sync_intervals: Sequence[int] = (1,),
+             max_bytes_per_step: Optional[float] = None,
+             max_t_per_step: Optional[float] = None) -> TuneResult:
     """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
 
-    Ties break toward ``flat`` (fewer stages, no outer EF state), then
-    toward the larger block size (fewer scale bytes).
+    Selection order: smallest ``sync_interval`` first (update frequency
+    is convergence — only give it up when the budget forces it), then
+    average per-step exchange time, then fewer buckets (less fill/drain
+    exposure and trace size), then ``flat`` before ``hier`` (fewer
+    stages, no outer EF state), then the larger block size (fewer scale
+    bytes).  ``max_bytes_per_step`` / ``max_t_per_step`` mark
+    over-budget candidates invalid (``why="over comm budget"``).
     """
-    table = enumerate_candidates(spec, d, compressors, block_sizes,
-                                 topologies, compressor_kwargs)
+    table = _dedupe(enumerate_candidates(
+        spec, d, compressors, block_sizes, topologies, compressor_kwargs,
+        n_buckets_options, sync_intervals))
+    if max_bytes_per_step is not None or max_t_per_step is not None:
+        budgeted = []
+        for c in table:
+            over = c.valid and (
+                (max_bytes_per_step is not None
+                 and c.bytes_per_step > max_bytes_per_step)
+                or (max_t_per_step is not None
+                    and c.t_step_avg > max_t_per_step))
+            budgeted.append(dataclasses.replace(
+                c, valid=c.valid and not over,
+                why=c.why or ("over comm budget" if over else "")))
+        table = tuple(budgeted)
     valid = [c for c in table if c.valid]
     assert valid, f"no valid plan for {spec.name} (d={d})"
-    best = min(valid, key=lambda c: (c.t_exchange,
+    best = min(valid, key=lambda c: (c.sync_interval, c.t_step_avg,
+                                     c.n_buckets,
                                      TOPOLOGIES.index(c.topology),
                                      -c.block_size))
     return TuneResult(best=best, table=table)

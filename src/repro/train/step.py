@@ -95,6 +95,13 @@ class TrainStepConfig:
     topology: str = "flat"          # "flat" | "hier"
     sync: bool = True               # False = 0-bit local step (requires
     #                                layout="local")
+    pipeline: Any = "off"           # bucketed pipelined exchange:
+    #                                "off" (serial), or an int bucket
+    #                                count N (>1 overlaps cross-pod legs
+    #                                with intra-pod work; repro.pipeline).
+    #                                "auto" must be resolved to N by the
+    #                                driver (launch.train, per --cluster)
+    #                                before the step is built
     block_size: int = 4096          # compression block / padding basis
     opt_kwargs: Optional[dict] = None   # extra optimizer hyperparams
     comp_kwargs: Optional[dict] = None  # extra compressor kwargs
@@ -134,6 +141,18 @@ class TrainStepConfig:
         return get_optimizer(self.optimizer, compressor=self.compressor,
                              compressor_kwargs=comp_kwargs,
                              **(self.opt_kwargs or {}))
+
+    @property
+    def n_buckets(self) -> int:
+        """Effective pipeline bucket count ("off" -> 1)."""
+        if self.pipeline in (None, "off"):
+            return 1
+        assert self.pipeline != "auto", \
+            ("pipeline='auto' must be resolved to a bucket count by the "
+             "driver (launch.train.resolve_pipeline) before building steps")
+        n = int(self.pipeline)
+        assert n >= 1, self.pipeline
+        return n
 
     @property
     def opt_block_size(self) -> int:
@@ -369,6 +388,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
     assert tsc.stage in ("warmup", "compressed"), tsc.stage
     assert tsc.layout in LAYOUTS, tsc.layout
     assert tsc.topology in TOPOLOGIES, tsc.topology
+    assert tsc.n_buckets >= 1  # fails fast on an unresolved "auto"
     if not tsc.sync:
         # a skipped sync leaves per-rank momentum divergent across dp;
         # replicated/zero1 out-specs would silently drop it
@@ -444,7 +464,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                 outer_err=opt.outer_err.reshape(-1))
             x_full, st, stats = optimizer.zero1_update(
                 g_flat, st, lr, dp_axes=inner_axes, pod_axes=outer_axes,
-                tp_axes=tp_axes, segs=segs, sync=tsc.sync)
+                tp_axes=tp_axes, segs=segs, sync=tsc.sync,
+                n_buckets=tsc.n_buckets)
             new_params = unravel(x_full[:d_r].astype(flat0.dtype))
             new_opt = ZeroFlatOptState(
                 m=st.m.reshape(opt.m.shape),
@@ -485,7 +506,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
             new_x, st, stats = optimizer.compressed_update(
                 g_flat, st, x, lr, dp_axes=inner_axes,
                 pod_axes=outer_axes, tp_axes=tp_axes, segs=segs,
-                sync=tsc.sync)
+                sync=tsc.sync, n_buckets=tsc.n_buckets)
 
         new_params = unravel(new_x[:d_r])
         new_opt = FlatOptState(

@@ -211,6 +211,19 @@ class TestCostModel:
         none = AllReduce(axes=(), n=1, tier="intra", payload=pl, d_in=1024)
         assert op_time(none, spec) == 0.0
 
+    @pytest.mark.parametrize("op_cls", [AllToAll, AllGather, AllReduce,
+                                        ReduceScatter, Broadcast])
+    def test_every_op_kind_charges_op_overhead_once(self, op_cls):
+        """Regression pin: every collective kind — Broadcast included —
+        charges the per-launch ``op_overhead`` exactly once (op_time adds
+        it structurally, outside the per-kind α-β formulas)."""
+        base = self._spec(1.25e9)
+        free = dataclasses.replace(base, op_overhead=0.0)
+        op = op_cls(axes=("data",), n=4, tier="intra",
+                    payload=(WireSpec("float32", (1024,)),), d_in=1024)
+        assert op_time(op, base) - op_time(op, free) == pytest.approx(
+            base.op_overhead)
+
     def test_cross_tier_priced_on_cross_link(self):
         slow = self._spec(1e8)
         fast = self._spec(50e9, cross_lat=1e-6)
