@@ -261,14 +261,16 @@ def run(verbose: bool = True):
 
 def cost_model_report():
     """Auto-tuner tables for a few cluster presets (the CI artifact),
-    including the pipelined bucket-count search."""
+    including the pipelined bucket-count search and the jnp-vs-Pallas
+    kernel axis the repro.perf compute stream prices."""
     from repro.plan import autotune, pipeline_breakdown
     from repro.pipeline import Bucketer, lower_to_pipelined
     report = {}
     for cluster in ("uniform", "ethernet-10g", "infiniband"):
         spec = get_cluster(cluster, n_inner=N_INNER, n_outer=N_OUTER)
         res = autotune(spec, D, block_sizes=(1024, 4096, 16384),
-                       n_buckets_options=(1, 2, 4, 8))
+                       n_buckets_options=(1, 2, 4, 8),
+                       use_kernel_options=(False, True))
         report[cluster] = res.summary()
     # per-bucket pipelined pricing of the hier/onebit exchange (the
     # overlap-vs-launch-latency trade the tuner searches)

@@ -1,0 +1,191 @@
+"""Benchmark: measure HBM bandwidth + per-kernel launch overhead from
+TIMED compression/Adam kernels, and emit the JSON that
+``repro.perf.device.DeviceSpec.from_measured`` consumes.
+
+The DeviceSpec presets in ``repro.perf.device`` are datasheet peaks
+with guessed launch overheads; this sweep calibrates the two numbers
+the compute-stream pricing actually leans on — effective HBM bandwidth
+and kernel dispatch overhead — on whatever backend the process runs on
+(mirror of ``comm_sweep.py``, which does the same for link α/β).
+
+For each timed op the model is the SAME one the coster prices
+(``ComputeSpec.time`` with the memory roofline binding — the swept
+kernels are memory-bound by construction, so the flops term never
+binds):
+
+    t = kernels * kernel_overhead + hbm_bytes / hbm_bw
+
+where (kernels, hbm_bytes) come from the DECLARED ComputeSpecs
+(``Compressor.compute_specs`` / ``adam_update_cost``) — fitting against
+the declared traffic keeps the calibration and the pricing in lockstep
+by construction.  Ops with different kernel counts (fused 1-launch EF
+vs the multi-pass jnp chain) are what make the shared overhead
+separable from the bandwidth term, exactly like comm_sweep's two
+collective families.  The least-squares system solves for
+(kernel_overhead, 1/hbm_bw).
+
+On this CPU container the Pallas kernels run in interpret mode, so the
+absolute numbers are meaningless for the TPU target — good only for
+exercising the machinery; run on real hardware to replace the presets:
+
+  PYTHONPATH=src python benchmarks/kernel_sweep.py --json device.json
+  >>> spec = DeviceSpec.from_measured("device.json")
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+SIZES = tuple(1 << k for k in range(15, 21, 2))   # 32K/128K/512K f32 elems
+BLOCK = 4096
+ITERS = 5
+
+
+def fit_device(samples: Sequence[dict]) -> Dict[str, object]:
+    """Least-squares (kernel_overhead, hbm_bw) from timed samples
+    ``{op, d, kernels, hbm_bytes, seconds}``.
+
+    A negative coefficient means the timings don't resolve that term
+    (noise, too-narrow sweep): it is clamped to a tiny positive value
+    so the spec stays constructible, but ``clamped`` lists which — a
+    clamped fit is a FAILED calibration and must not be trusted (a
+    clamped bandwidth would otherwise read as ~infinite HBM and price
+    all compute at zero)."""
+    assert samples, "fit_device needs at least one timed sample"
+    rows = [[float(s["kernels"]), float(s["hbm_bytes"])] for s in samples]
+    ts = [float(s["seconds"]) for s in samples]
+    x, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ts), rcond=None)
+    clamped = [name for name, v in
+               (("kernel_overhead", x[0]), ("hbm_bw", x[1])) if v <= 0]
+    overhead = float(max(x[0], 1e-9))
+    inv_bw = float(max(x[1], 1e-15))
+    return {"kernel_overhead": overhead, "hbm_bw": 1.0 / inv_bw,
+            "clamped": clamped}
+
+
+def _timed(fn, *args) -> float:
+    import jax
+    jax.block_until_ready(fn(*args))   # compile outside the clock
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _ops(block: int):
+    """(name, build(d) -> (fn, args, ComputeSpec)) for every timed op.
+
+    Kernel (fused, 1-launch) AND jnp (multi-pass) variants of the same
+    math: the differing ``kernels`` columns make the launch overhead
+    separable from bandwidth in the joint fit."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compression import compress_onebit
+    from repro.kernels.fused_adam import ops as fa_ops
+    from repro.kernels.onebit import ops as kops
+    from repro.optim import get_compressor
+    from repro.perf import adam_update_cost
+
+    comp_j = get_compressor("onebit", block_size=block)
+    comp_k = get_compressor("onebit", block_size=block, use_kernel=True)
+
+    def build_ef_kernel(d, x, e):
+        fn = jax.jit(lambda a, b: kops.ef_compress_fused(a, b,
+                                                         block_size=block))
+        return fn, (x, e), comp_k.compute_specs(d)["ef_compress"]
+
+    def build_ef_jnp(d, x, e):
+        fn = jax.jit(lambda a, b: comp_j.ef_compress(a, b))
+        return fn, (x, e), comp_j.compute_specs(d)["ef_compress"]
+
+    def build_compress_jnp(d, x, e):
+        fn = jax.jit(lambda a: compress_onebit(a, block))
+        return fn, (x,), comp_j.compute_specs(d)["compress"]
+
+    def build_adam_fused(d, x, e):
+        v = jnp.abs(e) + 1e-3
+        fn = jax.jit(lambda a, b, c, g: fa_ops.adam_step(a, b, c, g, 1e-3))
+        return fn, (x, e, v, x), adam_update_cost(d, fused=True)
+
+    return (("onebit_ef_kernel", build_ef_kernel),
+            ("onebit_ef_jnp", build_ef_jnp),
+            ("onebit_compress_jnp", build_compress_jnp),
+            ("adam_fused", build_adam_fused))
+
+
+def sweep(sizes: Sequence[int] = SIZES, block: int = BLOCK) -> List[dict]:
+    import jax.numpy as jnp
+    rng = np.random.default_rng(0)
+    samples = []
+    for d in sizes:
+        x = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+        e = jnp.asarray(rng.normal(size=(d,)).astype(np.float32)) * 0.1
+        for name, build in _ops(block):
+            fn, args, spec = build(d, x, e)
+            samples.append({"op": name, "d": int(d),
+                            "kernels": int(spec.kernels),
+                            "hbm_bytes": float(spec.hbm_bytes),
+                            "seconds": _timed(fn, *args)})
+    return samples
+
+
+def run(sizes: Sequence[int] = SIZES, block: int = BLOCK,
+        json_path: Optional[str] = None, verbose: bool = True
+        ) -> Dict[str, object]:
+    import jax
+    samples = sweep(sizes, block)
+    fit = fit_device(samples)
+    platform = jax.devices()[0].platform
+    out = {
+        "name": f"measured-{platform}",
+        "hbm_bw": fit["hbm_bw"],
+        "kernel_overhead": fit["kernel_overhead"],
+        "clamped": fit["clamped"],
+        # the swept kernels are memory-bound: peak FLOPs is unobservable
+        # here — from_measured falls back to its base preset
+        "peak_flops": None,
+        "block_size": int(block),
+        "interpret_mode": platform != "tpu",
+        "samples": samples,
+    }
+    if verbose:
+        print("== kernel_sweep (measured device roofline) ==")
+        print(f"  hbm_bw          {fit['hbm_bw'] / 1e9:10.3f} GB/s")
+        print(f"  kernel_overhead {fit['kernel_overhead'] * 1e6:10.2f} us "
+              f"({len(samples)} samples)")
+        if fit["clamped"]:
+            print(f"  [WARN] fit clamped {fit['clamped']} — the timings "
+                  "do not resolve these terms; do NOT feed this JSON to "
+                  "DeviceSpec.from_measured")
+        if out["interpret_mode"]:
+            print("  [interpret mode: numbers exercise the machinery "
+                  "only — run on TPU for real calibration]")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {json_path}")
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated element counts "
+                         "(default 32K/128K/512K)")
+    ap.add_argument("--block", type=int, default=BLOCK)
+    ap.add_argument("--json", default=None,
+                    help="write the DeviceSpec.from_measured JSON here")
+    args = ap.parse_args(argv)
+    sizes = tuple(int(x) for x in args.sizes.split(",")) if args.sizes \
+        else SIZES
+    return run(sizes, args.block, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

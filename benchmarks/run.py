@@ -11,6 +11,10 @@
   block_size_ablation (ablation)       (scale granularity vs error/bits)
   comm_sweep          (system)         (measured per-tier α/β ->
                                         ClusterSpec.from_measured)
+  kernel_sweep        (system)         (measured HBM bw + launch overhead
+                                        -> DeviceSpec.from_measured)
+  overlap_check       (system)         (async start/done pairs bracket
+                                        intra/compute work; SKIPs on CPU)
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 One:     PYTHONPATH=src python -m benchmarks.run --only convergence
@@ -23,8 +27,9 @@ import time
 
 from benchmarks import (block_size_ablation, comm_fraction, comm_sweep,
                         comm_volume, convergence, dcgan_convergence,
-                        kernel_micro, resnet_convergence,
-                        throughput_scaling, variance_stability)
+                        kernel_micro, kernel_sweep, overlap_check,
+                        resnet_convergence, throughput_scaling,
+                        variance_stability)
 
 ALL = {
     "comm_volume": comm_volume.run,
@@ -37,6 +42,8 @@ ALL = {
     "kernel_micro": kernel_micro.run,
     "block_size_ablation": block_size_ablation.run,
     "comm_sweep": comm_sweep.run,
+    "kernel_sweep": kernel_sweep.run,
+    "overlap_check": overlap_check.run,
 }
 
 

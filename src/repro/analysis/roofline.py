@@ -13,10 +13,12 @@ and aggregates them bottom-up with multiplicities (while body x trip count,
 fusions/calls x 1). All quantities are PER DEVICE because the HLO is the
 SPMD per-device program.
 
-The three roofline terms (seconds, TPU v5e):
-  compute    = dot_flops / 197e12
-  memory     = hbm_bytes / 819e9
-  collective = wire_bytes / 50e9
+The three roofline terms (seconds) are priced against a
+:class:`repro.perf.device.DeviceSpec` — ``tpu-v5e`` by default, any
+preset or measured spec via ``analyze_compiled(..., device=...)``:
+  compute    = dot_flops / device.peak_flops
+  memory     = hbm_bytes / device.hbm_bw
+  collective = wire_bytes / device.ici_bw
 """
 from __future__ import annotations
 
@@ -27,7 +29,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.perf.device import DeviceSpec, TPU_V5E, as_device
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -262,9 +264,21 @@ class RooflineReport:
     arg_bytes: Optional[int] = None
     out_bytes: Optional[int] = None
     temp_bytes: Optional[int] = None
-    peak_flops: float = PEAK_FLOPS_BF16
-    hbm_bw: float = HBM_BW
-    ici_bw: float = ICI_BW
+    # the chip the terms are rooflined against (repro.perf.device — the
+    # one place hardware peaks live)
+    device: DeviceSpec = TPU_V5E
+
+    @property
+    def peak_flops(self) -> float:
+        return self.device.peak_flops
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.device.hbm_bw
+
+    @property
+    def ici_bw(self) -> float:
+        return self.device.ici_bw
 
     @property
     def t_compute(self) -> float:
@@ -304,9 +318,12 @@ class RooflineReport:
         }
 
 
-def analyze_compiled(compiled, entry: Optional[str] = None
-                     ) -> RooflineReport:
-    """Roofline terms from a jax Compiled object (per-device)."""
+def analyze_compiled(compiled, entry: Optional[str] = None,
+                     device=TPU_V5E) -> RooflineReport:
+    """Roofline terms from a jax Compiled object (per-device).
+
+    ``device`` is a :class:`repro.perf.device.DeviceSpec` or a preset
+    name — the peaks the three terms are priced against."""
     hlo = compiled.as_text()
     costs = parse_hlo_costs(hlo)
     root = entry
@@ -336,4 +353,5 @@ def analyze_compiled(compiled, entry: Optional[str] = None
         pass
     return RooflineReport(dot_flops=fl, hbm_bytes=hb, coll_bytes=cb,
                           coll_by_kind=kinds, xla_flops=xf, xla_bytes=xb,
-                          arg_bytes=ab, out_bytes=ob, temp_bytes=tb)
+                          arg_bytes=ab, out_bytes=ob, temp_bytes=tb,
+                          device=as_device(device))

@@ -20,6 +20,7 @@ from typing import Dict, Optional, Sequence
 
 from repro.configs.base import ArchConfig, InputShape
 from repro.core.compression import padded_length
+from repro.perf.device import as_device
 from repro.plan.cost import ClusterSpec, get_cluster, predict_step_time
 from repro.plan.schedules import allreduce_schedule
 from repro.plan.tune import autotune
@@ -45,6 +46,7 @@ def predict_point(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
                        batch_per_replica * spec.n_total, "train")
 
     # baseline: uncompressed dp-mean of the full gradient/momentum
+    # (a raw AllReduce carries no compressor compute, so comp=None)
     base_axes = ("pod", "data") if spec.n_outer > 1 else ("data",)
     base_tier = "cross" if spec.n_outer > 1 else "intra"
     d_base = padded_length(d, spec.n_total, block_size)
@@ -52,9 +54,21 @@ def predict_point(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
                                    tier=base_tier)
     base = predict_step_time(base_plan, spec, cfg, shape, tp)
 
+    from repro.optim.compressors import (compressor_has_kernel,
+                                         get_compressor)
+    kernel_opts = ((False, True) if compressor_has_kernel(compressor)
+                   else (False,))
     tuned = autotune(spec, d, compressors=[compressor],
-                     block_sizes=[block_size])
-    comp = predict_step_time(tuned.best.plan, spec, cfg, shape, tp)
+                     block_sizes=[block_size],
+                     use_kernel_options=kernel_opts)
+    # report with the SAME objective the tuner selected on: the
+    # compressor the best candidate actually prices (kernel flag
+    # included) charges its compress/EF compute into the step time
+    best_comp = get_compressor(
+        compressor, block_size=block_size,
+        **({"use_kernel": True} if tuned.best.use_kernel else {}))
+    comp = predict_step_time(tuned.best.plan, spec, cfg, shape, tp,
+                             comp=best_comp)
     return {
         "n_pods": spec.n_outer, "n_devices": spec.n_total * tp,
         "cluster": spec.name, "topology": tuned.best.topology,
@@ -63,6 +77,7 @@ def predict_point(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
         "t_step_compressed": comp["t_step"],
         "t_comm_adam": base["t_comm"],
         "t_comm_compressed": comp["t_comm"],
+        "t_exchange_compute": comp["t_exchange_compute"],
         "t_compute": comp["t_compute"],
         "tokens_per_s_adam": base.get("tokens_per_s", 0.0),
         "tokens_per_s_compressed": comp.get("tokens_per_s", 0.0),
@@ -74,8 +89,15 @@ def predicted_scaling(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
                       cluster: str, n_inner: int,
                       pod_counts: Sequence[int] = (1, 2, 4, 8, 16),
                       compressor: str = "onebit", block_size: int = 4096,
-                      tp: int = 1) -> Dict[int, Dict[str, object]]:
+                      tp: int = 1,
+                      device: str = "tpu-v5e"
+                      ) -> Dict[int, Dict[str, object]]:
     """Weak-scaling sweep over pod counts on a named cluster preset.
+
+    ``device`` names the chip (a ``repro.perf.device`` preset or
+    DeviceSpec) — its peaks set the 6ND compute term AND the tuner's
+    compute-stream pricing, so the same interconnect sweeps differently
+    on a v5e than on a v5p.
 
     Returns ``{n_pods: predict_point(...)}``.  On a bandwidth-starved
     preset (``ethernet-10g``) the compressed/uncompressed speedup GROWS
@@ -85,7 +107,8 @@ def predicted_scaling(cfg: ArchConfig, seq_len: int, batch_per_replica: int,
                        block=block_size)
     out = {}
     for n in pod_counts:
-        spec = get_cluster(cluster, n_inner=n_inner, n_outer=n)
+        spec = get_cluster(cluster, n_inner=n_inner, n_outer=n,
+                           device=as_device(device))
         out[n] = predict_point(cfg, seq_len, batch_per_replica, spec,
                                compressor=compressor,
                                block_size=block_size, tp=tp, d=d)

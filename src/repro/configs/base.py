@@ -191,6 +191,10 @@ class OptimSpec:
     # count N, or "auto" (repro.plan.tune searches the bucket count for
     # the described cluster; resolved by launch.train)
     pipeline: object = "off"
+    # fused Pallas compress path (kernels/onebit): "off", "on", or
+    # "auto" (the repro.perf compute model decides — pallas wins where
+    # the exchange is HBM/launch-bound on the described device)
+    use_kernel: object = "off"
 
 
 _OPTIM_RECIPES: Dict[str, OptimSpec] = {}

@@ -24,8 +24,8 @@ def make_mesh(shape, axes):
     return compat.make_mesh(shape, axes)
 
 
-# hardware constants (TPU v5e)
-PEAK_FLOPS_BF16 = 197e12      # per chip
-HBM_BW = 819e9                # bytes/s per chip
-ICI_BW = 50e9                 # bytes/s per link (≈ per-chip effective, 1 link)
-HBM_BYTES = 16 * 1024 ** 3    # 16 GiB per chip
+# hardware constants: single-sourced from repro.perf.device (the TPU v5e
+# preset) — re-exported here only for the legacy names; new code should
+# take a DeviceSpec
+from repro.perf.device import (HBM_BW, HBM_BYTES, ICI_BW,  # noqa: E402,F401
+                               PEAK_FLOPS_BF16)

@@ -40,32 +40,41 @@ from repro.train.step import (TrainStepConfig, _flat_dim, init_opt_state,
 
 def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
                      compressor: str, block_size: int,
-                     compressor_kwargs=None, verbose: bool = True):
+                     compressor_kwargs=None, verbose: bool = True,
+                     use_kernel="off", device: str = "tpu-v5e"):
     """Resolve the ``"auto"`` axes of the collective schedule with ONE
     joint ``repro.plan.autotune`` search; returns ``(topology,
-    n_buckets)``.
+    n_buckets, use_kernel)``.
 
     The mesh fixes the pod split (leading "pod" axis = n_outer); the
-    ``cluster`` preset fixes the link speeds; the recipe's compressor
-    and block size are pinned.  Topology and bucket count are tuned
-    TOGETHER when both are "auto" — tuning topology on serial plans and
-    then buckets with the topology pinned can miss the joint optimum
-    (e.g. a pipelined hier beating serial flat on a uniform fabric).
-    Explicit values pass through (``pipeline``: "off" -> 1, N -> N) and
+    ``cluster`` preset fixes the link speeds; the ``device`` preset (or
+    a ``kernel_sweep.py``-measured spec) fixes the compute roofline the
+    three-stream coster prices; the recipe's compressor and block size
+    are pinned.  Topology, bucket count and the jnp-vs-Pallas kernel
+    choice are tuned TOGETHER when "auto" — tuning topology on serial
+    plans and then buckets with the topology pinned can miss the joint
+    optimum (e.g. a pipelined hier beating serial flat on a uniform
+    fabric), and the kernel choice only matters through the compute
+    stream the joint search prices.  Explicit values pass through
+    (``pipeline``: "off" -> 1, N -> N; ``use_kernel``: "off"/"on") and
     pin their axis of the search.
     """
     pipe_auto = pipeline == "auto"
     topo_auto = topology == "auto"
+    kern_auto = use_kernel == "auto"
     n_buckets = 1
     if not pipe_auto and pipeline not in (None, "off"):
         n_buckets = int(pipeline)
         assert n_buckets >= 1, pipeline
-    if not topo_auto and not pipe_auto:
-        return topology, n_buckets
+    kernels = use_kernel in ("on", True)
+    if not topo_auto and not pipe_auto and not kern_auto:
+        return topology, n_buckets, kernels
+    from repro.optim import compressor_has_kernel
     from repro.plan import autotune, get_cluster
     dp_axes, dp_sizes, tp = mesh_axes(mesh)
     _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
-    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer)
+    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
+                       device=device)
     d = _flat_dim(cfg, tp, max(n_inner * n_outer, 1), block_size)
     if topo_auto:
         topos = ("flat", "hier") if n_outer > 1 else ("flat",)
@@ -74,25 +83,37 @@ def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
         # step; price what will actually run
         topos = (topology if (topology != "hier" or n_outer > 1)
                  else "flat",)
+    if kern_auto:
+        kernel_opts = ((False, True) if compressor_has_kernel(compressor)
+                       else (False,))
+    else:
+        kernel_opts = (kernels,)
     res = autotune(spec, d, compressors=[compressor],
                    block_sizes=[block_size], topologies=topos,
                    compressor_kwargs=compressor_kwargs,
                    n_buckets_options=(1, 2, 4, 8) if pipe_auto
-                   else (n_buckets,))
+                   else (n_buckets,),
+                   use_kernel_options=kernel_opts)
     best = res.best
     if verbose:
         print(f"[auto-schedule] cluster={spec.name} "
-              f"({n_outer} pod(s) x {n_inner} dp): picked "
-              f"{best.topology!r} x {best.n_buckets} bucket(s) "
-              f"(t_exchange {best.t_exchange*1e3:.3f} ms, "
+              f"({n_outer} pod(s) x {n_inner} dp, "
+              f"device={spec.device.name}): picked "
+              f"{best.topology!r} x {best.n_buckets} bucket(s), "
+              f"kernels={'pallas' if best.use_kernel else 'jnp'} "
+              f"(t_exchange {best.t_exchange*1e3:.3f} ms, compute "
+              f"{best.t_compute*1e3:.3f} ms, "
               f"DCI {best.dci_bytes_per_pod} B/pod)")
         for c in res.table:
             if c.valid:
                 print(f"    {c.topology:5s} buckets={c.n_buckets} "
+                      f"kernels={'pallas' if c.use_kernel else 'jnp':6s} "
                       f"t={c.t_exchange*1e3:.3f} ms "
+                      f"(compute {c.t_compute*1e3:.3f}) "
                       f"dci={c.dci_bytes_per_pod}")
     return (best.topology if topo_auto else topology,
-            best.n_buckets if pipe_auto else n_buckets)
+            best.n_buckets if pipe_auto else n_buckets,
+            best.use_kernel if kern_auto else kernels)
 
 
 def resolve_topology(topology: str, cluster: str, cfg, mesh,
@@ -114,6 +135,19 @@ def resolve_pipeline(pipeline, topology: str, cluster: str, cfg, mesh,
                             verbose)[1]
 
 
+def resolve_kernels(use_kernel, topology: str, cluster: str, cfg, mesh,
+                    compressor: str, block_size: int,
+                    compressor_kwargs=None, verbose: bool = True,
+                    device: str = "tpu-v5e") -> bool:
+    """``--kernels auto`` with topology/pipeline pinned (see
+    resolve_schedule): let the repro.perf compute model decide whether
+    the fused Pallas compress path pays on this (cluster, device)."""
+    return resolve_schedule(topology, "off", cluster, cfg, mesh,
+                            compressor, block_size, compressor_kwargs,
+                            verbose, use_kernel=use_kernel,
+                            device=device)[2]
+
+
 def lr_schedule(step: int, base_lr: float, lr_warmup: int,
                 decay: float = 0.99, decay_every: int = 520) -> float:
     """The paper's BERT schedule: linear warmup then step decay."""
@@ -130,7 +164,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         stage_override: Optional[str] = None, log_file: Optional[str] = None,
         recipe: str = "onebit_adam", optimizer: Optional[str] = None,
         compressor: Optional[str] = None, topology: Optional[str] = None,
-        cluster: str = "ethernet-10g", pipeline=None):
+        cluster: str = "ethernet-10g", pipeline=None, kernels=None,
+        device: str = "tpu-v5e"):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -157,9 +192,12 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
     pipeline_explicit = pipeline is not None
     if pipeline is None:
         pipeline = spec.pipeline
-    topology, n_buckets = resolve_schedule(
+    if kernels is None:
+        kernels = spec.use_kernel
+    topology, n_buckets, use_kernel = resolve_schedule(
         topology, pipeline, cluster, cfg, mesh, spec.compressor,
-        spec.block_size, spec.compressor_kwargs)
+        spec.block_size, spec.compressor_kwargs, use_kernel=kernels,
+        device=device)
     def effective_buckets(nb: int) -> int:
         """The bucket count the executor will actually use on THIS run's
         padded flat dimension (Bucketer clamps to the alignment-unit
@@ -178,7 +216,7 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         optimizer=spec.optimizer, compressor=spec.compressor,
         block_size=spec.block_size, opt_kwargs=spec.optimizer_kwargs,
         comp_kwargs=spec.compressor_kwargs, topology=topology,
-        pipeline=n_buckets)
+        pipeline=n_buckets, use_kernel=bool(use_kernel))
     optim = base_tsc.build_optimizer()
     layout = "local" if optim.may_skip_sync else "replicated"
     base_tsc = dataclasses.replace(base_tsc, layout=layout)
@@ -322,6 +360,16 @@ def main(argv=None):
                     help="bucketed pipelined exchange: off, auto, or a "
                          "bucket count N (>1 overlaps cross-pod legs "
                          "with intra-pod work; default = the recipe's)")
+    ap.add_argument("--kernels", default=None,
+                    choices=[None, "off", "on", "auto"],
+                    help="fused Pallas compress path (kernels/onebit): "
+                         "on/off, or auto = the repro.perf compute model "
+                         "decides per --cluster/--device; default = the "
+                         "recipe's")
+    ap.add_argument("--device", default="tpu-v5e",
+                    help="device preset for the compute-stream pricing "
+                         "(repro.perf.list_devices()), used by "
+                         "--topology/--pipeline/--kernels auto")
     ap.add_argument("--block-size", type=int, default=4096)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
@@ -339,7 +387,8 @@ def main(argv=None):
         log_file=args.log_file, recipe=args.recipe,
         optimizer=args.optimizer, compressor=args.compressor,
         topology=args.topology, cluster=args.cluster,
-        pipeline=args.pipeline)
+        pipeline=args.pipeline, kernels=args.kernels,
+        device=args.device)
 
 
 if __name__ == "__main__":

@@ -18,9 +18,9 @@ from repro.optim.base import (OptState, SegmentInfo, TwoStageOptimizer,
                               segments_of)
 from repro.optim.compressors import (Compressor, IdentityCompressor,
                                      OneBitCompressor, TopKCompressor,
-                                     as_compressor, from_config,
-                                     get_compressor, list_compressors,
-                                     register_compressor)
+                                     as_compressor, compressor_has_kernel,
+                                     from_config, get_compressor,
+                                     list_compressors, register_compressor)
 from repro.optim.switch import WarmupSwitch
 
 # registration side-effects
@@ -31,7 +31,8 @@ from repro.optim import zerone_adam as _zerone_adam    # noqa: F401
 __all__ = [
     "Compressor", "IdentityCompressor", "OneBitCompressor",
     "TopKCompressor", "OptState", "SegmentInfo", "TwoStageOptimizer",
-    "WarmupSwitch", "ZeroOptState", "as_compressor", "from_config",
+    "WarmupSwitch", "ZeroOptState", "as_compressor",
+    "compressor_has_kernel", "from_config",
     "get_compressor", "get_optimizer", "list_compressors",
     "list_optimizers", "register_compressor", "register_optimizer",
     "segment_norms", "segments_of",

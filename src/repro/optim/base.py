@@ -222,6 +222,24 @@ class TwoStageOptimizer:
         synchronise across dp? Default: every step (1-bit Adam)."""
         return True
 
+    def with_kernels(self, enabled: bool) -> "TwoStageOptimizer":
+        """This optimizer with the compressor's fused Pallas path
+        toggled (``launch.train --kernels`` / the tuner's ``use_kernel``
+        axis land here).  Numerics are unchanged — the kernel writes the
+        identical wire format — so flipping mid-run is safe.  Raises for
+        compressors without a kernel path when enabling."""
+        comp = self.compressor
+        if getattr(comp, "use_kernel", None) is bool(enabled):
+            return self
+        if enabled and not getattr(comp, "has_kernel", False):
+            raise ValueError(f"compressor {comp.name!r} has no fused "
+                             "kernel path (has_kernel=False)")
+        if not enabled and not hasattr(comp, "use_kernel"):
+            return self
+        return dataclasses.replace(
+            self, compressor=dataclasses.replace(comp,
+                                                 use_kernel=bool(enabled)))
+
     @property
     def may_skip_sync(self) -> bool:
         """True if ``sync_due`` can ever return False — drivers must then

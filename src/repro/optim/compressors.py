@@ -38,7 +38,9 @@ import jax.numpy as jnp
 
 from repro.core.compression import (CompressionConfig, DEFAULT_BLOCK,
                                     compress_onebit, decompress_onebit)
-from repro.plan.ir import WireSpec
+from repro.perf.kernel_cost import (ComputeSpec, ZERO_COMPUTE,
+                                    ef_combine_cost, elementwise_pass)
+from repro.plan.ir import WireSpec, log2ceil
 
 Payload = Tuple[jax.Array, ...]
 
@@ -54,6 +56,9 @@ class Compressor:
     # feedback on EVERY lossy hop — the hierarchical schedule's cross-pod
     # legs give them the dedicated ``outer`` EF slot (see core/comm.py)
     dense: bool = True
+    # True when the entry has a fused Pallas path behind ``use_kernel``
+    # (the tuner only enumerates the pallas axis where this is set)
+    has_kernel: bool = False
 
     def ef_compress(self, x: jax.Array, err: jax.Array
                     ) -> Tuple[Payload, jax.Array]:
@@ -82,12 +87,37 @@ class Compressor:
         from ``wire_specs`` — override the specs, not this)."""
         return sum(ws.nbytes for ws in self.wire_specs(d))
 
+    # --- declared compute (repro.perf), next to the declared wire format ---
+    def _compress_cost(self, d: int) -> ComputeSpec:
+        """Declared FLOPs/HBM bytes/kernel launches of ``compress``."""
+        raise NotImplementedError
+
+    def _decompress_cost(self, d: int) -> ComputeSpec:
+        """Declared FLOPs/HBM bytes/kernel launches of ``decompress``."""
+        raise NotImplementedError
+
+    def compute_specs(self, d: int) -> Dict[str, ComputeSpec]:
+        """Declared compute for a d-element f32 vector, keyed
+        ``compress`` / ``decompress`` / ``ef_compress`` — the compute
+        analogue of ``wire_specs`` and the single source the roofline
+        coster (``repro.plan.cost``) prices; ``tests/test_perf.py`` pins
+        the byte counts against the kernel/ref traffic.
+
+        The base composition mirrors the base ``ef_compress``: an add
+        pass, a compress, a decompress, and a residual pass.  Entries
+        whose ``use_kernel`` path fuses those (1-bit) override this."""
+        c = self._compress_cost(d)
+        dc = self._decompress_cost(d)
+        return {"compress": c, "decompress": dc,
+                "ef_compress": ef_combine_cost(d) + c + dc}
+
 
 @dataclasses.dataclass(frozen=True)
 class OneBitCompressor(Compressor):
     block_size: int = DEFAULT_BLOCK
     use_kernel: bool = False
     name = "onebit"
+    has_kernel = True
 
     def compress(self, x):
         return compress_onebit(x, self.block_size, self.use_kernel)
@@ -109,6 +139,35 @@ class OneBitCompressor(Compressor):
         return (WireSpec("uint8", (d // 8,)),
                 WireSpec("float32", (d // self.block_size,)))
 
+    # traffic counts pinned to kernels/onebit (module docstring there is
+    # the ground truth): fused EF-compress = 2 f32 reads + 1 f32 write +
+    # the wire output, ONE launch; the jnp chain re-reads the buffer per
+    # pass (pack pass + scale pass) and materializes the sign vector
+    def _compress_cost(self, d):
+        w = self.wire_bytes(d)
+        if self.use_kernel:
+            return ComputeSpec(flops=2.0 * d, hbm_bytes=4 * d + w,
+                               kernels=1)
+        return ComputeSpec(flops=2.0 * d, hbm_bytes=8 * d + w, kernels=2)
+
+    def _decompress_cost(self, d):
+        w = self.wire_bytes(d)
+        if self.use_kernel:
+            return ComputeSpec(flops=2.0 * d, hbm_bytes=w + 4 * d,
+                               kernels=1)
+        # unpack materializes the (d,) sign vector before the scale mul
+        return ComputeSpec(flops=2.0 * d, hbm_bytes=w + 12 * d, kernels=2)
+
+    def compute_specs(self, d):
+        specs = super().compute_specs(d)
+        if self.use_kernel:
+            # ef_compress_fused: buf, scale, pack, residual in ONE pass —
+            # reads x + err, writes new_err + the wire payload
+            w = self.wire_bytes(d)
+            specs["ef_compress"] = ComputeSpec(
+                flops=4.0 * d, hbm_bytes=12 * d + w, kernels=1)
+        return specs
+
 
 @dataclasses.dataclass(frozen=True)
 class IdentityCompressor(Compressor):
@@ -124,6 +183,18 @@ class IdentityCompressor(Compressor):
 
     def wire_specs(self, d):
         return (WireSpec("float32", (d,)),)
+
+    def _compress_cost(self, d):
+        return ZERO_COMPUTE          # payload IS the buffer; no copy
+
+    def _decompress_cost(self, d):
+        return ZERO_COMPUTE
+
+    def compute_specs(self, d):
+        # lossless: ef_compress is one add pass (new_err = zeros is
+        # constant-folded by XLA, not a data pass)
+        return {"compress": ZERO_COMPUTE, "decompress": ZERO_COMPUTE,
+                "ef_compress": elementwise_pass(d, 2, 1)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +249,20 @@ class TopKCompressor(Compressor):
         return (WireSpec("float32", (kept,)),
                 WireSpec(jnp.dtype(self.index_dtype).name, (kept,)))
 
+    def _compress_cost(self, d):
+        # abs pass + per-block top_k (O(B log B) work per block) +
+        # value gather; reads x twice, writes the (vals, idx) wire
+        w = self.wire_bytes(d)
+        return ComputeSpec(flops=float(d) * max(log2ceil(self.block_size),
+                                                1),
+                           hbm_bytes=8 * d + w, kernels=3)
+
+    def _decompress_cost(self, d):
+        # zeros init + scatter of the kept (value, index) pairs
+        w = self.wire_bytes(d)
+        return ComputeSpec(flops=float(d), hbm_bytes=4 * d + 2 * w,
+                           kernels=2)
+
 
 # --------------------------------------------------------------------------
 # registry
@@ -207,6 +292,16 @@ def get_compressor(name: str, **kwargs) -> Compressor:
 
 def list_compressors():
     return sorted(_COMPRESSORS)
+
+
+def compressor_has_kernel(name: str) -> bool:
+    """True when the registered entry has a fused Pallas path behind
+    ``use_kernel`` (checked WITHOUT constructing — the tuner and the
+    ``--kernels`` CLI use it to gate the pallas axis)."""
+    if name not in _COMPRESSORS:
+        raise KeyError(f"unknown compressor {name!r}; "
+                       f"registered: {sorted(_COMPRESSORS)}")
+    return bool(getattr(_COMPRESSORS[name], "has_kernel", False))
 
 
 def from_config(cfg: CompressionConfig) -> Compressor:

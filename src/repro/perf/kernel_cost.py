@@ -1,0 +1,108 @@
+"""ComputeSpec — declared FLOP/HBM-byte counts for the optimizer hot path.
+
+A :class:`ComputeSpec` is to compute what
+:class:`~repro.plan.ir.WireSpec` is to communication: a static, declared
+account of what an operation costs, priced against a
+:class:`~repro.perf.device.DeviceSpec` by the HBM-roofline formula
+
+    t = max(flops / peak_flops, hbm_bytes / hbm_bw) + kernels * overhead.
+
+Compressors declare their own specs next to ``wire_specs``
+(:meth:`repro.optim.compressors.Compressor.compute_specs`); this module
+holds the shared vocabulary plus the specs that are not compressor-owned
+(the fused-vs-unfused Adam update, elementwise passes, the EF fold).
+
+Byte counts are PASS counts over HBM, matching the kernel docstrings
+(the single sources of truth for the fused paths):
+
+  * ``kernels/onebit/kernel.py``: fused EF-compress streams each block
+    once — 2 f32 reads (x, err) + 1 f32 write (new_err) + the wire
+    output per element, ONE launch; the unfused ``ref.py``/jnp chain is
+    6 launches totalling ~11 f32 passes (44d bytes: add pass, 2-pass
+    compress, sign-materialising decompress, residual pass);
+  * ``kernels/fused_adam/kernel.py``: fused Adam is 4 reads + 3 writes
+    per element; unfused XLA materializes the m/v intermediates for
+    6 reads + 5 writes.
+
+Tests pin the closed forms below against exactly those counts
+(``tests/test_perf.py``), the same way wire bytes are pinned against the
+compiled HLO — change a kernel's traffic and the pin must move with it.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+F32 = 4  # bytes per float32 element
+
+
+@dataclasses.dataclass(frozen=True)
+class ComputeSpec:
+    """Declared cost of one compute step: FLOPs + HBM traffic + number
+    of kernel launches.  Additive: composing steps sums fields."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    kernels: int = 0
+
+    def __add__(self, other: "ComputeSpec") -> "ComputeSpec":
+        return ComputeSpec(self.flops + other.flops,
+                           self.hbm_bytes + other.hbm_bytes,
+                           self.kernels + other.kernels)
+
+    def time(self, device) -> float:
+        """Roofline seconds on ``device`` (a DeviceSpec)."""
+        return device.roofline_time(self.flops, self.hbm_bytes,
+                                    self.kernels)
+
+
+ZERO_COMPUTE = ComputeSpec()
+
+
+def elementwise_pass(d: int, n_read: int, n_write: int,
+                     flops_per_elem: float = 1.0) -> ComputeSpec:
+    """One fused elementwise kernel over ``d`` f32 elements reading
+    ``n_read`` operands and writing ``n_write`` results."""
+    return ComputeSpec(flops=flops_per_elem * d,
+                       hbm_bytes=F32 * d * (n_read + n_write),
+                       kernels=1)
+
+
+def adam_update_cost(d: int, fused: bool) -> ComputeSpec:
+    """The elementwise Adam/momentum-SGD update over ``d`` f32 elements.
+
+    fused (Pallas ``kernels/fused_adam``): one pass, 4 reads (x, m, v,
+    g) + 3 writes (x, m, v).  Unfused jnp: XLA materializes the m/v
+    EMAs and the preconditioned update — 6 reads + 5 writes across ~5
+    kernels (the kernel module docstring's measured account).
+    ~12 flops/element either way (two EMAs, square, sqrt, divide, axpy).
+    """
+    if fused:
+        return ComputeSpec(flops=12.0 * d, hbm_bytes=F32 * d * (4 + 3),
+                           kernels=1)
+    return ComputeSpec(flops=12.0 * d, hbm_bytes=F32 * d * (6 + 5),
+                       kernels=5)
+
+
+def ef_combine_cost(d: int) -> ComputeSpec:
+    """The EF bookkeeping around an UNFUSED compress: ``buf = x + err``
+    (2 reads, 1 write) and ``new_err = buf - decompress(payload)``
+    (2 reads, 1 write).  Fused EF kernels don't compose from this —
+    they override ``compute_specs`` wholesale (the documented extension
+    mechanism; see OneBitCompressor)."""
+    return elementwise_pass(d, 2, 1) + elementwise_pass(d, 2, 1)
+
+
+def fold_cost(d: int) -> ComputeSpec:
+    """The hierarchical gather's residual fold (sparse compressors):
+    ``resid = value - deco`` plus a dynamic-slice read-modify-write of
+    the chunk-sized EF slot — two elementwise passes over ``d``."""
+    return elementwise_pass(d, 2, 1) + elementwise_pass(d, 2, 1)
+
+
+def combine_cost(d_total: int, n: int) -> ComputeSpec:
+    """AllToAll's local combine: mean/sum of ``n`` decompressed chunks
+    (``d_total = n * chunk``): one reduction pass reading all chunks and
+    writing the (d_total/n,) combined chunk."""
+    return ComputeSpec(flops=float(d_total),
+                       hbm_bytes=F32 * (d_total + d_total // max(n, 1)),
+                       kernels=1)

@@ -34,6 +34,15 @@ a training run must keep one bucket count for those buffers to stay
 self-consistent — switching mid-run re-interprets (not loses) the
 residual layout, and ``n_buckets=1`` is byte-for-byte the serial plan.
 
+The compressor's ``use_kernel`` flag routes each bucket's compress /
+EF / decompress through the fused Pallas kernels (``kernels/onebit``)
+instead of the jnp chain; the wire format is bit-for-bit identical
+(tests/test_perf.py pins sign-bitmap parity per bucket, uneven buckets
+included), so kernel choice never affects what the collectives move —
+only the compute stream the cost model prices
+(``repro.plan.cost.pipeline_breakdown``, via the per-bucket
+ComputeSpec annotations ``lower_to_pipelined`` attaches).
+
 One genuine semantic caveat: the sparse outer-EF FOLD of the
 hierarchical schedule (``AllGather.fold_err_slot``) parks each rank's
 gather residual for the elements THAT RANK holds — and bucketing

@@ -45,12 +45,21 @@ from repro.pipeline.bucket import Bucketer
 @dataclasses.dataclass(frozen=True)
 class BucketPlan:
     """One bucket's slice of the exchange: offset/size into the flat
-    vector plus the re-specialised serial plan that moves it."""
+    vector plus the re-specialised serial plan that moves it.
+
+    ``compute`` carries one ``(pre, post)``
+    :class:`~repro.perf.kernel_cost.ComputeSpec` pair per op — the
+    compress/EF compute gating the op's wire leg and the decompress/
+    combine consuming it — so the cost model can schedule a third
+    ``"compute"`` stream beside the link tiers.  Purely a pricing
+    annotation: the executor's compute is whatever tracing the op
+    emits, and byte accounting ignores it entirely."""
 
     index: int
     offset: int
     size: int
     plan: CommPlan
+    compute: Tuple = ()   # ((pre, post) ComputeSpec) per op, or ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,6 +133,9 @@ class PipelinedPlan:
         for bp in self.buckets:
             assert bp.offset == off, (bp.offset, off)
             assert bp.plan.d == bp.size, (bp.plan.d, bp.size)
+            assert len(bp.compute) in (0, len(bp.plan.ops)), (
+                "compute annotations must cover every op or none",
+                len(bp.compute), len(bp.plan.ops))
             bp.plan.validate()
             ks = tuple((op.kind, op.tier, op.err_slot,
                         getattr(op, "fold_err_slot", None))
@@ -188,7 +200,14 @@ def _rebucket_op(op: CollectiveOp, comp, d: int, d_b: int) -> CollectiveOp:
 
 def lower_to_pipelined(plan: CommPlan, comp,
                        bucketer: Bucketer) -> PipelinedPlan:
-    """Lower ``plan`` onto ``bucketer``'s partition (see module doc)."""
+    """Lower ``plan`` onto ``bucketer``'s partition (see module doc).
+
+    Each bucket is annotated with its per-op (pre, post) ComputeSpecs
+    (``repro.plan.cost.op_compute`` over the compressor's declared
+    ``compute_specs`` — including the jnp-vs-Pallas split carried by
+    ``comp.use_kernel``), so ``pipelined_plan_time`` can schedule the
+    compute stream without re-deriving anything at pricing time."""
+    from repro.plan.cost import op_compute   # lazy: cost imports ir
     assert bucketer.d == plan.d, (bucketer.d, plan.d)
     buckets = []
     for i, (off, size) in enumerate(zip(bucketer.offsets, bucketer.sizes)):
@@ -196,7 +215,8 @@ def lower_to_pipelined(plan: CommPlan, comp,
                     for op in plan.ops)
         sub = CommPlan(name=f"{plan.name}@b{i}", d=size,
                        ops=ops).validate()
+        compute = tuple(op_compute(op, comp) for op in ops)
         buckets.append(BucketPlan(index=i, offset=off, size=size,
-                                  plan=sub))
+                                  plan=sub, compute=compute))
     return PipelinedPlan(name=f"pipe({plan.name})x{len(buckets)}",
                          d=plan.d, buckets=tuple(buckets)).validate()

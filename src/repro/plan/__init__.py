@@ -15,8 +15,9 @@ compiled HLO byte-for-byte.
 """
 from repro.plan.cost import (CLUSTERS, ClusterSpec, LinkSpec,
                              cross_pod_bytes, get_cluster, list_clusters,
-                             op_time, pipeline_breakdown,
-                             pipelined_plan_time, plan_time,
+                             op_compute, op_time, pipeline_breakdown,
+                             pipelined_plan_time, plan_compute,
+                             plan_compute_time, plan_time,
                              predict_step_time)
 from repro.plan.executor import execute_plan
 from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
@@ -32,6 +33,7 @@ __all__ = [
     "ReduceScatter", "TuneResult", "WireSpec", "allreduce_schedule",
     "autotune", "build_candidate", "cross_pod_bytes", "enumerate_candidates",
     "execute_plan", "flat_schedule", "get_cluster", "hier_schedule",
-    "list_clusters", "needs_outer_ef", "op_time", "pipeline_breakdown",
-    "pipelined_plan_time", "plan_time", "predict_step_time",
+    "list_clusters", "needs_outer_ef", "op_compute", "op_time",
+    "pipeline_breakdown", "pipelined_plan_time", "plan_compute",
+    "plan_compute_time", "plan_time", "predict_step_time",
 ]

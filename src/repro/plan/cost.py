@@ -20,6 +20,16 @@ Three consumers:
     prediction (the Fig. 7/8 throughput-scaling curves come from
     ``analysis.scaling``).
 
+Compute is a priced stream too (``repro.perf``): every ``ClusterSpec``
+embeds a :class:`~repro.perf.device.DeviceSpec`, ``op_compute`` maps
+each collective op to the (pre, post) HBM-roofline
+:class:`~repro.perf.kernel_cost.ComputeSpec` pair of its compress /
+decompress legs (single-sourced from
+``Compressor.compute_specs``), and ``pipeline_breakdown`` list-schedules
+THREE streams — ``compute`` / ``intra`` / ``cross`` — so fill/drain and
+the bottleneck stream reflect the compress/EF compute, not just wire
+time (the other half of the ESPRESSO-style overlap win).
+
 Per-op α-β formulas (n = group size, S = per-device operand bytes,
 O = per-device gathered-result chunk bytes), each plus the cluster's
 per-collective launch overhead ``op_overhead``.  Latency terms use the
@@ -36,9 +46,11 @@ device must serialize through its NIC:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
-from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.perf.device import DeviceSpec, TPU_V5E, as_device
+from repro.perf.kernel_cost import (ComputeSpec, ZERO_COMPUTE,
+                                    combine_cost, fold_cost)
 from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
                            CollectiveOp, CommPlan, ReduceScatter, log2ceil)
 
@@ -61,13 +73,23 @@ class ClusterSpec:
     cross: LinkSpec
     n_inner: int
     n_outer: int = 1
-    peak_flops: float = PEAK_FLOPS_BF16   # per device
-    hbm_bw: float = HBM_BW
+    # the chip: peak FLOPs / HBM bandwidth / kernel launch overhead —
+    # the ONE source of hardware peaks (repro.perf.device); the compute
+    # stream of pipelined pricing is rooflined against it
+    device: DeviceSpec = TPU_V5E
     # fixed cost per collective LAUNCH (kernel dispatch + group sync),
     # independent of the link tier. This is what makes a 2-op flat
     # schedule beat a 4-op hierarchical one on a uniform fabric where
     # both move identical total bytes.
     op_overhead: float = 5e-6
+
+    @property
+    def peak_flops(self) -> float:
+        return self.device.peak_flops
+
+    @property
+    def hbm_bw(self) -> float:
+        return self.device.hbm_bw
 
     @property
     def n_total(self) -> int:
@@ -102,6 +124,8 @@ class ClusterSpec:
                  if data.get("cross") else intra)
         if "op_overhead" in data:
             kw.setdefault("op_overhead", float(data["op_overhead"]))
+        if "device" in kw:
+            kw["device"] = as_device(kw["device"])
         return cls(name=str(data.get("name", "measured")),
                    intra=intra, cross=cross,
                    n_inner=int(n_inner if n_inner is not None
@@ -143,9 +167,13 @@ CLUSTERS: Dict[str, object] = {
 
 def get_cluster(name: str, n_inner: int, n_outer: int = 1,
                 **kw) -> ClusterSpec:
+    """Size a cluster preset; ``device=`` accepts a DeviceSpec or a
+    ``repro.perf`` preset name (default: tpu-v5e)."""
     if name not in CLUSTERS:
         raise KeyError(f"unknown cluster preset {name!r}; "
                        f"registered: {sorted(CLUSTERS)}")
+    if "device" in kw:
+        kw["device"] = as_device(kw["device"])
     return CLUSTERS[name](n_inner=n_inner, n_outer=n_outer, **kw)
 
 
@@ -190,43 +218,147 @@ def plan_time(plan: CommPlan, spec: ClusterSpec) -> float:
 
 
 # --------------------------------------------------------------------------
-# pipelined pricing (repro.pipeline.PipelinedPlan — duck-typed: anything
-# with .buckets / .issue_order() / per-bucket .plan.ops)
+# compute pricing (repro.perf: the op's compress/decompress legs)
 # --------------------------------------------------------------------------
 
-def pipeline_breakdown(pplan, spec: ClusterSpec) -> Dict[str, object]:
-    """Price a pipelined plan by simulating its dependency grid.
+def op_compute(op: CollectiveOp, comp) -> Tuple[ComputeSpec, ComputeSpec]:
+    """(pre, post) ComputeSpecs of one collective op: the compute that
+    must finish BEFORE its wire leg can start (EF-compress / fold of
+    the outgoing payload) and the compute that consumes the received
+    payload AFTER it (decompress + combine).
 
-    Each link tier is one *stream* (resource): ops on a stream run
-    serially in issue order, ops on different streams overlap.  Op
-    ``(b, s)`` starts at ``max(stream free, finish(b, s-1))`` — the
+    Mirrors ``repro.plan.executor`` rule for rule; the per-compressor
+    costs are single-sourced from ``Compressor.compute_specs`` (the
+    compute analogue of ``wire_specs``).  Raw-f32 ops (AllReduce /
+    ReduceScatter / Broadcast) carry no compressor compute — their
+    reduction math is part of the collective the link model prices.
+    ``comp=None`` (uncompressed plans) prices everything at zero.
+    """
+    if comp is None or isinstance(op, (AllReduce, ReduceScatter,
+                                       Broadcast)):
+        return ZERO_COMPUTE, ZERO_COMPUTE
+    specs = comp.compute_specs(op.d_in)
+    if op.err_slot is not None:
+        pre = specs["ef_compress"]
+    elif getattr(op, "fold_err_slot", None) is not None:
+        # plain compress + decompress (for the residual) + the fold's
+        # read-modify-write of the chunk EF slot
+        pre = specs["compress"] + specs["decompress"] + fold_cost(op.d_in)
+    else:
+        pre = specs["compress"]
+    if isinstance(op, AllToAll):
+        # decompress the n received chunks (d_in elements in total),
+        # then mean/sum-combine them into the (d_out,) result
+        post = specs["decompress"]
+        if op.n > 1:
+            post = post + combine_cost(op.d_in, op.n)
+    elif isinstance(op, AllGather):
+        post = comp.compute_specs(op.d_out)["decompress"]
+    else:  # pragma: no cover — compressed kinds are exactly the above
+        post = ZERO_COMPUTE
+    return pre, post
+
+
+def plan_compute(plan: CommPlan, comp) -> ComputeSpec:
+    """Total declared compute of one serial plan execution."""
+    total = ZERO_COMPUTE
+    for op in plan.ops:
+        pre, post = op_compute(op, comp)
+        total = total + pre + post
+    return total
+
+
+def plan_compute_time(plan: CommPlan, comp, spec: ClusterSpec) -> float:
+    """Roofline seconds of the plan's compute on ``spec.device`` — what
+    serial execution ADDS to ``plan_time`` (no stream to hide it in)."""
+    return plan_compute(plan, comp).time(spec.device)
+
+
+# --------------------------------------------------------------------------
+# pipelined pricing (repro.pipeline.PipelinedPlan — duck-typed: anything
+# with .n_buckets / .n_stages and per-bucket .plan.ops, plus optional
+# per-bucket .compute annotations of (pre, post) ComputeSpec pairs)
+# --------------------------------------------------------------------------
+
+def pipeline_breakdown(pplan, spec: ClusterSpec,
+                       include_compute: bool = True) -> Dict[str, object]:
+    """Price a pipelined plan by list-scheduling its dependency grid.
+
+    Each link tier is one *stream* (resource), and — when the lowering
+    attached per-bucket :class:`~repro.perf.kernel_cost.ComputeSpec`
+    stages (``lower_to_pipelined`` does by default) — the device's
+    compute engine is a THIRD stream named ``"compute"``: ops on a
+    stream run serially in issue order, ops on different streams
+    overlap.  Per grid point ``(b, s)`` the chain is
+
+        pre-compute(b, s)  ->  wire(b, s)  ->  post-compute(b, s)
+
+    with pre gated on bucket ``b``'s previous post (the value it
+    compresses) and every stage gated on its stream being free — the
     wavefront issue order makes the implicit ``(b-1, s)`` edge a
     consequence of stream exclusivity.  The total decomposes as the
     classic pipeline bound: the bottleneck stream's busy time plus the
     fill/drain it spends waiting on the other streams.
 
+    Compute stages are HBM-rooflined against ``spec.device``
+    (``ComputeSpec.time``); pass ``include_compute=False`` for the
+    link-only figure (what the coster priced before ``repro.perf`` —
+    the tuner's decision-change tests diff the two).
+
     Returns ``t_total`` (predicted seconds), ``t_serial`` (the SAME
-    per-bucket ops run back-to-back with no overlap — note this carries
-    the bucketing's extra per-op launches; compare against
+    per-bucket stages run back-to-back with no overlap — note this
+    carries the bucketing's extra per-op launches; compare against
     ``plan_time`` of the unlowered plan for the end-to-end win),
-    ``saved``, per-stream ``busy`` seconds, the ``bottleneck`` stream,
-    and its ``fill_drain`` slack.
+    ``saved``, per-stream ``busy`` seconds (``compute`` included), the
+    ``bottleneck`` stream, and its ``fill_drain`` slack.
     """
     free: Dict[str, float] = {}
     busy: Dict[str, float] = {}
-    finish = [[0.0] * len(bp.plan.ops) for bp in pplan.buckets]
-    t_total = 0.0
-    for b, s in pplan.issue_order():
-        op = pplan.buckets[b].plan.ops[s]
-        t = op_time(op, spec)
-        dep = finish[b][s - 1] if s > 0 else 0.0
-        start = max(free.get(op.tier, 0.0), dep)
-        finish[b][s] = start + t
-        free[op.tier] = start + t
-        busy[op.tier] = busy.get(op.tier, 0.0) + t
-        t_total = max(t_total, start + t)
-    t_serial = sum(sum(op_time(op, spec) for op in bp.plan.ops)
-                   for bp in pplan.buckets)
+    dev = spec.device
+
+    def on_stream(stream: str, dep: float, t: float) -> float:
+        if t <= 0.0:
+            return dep          # zero-cost stage: pure pass-through
+        start = max(free.get(stream, 0.0), dep)
+        free[stream] = start + t
+        busy[stream] = busy.get(stream, 0.0) + t
+        return start + t
+
+    # each grid point (b, s) is THREE schedulable units — pre-compute,
+    # wire, post-compute — issued in a fine-grained wavefront over
+    # (bucket, 3*s + phase).  Issuing bucket b+1's pre BEFORE bucket b's
+    # post is what lets the compute stream fill the gap while bucket b's
+    # wire leg is in flight (an eager pre->wire->post per grid point
+    # would serialize the compute stream on every wire finish and price
+    # zero overlap).  With no compute stages every pre/post is a
+    # pass-through and this reduces exactly to the two-stream wavefront.
+    n_b, n_units = pplan.n_buckets, 3 * pplan.n_stages
+    finish = [[0.0] * n_units for _ in range(n_b)]
+    t_total = t_serial = 0.0
+    for tick in range(n_b + n_units - 1):
+        for sigma in range(n_units):
+            b = tick - sigma
+            if not 0 <= b < n_b:
+                continue
+            s, phase = divmod(sigma, 3)
+            bp = pplan.buckets[b]
+            op = bp.plan.ops[s]
+            pre = post = None
+            if include_compute and getattr(bp, "compute", ()):
+                pre, post = bp.compute[s]
+            dep = finish[b][sigma - 1] if sigma > 0 else 0.0
+            if phase == 0:
+                t = pre.time(dev) if pre is not None else 0.0
+                end = on_stream("compute", dep, t)
+            elif phase == 1:
+                t = op_time(op, spec)
+                end = on_stream(op.tier, dep, t)
+            else:
+                t = post.time(dev) if post is not None else 0.0
+                end = on_stream("compute", dep, t)
+            finish[b][sigma] = end
+            t_serial += t
+            t_total = max(t_total, end)
     bottleneck = max(busy, key=busy.get) if busy else "intra"
     return {"t_total": t_total, "t_serial": t_serial,
             "saved": t_serial - t_total, "busy": busy,
@@ -234,14 +366,16 @@ def pipeline_breakdown(pplan, spec: ClusterSpec) -> Dict[str, object]:
             "fill_drain": t_total - busy.get(bottleneck, 0.0)}
 
 
-def pipelined_plan_time(pplan, spec: ClusterSpec) -> float:
+def pipelined_plan_time(pplan, spec: ClusterSpec,
+                        include_compute: bool = True) -> float:
     """Predicted seconds for one pipelined execution (overlap priced).
 
-    With one bucket this equals ``plan_time`` of the serial plan; more
-    buckets trade per-op launch latency (each op splits into one per
-    bucket) against cross-stream overlap — the tuner searches that
-    trade (``repro.plan.tune``)."""
-    return pipeline_breakdown(pplan, spec)["t_total"]
+    With one bucket this equals the serial plan run stage by stage;
+    more buckets trade per-op launch latency (each op splits into one
+    per bucket) against cross-stream overlap — including hiding the
+    compress/EF compute under another bucket's wire legs — and the
+    tuner searches that trade (``repro.plan.tune``)."""
+    return pipeline_breakdown(pplan, spec, include_compute)["t_total"]
 
 
 def cross_pod_bytes(plan: CommPlan, spec: ClusterSpec) -> int:
@@ -271,16 +405,26 @@ def cross_pod_bytes(plan: CommPlan, spec: ClusterSpec) -> int:
 
 def predict_step_time(plan: CommPlan, spec: ClusterSpec, cfg=None,
                       shape=None, tp: int = 1,
-                      exchanges_per_step: int = 1) -> Dict[str, float]:
+                      exchanges_per_step: int = 1,
+                      comp=None) -> Dict[str, float]:
     """Absolute step-time prediction: α-β comm time for the optimizer
     exchange + 6ND compute time from ``analysis.model_math``.
 
-    Returns a dict with ``t_comm``, ``t_compute``, ``t_step`` (seconds)
-    and, when ``cfg``/``shape`` are given, ``tokens_per_s`` across the
-    whole cluster (``spec.n_total`` dp replicas x ``tp`` model shards).
+    Pass the plan's compressor as ``comp`` to also charge the exchange's
+    own compress/EF compute (``t_exchange_compute``, rooflined on
+    ``spec.device``) — the tuner selects plans with that term priced in,
+    so reporting without it over-predicts compressed throughput.
+
+    Returns a dict with ``t_comm`` (links), ``t_exchange_compute``,
+    ``t_compute`` (model 6ND), ``t_step`` (seconds) and, when
+    ``cfg``/``shape`` are given, ``tokens_per_s`` across the whole
+    cluster (``spec.n_total`` dp replicas x ``tp`` model shards).
     """
     t_comm = exchanges_per_step * plan_time(plan, spec)
-    out: Dict[str, float] = {"t_comm": t_comm, "t_compute": 0.0}
+    t_xc = exchanges_per_step * plan_compute_time(plan, comp, spec) \
+        if comp is not None else 0.0
+    out: Dict[str, float] = {"t_comm": t_comm, "t_compute": 0.0,
+                             "t_exchange_compute": t_xc}
     if cfg is not None and shape is not None:
         from repro.analysis.model_math import model_flops  # lazy: no cycle
         fl = model_flops(cfg, shape, tp)
@@ -288,7 +432,7 @@ def predict_step_time(plan: CommPlan, spec: ClusterSpec, cfg=None,
         devices = spec.n_total * tp
         out["t_compute"] = total / (devices * spec.peak_flops)
         out["flops_total"] = total
-    out["t_step"] = out["t_compute"] + t_comm
+    out["t_step"] = out["t_compute"] + t_comm + t_xc
     if cfg is not None and shape is not None and out["t_step"] > 0:
         tokens = shape.global_batch * shape.seq_len
         out["tokens_per_s"] = tokens / out["t_step"]

@@ -1,9 +1,17 @@
 """Cluster auto-tuner: pick the cheapest valid collective schedule.
 
 ``autotune`` enumerates (topology x compressor x block_size x
-n_buckets) for a given :class:`~repro.plan.cost.ClusterSpec` + flat
-model dimension, prices every candidate with the α-β model (pipelined
-pricing when ``n_buckets > 1``), and returns the cheapest VALID plan.
+n_buckets x use_kernel) for a given :class:`~repro.plan.cost
+.ClusterSpec` + flat model dimension, prices every candidate with the
+α-β model (pipelined pricing when ``n_buckets > 1``), and returns the
+cheapest VALID plan.  With ``price_compute=True`` (the default) each
+candidate's compress/EF/decompress compute is HBM-rooflined against
+``spec.device`` (``repro.perf``) and folded into the price — serially
+for unpipelined plans, as a third overlappable stream for pipelined
+ones — which is what lets the ``use_kernel`` axis (jnp vs fused
+Pallas; identical wire bytes, different passes and launches) change a
+decision at all, and lets a compute-bound device veto bucket counts
+whose extra kernel launches cost more than the overlap buys.
 Validity is structural, not heuristic:
 
   * ``hier`` needs a real pod split (``spec.n_outer > 1``); when it runs
@@ -40,7 +48,8 @@ from typing import Dict, Optional, Sequence, Tuple
 from repro.core.compression import padded_length
 from repro.plan import schedules
 from repro.plan.cost import (ClusterSpec, cross_pod_bytes,
-                             pipelined_plan_time, plan_time)
+                             pipelined_plan_time, plan_compute_time,
+                             plan_time)
 from repro.plan.ir import CommPlan
 
 TOPOLOGIES = ("flat", "hier")
@@ -49,13 +58,13 @@ TOPOLOGIES = ("flat", "hier")
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One priced point of the (topology x compressor x block x buckets
-    x sync interval) grid."""
+    x use_kernel x sync interval) grid."""
 
     topology: str
     compressor: str
     block_size: int
     plan: Optional[CommPlan]
-    t_exchange: float            # alpha-beta seconds per sync exchange
+    t_exchange: float            # priced seconds per sync exchange
     hlo_bytes: float             # per-device collective bytes (HLO conv.)
     dci_bytes_per_pod: int       # bytes/pod over the cross tier
     d_padded: int
@@ -64,6 +73,9 @@ class Candidate:
     why: str = ""                # reason when invalid
     n_buckets: int = 1           # EFFECTIVE pipeline bucket count
     sync_interval: int = 1       # steps between exchanges (0/1 Adam)
+    use_kernel: bool = False     # fused Pallas compress path priced
+    t_compute: float = 0.0       # compute share of t_exchange (roofline
+    #                              busy seconds; 0 when not priced)
 
     @property
     def t_step_avg(self) -> float:
@@ -80,7 +92,9 @@ class Candidate:
                 "block_size": self.block_size, "valid": self.valid,
                 "n_buckets": self.n_buckets,
                 "sync_interval": self.sync_interval,
+                "use_kernel": self.use_kernel,
                 "t_exchange_s": self.t_exchange,
+                "t_compute_s": self.t_compute,
                 "t_step_avg_s": self.t_step_avg,
                 "hlo_bytes": self.hlo_bytes,
                 "bytes_per_step": self.bytes_per_step,
@@ -109,34 +123,57 @@ def _axes_for(spec: ClusterSpec, topology: str):
 
 
 def _invalid(topology, compressor, block_size, d, why,
-             n_buckets=1, sync_interval=1) -> Candidate:
+             n_buckets=1, sync_interval=1, use_kernel=False) -> Candidate:
     # record the REQUESTED bucket count so the table/CI artifact shows
     # every enumerated grid point, not one collapsed row
     return Candidate(topology, compressor, block_size, None,
                      float("inf"), 0.0, 0, d, valid=False, why=why,
-                     n_buckets=n_buckets, sync_interval=sync_interval)
+                     n_buckets=n_buckets, sync_interval=sync_interval,
+                     use_kernel=use_kernel)
 
 
 def build_candidate(spec: ClusterSpec, d: int, topology: str,
                     compressor: str, block_size: int,
                     compressor_kwargs: Optional[dict] = None,
                     n_buckets: int = 1,
-                    sync_interval: int = 1) -> Candidate:
-    """Price one (topology, compressor, block_size, n_buckets) point."""
-    from repro.optim.compressors import get_compressor  # lazy: no cycle
+                    sync_interval: int = 1,
+                    use_kernel: bool = False,
+                    price_compute: bool = True) -> Candidate:
+    """Price one (topology, compressor, block_size, n_buckets,
+    use_kernel) point.
+
+    ``price_compute`` folds the compressor's declared compute
+    (``repro.perf``) into the price: serially for ``n_buckets == 1``
+    (the serial executor has no stream to hide it in), via the
+    three-stream list schedule otherwise.  ``use_kernel`` prices (and,
+    when the plan is executed, runs) the fused Pallas compress path —
+    identical wire bytes, fewer HBM passes and launches; compressors
+    without a kernel path yield an invalid candidate."""
+    from repro.optim.compressors import (compressor_has_kernel,
+                                         get_compressor)  # lazy: no cycle
     kw = dict(compressor_kwargs or {})
     kw["block_size"] = block_size
+    if use_kernel:
+        try:
+            if not compressor_has_kernel(compressor):
+                return _invalid(topology, compressor, block_size, d,
+                                "no fused kernel path", n_buckets,
+                                sync_interval, use_kernel)
+        except KeyError as e:
+            return _invalid(topology, compressor, block_size, d, str(e),
+                            n_buckets, sync_interval, use_kernel)
+        kw["use_kernel"] = True
     try:
         comp = get_compressor(compressor, **kw)
     except (AssertionError, TypeError, KeyError) as e:
         return _invalid(topology, compressor, block_size, d, str(e),
-                        n_buckets, sync_interval)
+                        n_buckets, sync_interval, use_kernel)
     d_pad = padded_length(d, spec.n_total, block_size)
     if topology == "hier":
         if spec.n_outer <= 1:
             return _invalid(topology, compressor, block_size, d_pad,
                             "hier needs n_outer > 1", n_buckets,
-                            sync_interval)
+                            sync_interval, use_kernel)
         inner_axes, outer_axes = _axes_for(spec, topology)
         outer_ef = schedules.needs_outer_ef(comp)
         plan = schedules.hier_schedule(comp, d_pad, spec.n_inner,
@@ -150,19 +187,26 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         outer_ef = False
     if n_buckets > 1:
         from repro.pipeline import Bucketer, lower_to_pipelined
+        from repro.plan.cost import pipeline_breakdown
         bk = Bucketer.for_exchange(d_pad, spec.n_total, block_size,
                                    n_buckets)
         pplan = lower_to_pipelined(plan, comp, bk)
-        t_ex = pipelined_plan_time(pplan, spec)
+        bd = pipeline_breakdown(pplan, spec,
+                                include_compute=price_compute)
+        t_ex = bd["t_total"]
+        t_comp = float(bd["busy"].get("compute", 0.0))
         eff_buckets = bk.n_buckets
     else:
-        t_ex = plan_time(plan, spec)
+        t_comp = (plan_compute_time(plan, comp, spec)
+                  if price_compute else 0.0)
+        t_ex = plan_time(plan, spec) + t_comp
         eff_buckets = 1
     return Candidate(topology, compressor, block_size, plan,
                      t_ex, plan.hlo_bytes(),
                      cross_pod_bytes(plan, spec), d_pad,
                      outer_ef=outer_ef, n_buckets=eff_buckets,
-                     sync_interval=max(sync_interval, 1))
+                     sync_interval=max(sync_interval, 1),
+                     use_kernel=use_kernel, t_compute=t_comp)
 
 
 def enumerate_candidates(spec: ClusterSpec, d: int,
@@ -171,7 +215,9 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
                          topologies: Sequence[str] = TOPOLOGIES,
                          compressor_kwargs: Optional[dict] = None,
                          n_buckets_options: Sequence[int] = (1,),
-                         sync_intervals: Sequence[int] = (1,)
+                         sync_intervals: Sequence[int] = (1,),
+                         use_kernel_options: Sequence[bool] = (False,),
+                         price_compute: bool = True
                          ) -> Tuple[Candidate, ...]:
     from repro.optim.compressors import list_compressors
     names = list(compressors) if compressors else list_compressors()
@@ -181,23 +227,27 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
         for name in names:
             for block in block_sizes:
                 for nb in n_buckets_options:
-                    # build/price the plan ONCE; the sync interval only
-                    # rescales the derived per-step figures
-                    base = build_candidate(spec, d, topo, name, block,
-                                           compressor_kwargs, n_buckets=nb)
-                    out.extend(dataclasses.replace(
-                        base, sync_interval=max(si, 1))
-                        for si in sync_intervals)
+                    for uk in use_kernel_options:
+                        # build/price the plan ONCE; the sync interval
+                        # only rescales the derived per-step figures
+                        base = build_candidate(
+                            spec, d, topo, name, block,
+                            compressor_kwargs, n_buckets=nb,
+                            use_kernel=uk, price_compute=price_compute)
+                        out.extend(dataclasses.replace(
+                            base, sync_interval=max(si, 1))
+                            for si in sync_intervals)
     return tuple(out)
 
 
 def _dedupe(cands: Tuple[Candidate, ...]) -> Tuple[Candidate, ...]:
     """Clamped bucket counts collapse onto the same effective candidate;
-    keep the first of each (topology, comp, block, buckets, interval)."""
+    keep the first of each (topology, comp, block, buckets, kernel,
+    interval)."""
     seen, out = set(), []
     for c in cands:
         key = (c.topology, c.compressor, c.block_size, c.n_buckets,
-               c.sync_interval, c.valid)
+               c.sync_interval, c.use_kernel, c.valid)
         if key in seen:
             continue
         seen.add(key)
@@ -212,6 +262,8 @@ def autotune(spec: ClusterSpec, d: int,
              compressor_kwargs: Optional[dict] = None,
              n_buckets_options: Sequence[int] = (1,),
              sync_intervals: Sequence[int] = (1,),
+             use_kernel_options: Sequence[bool] = (False,),
+             price_compute: bool = True,
              max_bytes_per_step: Optional[float] = None,
              max_t_per_step: Optional[float] = None) -> TuneResult:
     """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
@@ -221,12 +273,21 @@ def autotune(spec: ClusterSpec, d: int,
     average per-step exchange time, then fewer buckets (less fill/drain
     exposure and trace size), then ``flat`` before ``hier`` (fewer
     stages, no outer EF state), then the larger block size (fewer scale
-    bytes).  ``max_bytes_per_step`` / ``max_t_per_step`` mark
-    over-budget candidates invalid (``why="over comm budget"``).
+    bytes), then the jnp path before the Pallas kernel (only take on
+    kernel surface when it pays).  ``max_bytes_per_step`` /
+    ``max_t_per_step`` mark over-budget candidates invalid
+    (``why="over comm budget"``).
+
+    ``price_compute=False`` reverts to link-only pricing — the pre-
+    ``repro.perf`` objective, kept so decision diffs are testable (and
+    for fabrics whose compute genuinely runs elsewhere).  Link-only
+    pricing cannot distinguish ``use_kernel`` candidates (identical
+    wire bytes): the tie-break then always keeps the jnp path.
     """
     table = _dedupe(enumerate_candidates(
         spec, d, compressors, block_sizes, topologies, compressor_kwargs,
-        n_buckets_options, sync_intervals))
+        n_buckets_options, sync_intervals, use_kernel_options,
+        price_compute))
     if max_bytes_per_step is not None or max_t_per_step is not None:
         budgeted = []
         for c in table:
@@ -244,5 +305,5 @@ def autotune(spec: ClusterSpec, d: int,
     best = min(valid, key=lambda c: (c.sync_interval, c.t_step_avg,
                                      c.n_buckets,
                                      TOPOLOGIES.index(c.topology),
-                                     -c.block_size))
+                                     -c.block_size, c.use_kernel))
     return TuneResult(best=best, table=table)

@@ -103,6 +103,13 @@ class TrainStepConfig:
     #                                driver (launch.train, per --cluster)
     #                                before the step is built
     block_size: int = 4096          # compression block / padding basis
+    use_kernel: Any = "off"         # fused Pallas compress path:
+    #                                "off"/False (jnp), "on"/True
+    #                                (kernels/onebit — requires a
+    #                                compressor with has_kernel). "auto"
+    #                                must be resolved by the driver
+    #                                (launch.train, via the repro.perf
+    #                                compute model) before steps build
     opt_kwargs: Optional[dict] = None   # extra optimizer hyperparams
     comp_kwargs: Optional[dict] = None  # extra compressor kwargs
     # legacy config object; when set it defines the optimizer (onebit_adam)
@@ -138,9 +145,29 @@ class TrainStepConfig:
                 **(self.opt_kwargs or {}))
         comp_kwargs = dict(self.comp_kwargs or {})
         comp_kwargs.setdefault("block_size", self.block_size)
+        if self.kernel_enabled:
+            from repro.optim.compressors import compressor_has_kernel
+            if not compressor_has_kernel(self.compressor):
+                raise ValueError(
+                    f"use_kernel={self.use_kernel!r}: compressor "
+                    f"{self.compressor!r} has no fused Pallas path "
+                    "(has_kernel=False) — use --kernels off/auto")
+            comp_kwargs["use_kernel"] = True
         return get_optimizer(self.optimizer, compressor=self.compressor,
                              compressor_kwargs=comp_kwargs,
                              **(self.opt_kwargs or {}))
+
+    @property
+    def kernel_enabled(self) -> bool:
+        """Resolved ``use_kernel`` ("off" -> False, "on" -> True)."""
+        if self.use_kernel in (None, "off", False):
+            return False
+        assert self.use_kernel != "auto", \
+            ("use_kernel='auto' must be resolved by the driver "
+             "(launch.train.resolve_schedule, via the repro.perf compute "
+             "model) before building steps")
+        assert self.use_kernel in ("on", True), self.use_kernel
+        return True
 
     @property
     def n_buckets(self) -> int:

@@ -191,34 +191,48 @@ class TestPipelinedCost:
 
     def test_acceptance_strictly_faster_on_ethernet10g(self):
         """Acceptance: pipelined pricing strictly below serial on the
-        ethernet-10g preset with >= 2 buckets."""
+        ethernet-10g preset with >= 2 buckets — with the compute stream
+        priced (repro.perf), serial = links + compute back-to-back."""
+        from repro.plan import plan_compute_time
         spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
         comp, plan = self._hier()
-        t_serial = plan_time(plan, spec)
+        t_serial = plan_time(plan, spec) + plan_compute_time(plan, comp,
+                                                             spec)
         for nb in (2, 4):
             pp = lower_to_pipelined(
                 plan, comp,
                 Bucketer.for_exchange(plan.d, 8, comp.block_size, nb))
             assert pipelined_plan_time(pp, spec) < t_serial, nb
+            # the link-only figure still prices below link-only serial
+            assert pipelined_plan_time(pp, spec, include_compute=False) \
+                < plan_time(plan, spec), nb
 
     def test_one_bucket_prices_exactly_serial(self):
+        from repro.plan import plan_compute_time
         spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
         comp, plan = self._hier(d=1 << 20)
         pp = lower_to_pipelined(
             plan, comp, Bucketer.for_exchange(plan.d, 8, 4096, 1))
         assert pipelined_plan_time(pp, spec) == pytest.approx(
-            plan_time(plan, spec), rel=1e-12)
+            plan_time(plan, spec) + plan_compute_time(plan, comp, spec),
+            rel=1e-12)
+        assert pipelined_plan_time(pp, spec, include_compute=False) == \
+            pytest.approx(plan_time(plan, spec), rel=1e-12)
 
     def test_latency_dominated_exchange_gets_slower(self):
         """Tiny exchange on a high-latency link: bucketing only adds
-        per-op launches — the model must price that, or the tuner would
-        always pick max buckets."""
+        per-op launches (link AND kernel) — the model must price that,
+        or the tuner would always pick max buckets."""
+        from repro.plan import plan_compute_time
         spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
         comp, plan = self._hier(d=8 * 4096 * 8)   # ~8 KiB cross legs:
         pp = lower_to_pipelined(                   # alpha=50us dominates
             plan, comp, Bucketer.for_exchange(plan.d, 8, 4096, 8))
         assert pp.n_buckets == 8
-        assert pipelined_plan_time(pp, spec) > plan_time(plan, spec)
+        assert pipelined_plan_time(pp, spec) > \
+            plan_time(plan, spec) + plan_compute_time(plan, comp, spec)
+        assert pipelined_plan_time(pp, spec, include_compute=False) > \
+            plan_time(plan, spec)
 
     def test_breakdown_decomposition(self):
         spec = get_cluster("ethernet-10g", n_inner=4, n_outer=2)
@@ -226,13 +240,19 @@ class TestPipelinedCost:
         pp = lower_to_pipelined(
             plan, comp, Bucketer.for_exchange(plan.d, 8, 4096, 4))
         bd = pipeline_breakdown(pp, spec)
-        assert bd["bottleneck"] == "cross"
+        # the 1-bit EF compute is the honest bottleneck of this exchange
+        # on a v5e — exactly what link-only pricing could not see
+        assert bd["bottleneck"] == "compute"
         assert bd["t_total"] == pytest.approx(
-            bd["busy"]["cross"] + bd["fill_drain"])
+            bd["busy"]["compute"] + bd["fill_drain"])
         assert bd["t_total"] <= bd["t_serial"]
         assert bd["saved"] == pytest.approx(bd["t_serial"] - bd["t_total"])
         # every stream's busy time lower-bounds the schedule
         assert all(bd["t_total"] >= b for b in bd["busy"].values())
+        # link-only view: the wire bottleneck is the slow cross tier
+        bd0 = pipeline_breakdown(pp, spec, include_compute=False)
+        assert bd0["bottleneck"] == "cross"
+        assert "compute" not in bd0["busy"]
 
     def test_uncompressed_allreduce_plan_prices_too(self):
         spec = get_cluster("ethernet-10g", n_inner=8, n_outer=1)
