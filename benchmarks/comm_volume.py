@@ -99,25 +99,29 @@ for kind in {kinds!r}:
     outer_ef = needs_outer_ef(comp)
 
     def measure_hier(key, n_buckets):
-        def body2(x, we, se, oe):
-            res = compressed_allreduce_hierarchical(
-                x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
-                outer_axes=("pod",), cfg=comp,
-                outer_err=oe[0, 0] if outer_ef else None,
-                n_buckets=n_buckets)
-            o, nw, ns = res[:3]
-            noe = res[3] if outer_ef else oe[0, 0]
-            return (o[None, None], nw[None, None], ns[None, None],
-                    noe[None, None])
+        def body2(x, we, se, oe, oae):
+            errs = {{"worker": we[0, 0], "server": se[0, 0]}}
+            if outer_ef:
+                errs["outer"] = oe[0, 0]
+                errs["outer_ag"] = oae[0, 0]
+            o, errs = compressed_allreduce_hierarchical(
+                x[0, 0], errs, inner_axes=("data",),
+                outer_axes=("pod",), cfg=comp, n_buckets=n_buckets)
+            lift = lambda a: a[None, None]
+            return (lift(o), lift(errs["worker"]), lift(errs["server"]),
+                    lift(errs.get("outer", oe[0, 0])),
+                    lift(errs.get("outer_ag", oae[0, 0])))
 
         f2 = jax.jit(jax.shard_map(
-            body2, mesh=mesh2, in_specs=(P("pod", "data", None),) * 4,
-            out_specs=(P("pod", "data", None),) * 4, check_vma=False))
+            body2, mesh=mesh2, in_specs=(P("pod", "data", None),) * 5,
+            out_specs=(P("pod", "data", None),) * 5, check_vma=False))
         args2 = (jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
                  jax.ShapeDtypeStruct((n_out, n_in, d), jnp.float32),
                  jax.ShapeDtypeStruct((n_out, n_in, d // n_in),
                                       jnp.float32),
                  jax.ShapeDtypeStruct((n_out, n_in, d // n_in),
+                                      jnp.float32),
+                 jax.ShapeDtypeStruct((n_out, n_in, d // (n_in * n_out)),
                                       jnp.float32))
         rep2 = analyze_compiled(f2.lower(*args2).compile())
         out[key] = {{"bytes": rep2.coll_bytes,

@@ -32,7 +32,8 @@ from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.optim import list_optimizers
-from repro.train.step import TrainStepConfig, init_opt_state, make_train_step
+from repro.train.step import (TrainStepConfig, init_train_state,
+                              make_train_step)
 
 # LR/block chosen where Adam is stable but the naive compressed variant's
 # corrupted variance estimate visibly degrades (the paper's Fig. 1 regime):
@@ -68,7 +69,7 @@ def _train_registry(optimizer: str, compressor: str,
     s_c = make_train_step(cfg, mesh,
                           dataclasses.replace(tsc, stage="compressed"),
                           donate=False)
-    opt = init_opt_state(cfg, mesh, block=BLOCK)
+    opt = init_train_state(cfg, mesh, block=BLOCK)
     losses = []
     for t in range(steps):
         fn = s_w if t < warmup else s_c

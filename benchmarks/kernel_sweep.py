@@ -9,20 +9,25 @@ and kernel dispatch overhead — on whatever backend the process runs on
 (mirror of ``comm_sweep.py``, which does the same for link α/β).
 
 For each timed op the model is the SAME one the coster prices
-(``ComputeSpec.time`` with the memory roofline binding — the swept
-kernels are memory-bound by construction, so the flops term never
-binds):
+(``ComputeSpec.time``):
 
-    t = kernels * kernel_overhead + hbm_bytes / hbm_bw
+    t = kernels * kernel_overhead + max-ish(hbm_bytes / hbm_bw,
+                                            flops / peak_flops)
 
-where (kernels, hbm_bytes) come from the DECLARED ComputeSpecs
-(``Compressor.compute_specs`` / ``adam_update_cost``) — fitting against
+linearised as the sum of the three terms — exact whenever each op is
+firmly on one side of the roofline, which the sweep arranges: the
+compression/Adam kernels are memory-bound by construction (their flops
+term contributes ~nothing) and the big f32 matmul is compute-bound
+(its HBM term contributes ~nothing).  (kernels, hbm_bytes, flops) come
+from the DECLARED ComputeSpecs (``Compressor.compute_specs`` /
+``adam_update_cost`` / the closed-form matmul spec) — fitting against
 the declared traffic keeps the calibration and the pricing in lockstep
 by construction.  Ops with different kernel counts (fused 1-launch EF
-vs the multi-pass jnp chain) are what make the shared overhead
-separable from the bandwidth term, exactly like comm_sweep's two
-collective families.  The least-squares system solves for
-(kernel_overhead, 1/hbm_bw).
+vs the multi-pass jnp chain) make the shared overhead separable from
+the bandwidth term, and the matmul's dominant flops column makes
+``peak_flops`` observable, so the least-squares system solves for
+(kernel_overhead, 1/hbm_bw, 1/peak_flops) jointly — no datasheet
+fallback needed when the fit resolves.
 
 On this CPU container the Pallas kernels run in interpret mode, so the
 absolute numbers are meaningless for the TPU target — good only for
@@ -46,25 +51,39 @@ ITERS = 5
 
 
 def fit_device(samples: Sequence[dict]) -> Dict[str, object]:
-    """Least-squares (kernel_overhead, hbm_bw) from timed samples
-    ``{op, d, kernels, hbm_bytes, seconds}``.
+    """Least-squares (kernel_overhead, hbm_bw, peak_flops) from timed
+    samples ``{op, d, kernels, hbm_bytes, flops, seconds}``.
 
-    A negative coefficient means the timings don't resolve that term
-    (noise, too-narrow sweep): it is clamped to a tiny positive value
-    so the spec stays constructible, but ``clamped`` lists which — a
-    clamped fit is a FAILED calibration and must not be trusted (a
-    clamped bandwidth would otherwise read as ~infinite HBM and price
-    all compute at zero)."""
+    ``flops`` is optional per sample (memory-bound sweeps omit it);
+    without a compute-bound op in the mix the flops column is ~zero,
+    the coefficient comes back non-positive, and ``peak_flops`` is
+    reported as None (clamped) so ``DeviceSpec.from_measured`` falls
+    back to its base preset — exactly the old two-term behaviour.
+
+    A non-positive overhead/bandwidth coefficient means the timings
+    don't resolve that term (noise, too-narrow sweep): it is clamped to
+    a tiny positive value so the spec stays constructible, but
+    ``clamped`` lists which — a clamped fit is a FAILED calibration and
+    must not be trusted (a clamped bandwidth would otherwise read as
+    ~infinite HBM and price all compute at zero)."""
     assert samples, "fit_device needs at least one timed sample"
-    rows = [[float(s["kernels"]), float(s["hbm_bytes"])] for s in samples]
+    rows = [[float(s["kernels"]), float(s["hbm_bytes"]),
+             float(s.get("flops", 0.0))] for s in samples]
     ts = [float(s["seconds"]) for s in samples]
+    flops_observed = any(r[2] > 0 for r in rows)
     x, *_ = np.linalg.lstsq(np.asarray(rows), np.asarray(ts), rcond=None)
     clamped = [name for name, v in
                (("kernel_overhead", x[0]), ("hbm_bw", x[1])) if v <= 0]
+    if flops_observed and x[2] <= 0:
+        # a compute-bound op WAS timed but the fit went non-positive:
+        # that is a failed calibration (unlike a sweep that never
+        # exercised the flops column, where None = documented fallback)
+        clamped.append("peak_flops")
     overhead = float(max(x[0], 1e-9))
     inv_bw = float(max(x[1], 1e-15))
+    peak = float(1.0 / x[2]) if flops_observed and x[2] > 0 else None
     return {"kernel_overhead": overhead, "hbm_bw": 1.0 / inv_bw,
-            "clamped": clamped}
+            "peak_flops": peak, "clamped": clamped}
 
 
 def _timed(fn, *args) -> float:
@@ -113,10 +132,27 @@ def _ops(block: int):
         fn = jax.jit(lambda a, b, c, g: fa_ops.adam_step(a, b, c, g, 1e-3))
         return fn, (x, e, v, x), adam_update_cost(d, fused=True)
 
+    def build_matmul(d, x, e):
+        # compute-bound anchor: 2*m^3 flops against 3 m^2 f32 arrays —
+        # the op that makes peak_flops observable in the joint fit.
+        # m <= sqrt(d) so the operand carves out of the existing buffer;
+        # tiny sweep sizes skip the anchor (peak_flops then reports as
+        # unobserved, the documented fallback)
+        from repro.perf.kernel_cost import ComputeSpec
+        m = (int(d ** 0.5) // 8) * 8
+        if m < 64:
+            return None
+        a = x[: m * m].reshape(m, m)
+        fn = jax.jit(lambda p, q: p @ q)
+        spec = ComputeSpec(flops=2.0 * m ** 3, hbm_bytes=3 * 4 * m * m,
+                           kernels=1)
+        return fn, (a, a), spec
+
     return (("onebit_ef_kernel", build_ef_kernel),
             ("onebit_ef_jnp", build_ef_jnp),
             ("onebit_compress_jnp", build_compress_jnp),
-            ("adam_fused", build_adam_fused))
+            ("adam_fused", build_adam_fused),
+            ("matmul_f32", build_matmul))
 
 
 def sweep(sizes: Sequence[int] = SIZES, block: int = BLOCK) -> List[dict]:
@@ -127,10 +163,14 @@ def sweep(sizes: Sequence[int] = SIZES, block: int = BLOCK) -> List[dict]:
         x = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
         e = jnp.asarray(rng.normal(size=(d,)).astype(np.float32)) * 0.1
         for name, build in _ops(block):
-            fn, args, spec = build(d, x, e)
+            built = build(d, x, e)
+            if built is None:     # op inapplicable at this size
+                continue
+            fn, args, spec = built
             samples.append({"op": name, "d": int(d),
                             "kernels": int(spec.kernels),
                             "hbm_bytes": float(spec.hbm_bytes),
+                            "flops": float(spec.flops),
                             "seconds": _timed(fn, *args)})
     return samples
 
@@ -147,9 +187,10 @@ def run(sizes: Sequence[int] = SIZES, block: int = BLOCK,
         "hbm_bw": fit["hbm_bw"],
         "kernel_overhead": fit["kernel_overhead"],
         "clamped": fit["clamped"],
-        # the swept kernels are memory-bound: peak FLOPs is unobservable
-        # here — from_measured falls back to its base preset
-        "peak_flops": None,
+        # least-squares-fitted from the compute-bound matmul anchor;
+        # None (datasheet fallback in from_measured) only when the fit
+        # could not resolve it
+        "peak_flops": fit["peak_flops"],
         "block_size": int(block),
         "interpret_mode": platform != "tpu",
         "samples": samples,
@@ -157,6 +198,9 @@ def run(sizes: Sequence[int] = SIZES, block: int = BLOCK,
     if verbose:
         print("== kernel_sweep (measured device roofline) ==")
         print(f"  hbm_bw          {fit['hbm_bw'] / 1e9:10.3f} GB/s")
+        pf = fit["peak_flops"]
+        print("  peak_flops      " + (f"{pf / 1e9:10.3f} GFLOP/s"
+                                      if pf else "  unresolved (fallback)"))
         print(f"  kernel_overhead {fit['kernel_overhead'] * 1e6:10.2f} us "
               f"({len(samples)} samples)")
         if fit["clamped"]:

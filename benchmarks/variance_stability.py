@@ -32,7 +32,8 @@ from repro.core.variance import VarianceMonitor
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
-from repro.train.step import TrainStepConfig, init_opt_state, make_train_step
+from repro.train.step import (TrainStepConfig, init_train_state,
+                              make_train_step)
 
 
 def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30):
@@ -73,7 +74,7 @@ def _system_phase(steps=80, b2=0.97, lr_warmup=15):
     step = make_train_step(cfg, mesh, TrainStepConfig(opt=ocfg),
                            donate=False)
     params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
-    opt = init_opt_state(cfg, mesh, block=512)
+    opt = init_train_state(cfg, mesh, block=512)
     stream = SyntheticStream(cfg, shape)
     mon = VarianceMonitor(b2=b2, threshold=0.96, lr_warmup_steps=lr_warmup)
     freeze_at = None

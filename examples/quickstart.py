@@ -23,7 +23,8 @@ from repro.core.variance import VarianceMonitor
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
-from repro.train.step import TrainStepConfig, init_opt_state, make_train_step
+from repro.train.step import (TrainStepConfig, init_train_state,
+                              make_train_step)
 
 
 def main():
@@ -38,7 +39,7 @@ def main():
     ocfg = OB.OneBitAdamConfig(
         compression=CompressionConfig(block_size=512))
     params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
-    opt = init_opt_state(cfg, mesh, block=512)
+    opt = init_train_state(cfg, mesh, block=512)
     warmup = make_train_step(cfg, mesh,
                              TrainStepConfig(opt=ocfg, stage="warmup"),
                              donate=False)

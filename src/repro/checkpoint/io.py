@@ -56,10 +56,13 @@ def load_pytree(path: str, like: Any, backfill: bool = False):
 
     ``backfill=True`` fills template leaves absent from the archive with
     the template's own values (and warns), so checkpoints written before
-    an optimizer-state field existed stay loadable — new EF slots (e.g.
-    ``outer_err``) initialise to their zeros template.  The default is
-    strict: a missing key is more often a wrong/corrupt checkpoint than
-    a schema migration, so opt in at the resume site."""
+    a template leaf existed stay loadable.  The default is strict: a
+    missing key is more often a wrong/corrupt checkpoint than a schema
+    migration, so opt in at the resume site.  Optimizer-state resumes
+    go through ``repro.state.checkpoint.load_train_state``, which
+    derives the diff from the declared slot registry (naming exactly
+    which slots start at their zeros template) and re-keys the
+    bucket-keyed EF slots — this function stays schema-agnostic."""
     with np.load(path) as data:
         step = int(data["__step__"]) if "__step__" in data else 0
         arrays = {k: data[k] for k in data.files

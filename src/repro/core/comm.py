@@ -36,7 +36,7 @@ the interconnect are the compressor's real wire format.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
 import jax
 
@@ -44,6 +44,7 @@ from repro.plan import executor as _exec
 from repro.plan import schedules as _sched
 
 AxisNames = Tuple[str, ...]
+Errs = Dict[str, jax.Array]
 
 
 def _execute(plan, comp, value, errs, n_buckets: int, n_total: int):
@@ -111,32 +112,24 @@ def compressed_allreduce(
       axis_names: dp mesh axes.
       cfg:        a Compressor or legacy CompressionConfig.
       n_buckets:  >1 = bucketed pipelined execution (repro.pipeline);
-                  bitwise the serial schedule, EF slots bucket-major.
+                  bitwise the serial schedule.
 
     Returns (averaged (D,) replicated over dp, new worker_err, new server_err).
     """
-    comp = _as_compressor(cfg)
-    axes = tuple(axis_names)
-    n = axis_size(axes)
-    d = x.shape[0]
-    assert d % n == 0, (d, n)
-    plan = _sched.flat_schedule(comp, d, n, axes)
-    out, errs = _execute(plan, comp, x,
-                         {"worker": worker_err, "server": server_err},
-                         n_buckets, n)
+    out, errs = compressed_exchange(
+        x, {"worker": worker_err, "server": server_err}, axis_names, (),
+        cfg, n_buckets=n_buckets)
     return out, errs["worker"], errs["server"]
 
 
 def compressed_allreduce_hierarchical(
     x: jax.Array,
-    worker_err: jax.Array,
-    server_err: jax.Array,
+    errs: Errs,
     inner_axes: Sequence[str],
     outer_axes: Sequence[str],
     cfg,
-    outer_err: Optional[jax.Array] = None,
     n_buckets: int = 1,
-):
+) -> Tuple[jax.Array, Errs]:
     """Beyond-paper: two-level compressed allreduce (intra-pod then
     cross-pod), with the cross-pod hop at SERVER-CHUNK granularity.
 
@@ -150,46 +143,54 @@ def compressed_allreduce_hierarchical(
     server-EF-compresses the pod-mean chunk and all_gathers it within the
     pod (ICI, cheap).
 
-    For DENSE compressors the outer stage is EF-free: its residual is
-    O(eps/n_pods) and does not accumulate, because stage-1 EF sees the
-    final value through the next step's momentum.  A SPARSE compressor
-    (topk) would systematically zero sub-threshold coordinates on
-    un-compensated outer legs, so it requires ``outer_err`` — one
-    (D/n_inner,) error-feedback slot covering both cross-pod legs (the
-    all_to_all leg is error-compensated directly; the all_gather leg
-    folds its residual into the slot at this rank's sub-chunk offset for
-    the next exchange to re-send).
+    ``errs`` is the error-feedback slot dict keyed by plan slot name
+    (``repro.state`` declares the backing state slots): ``worker`` (D,)
+    and ``server`` (D/n_inner,) always; for SPARSE compressors the
+    cross-pod legs each carry their own EF loop — ``outer``
+    (D/n_inner,) on the all_to_all and ``outer_ag``
+    (D/(n_inner*n_outer),) on the all_gather.  Dense compressors run the
+    outer stage EF-free (their residual is O(eps/n_pods) and does not
+    accumulate); extra keys pass through untouched, so callers hand in
+    every EF slot they hold and write back whatever returns.
 
     ``n_buckets > 1`` pipelines the whole two-level schedule over
     block-aligned buckets (``repro.pipeline``): bucket *i*'s cross-pod
-    legs overlap bucket *i+1*'s intra-pod work.
+    legs overlap bucket *i+1*'s intra-pod work, bitwise the serial
+    schedule for every compressor.
 
-    Returns ``(out, new_worker_err, new_server_err)`` — plus
-    ``new_outer_err`` as a fourth element when ``outer_err`` is given.
+    Returns ``(out, new_errs)``.
     """
-    comp = _as_compressor(cfg)
-    axes_in = tuple(inner_axes)
-    axes_out = tuple(outer_axes)
-    if not axes_out:
-        res = compressed_allreduce(x, worker_err, server_err, axes_in, comp,
-                                   n_buckets=n_buckets)
-        return res if outer_err is None else res + (outer_err,)
-    outer_ef = _sched.needs_outer_ef(comp)
-    assert not outer_ef or outer_err is not None, \
-        ("hierarchical topology needs a dense (or lossless) compressor, "
-         "or an outer_err EF buffer: un-compensated cross-pod legs would "
-         f"permanently drop the sparse residual of {type(comp).__name__}")
+    return compressed_exchange(x, errs, inner_axes, outer_axes, cfg,
+                               n_buckets=n_buckets)
 
+
+def compressed_exchange(
+    x: jax.Array,
+    errs: Errs,
+    dp_axes: Sequence[str],
+    pod_axes: Sequence[str],
+    cfg,
+    n_buckets: int = 1,
+) -> Tuple[jax.Array, Errs]:
+    """THE compressed optimizer exchange: flat schedule over ``dp_axes``
+    when ``pod_axes`` is empty, hierarchical two-level otherwise.  Takes
+    and returns the full EF slot dict (extra keys untouched)."""
+    comp = _as_compressor(cfg)
+    axes_in = tuple(dp_axes)
+    axes_out = tuple(pod_axes)
     n_in = axis_size(axes_in)
-    n_out = axis_size(axes_out)
     d = x.shape[0]
+    if not axes_out:
+        assert d % n_in == 0, (d, n_in)
+        plan = _sched.flat_schedule(comp, d, n_in, axes_in)
+        return _execute(plan, comp, x, errs, n_buckets, n_in)
+    outer_ef = _sched.needs_outer_ef(comp)
+    assert not outer_ef or ("outer" in errs and "outer_ag" in errs), \
+        ("hierarchical topology needs a dense (or lossless) compressor, "
+         "or the outer/outer_ag EF slots: un-compensated cross-pod legs "
+         f"would permanently drop the sparse residual of "
+         f"{type(comp).__name__}")
+    n_out = axis_size(axes_out)
     plan = _sched.hier_schedule(comp, d, n_in, n_out, axes_in, axes_out,
                                 outer_ef=outer_ef)
-    errs = {"worker": worker_err, "server": server_err}
-    if outer_ef:
-        errs["outer"] = outer_err
-    out, errs = _execute(plan, comp, x, errs, n_buckets, n_in * n_out)
-    res = (out, errs["worker"], errs["server"])
-    if outer_err is None:
-        return res
-    return res + (errs.get("outer", outer_err),)
+    return _execute(plan, comp, x, errs, n_buckets, n_in * n_out)

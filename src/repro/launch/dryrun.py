@@ -29,7 +29,7 @@ from repro.configs import SHAPES, get_config, input_specs, list_archs
 from repro.core import onebit_adam as OB
 from repro.launch.mesh import HBM_BYTES, make_production_mesh
 from repro.models import transformer as T
-from repro.train.step import (TrainStepConfig, init_opt_state,
+from repro.train.step import (TrainStepConfig, init_train_state,
                               make_serve_step, make_train_step, mesh_axes)
 
 ASSIGNED = [
@@ -86,11 +86,12 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
             params = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16),
                 params)
-            from repro.train.step import init_zero1_opt_state
-            opt = init_zero1_opt_state(cfg, mesh, abstract=True)
+            opt = init_train_state(cfg, mesh, abstract=True,
+                                   layout="zero1")
         else:
-            opt = init_opt_state(cfg, mesh, abstract=True,
-                                 hierarchical=(stage == "compressed_hier"))
+            opt = init_train_state(
+                cfg, mesh, abstract=True,
+                topology="hier" if stage == "compressed_hier" else "flat")
         lowered = fn.lower(params, opt, specs, jax.ShapeDtypeStruct(
             (), jnp.float32))
     elif shape.kind == "prefill":

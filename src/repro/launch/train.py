@@ -26,7 +26,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import load_meta, load_pytree, save_pytree
 from repro.configs import (SHAPES, get_config, get_optim_recipe, list_archs,
                            list_optim_recipes)
 from repro.configs.base import InputShape
@@ -34,8 +33,10 @@ from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.optim import WarmupSwitch, list_compressors, list_optimizers
-from repro.train.step import (TrainStepConfig, _flat_dim, init_opt_state,
-                              make_train_step, mesh_axes, pod_split)
+from repro.state import load_train_state, save_train_state
+from repro.train.step import (TrainStepConfig, _flat_dim, init_train_state,
+                              make_train_step, mesh_axes, pod_split,
+                              state_layout_ctx)
 
 
 def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
@@ -189,7 +190,6 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         topology = spec.topology
     if stage_override == "compressed_hier":
         topology, stage_override = "hier", "compressed"
-    pipeline_explicit = pipeline is not None
     if pipeline is None:
         pipeline = spec.pipeline
     if kernels is None:
@@ -223,39 +223,24 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
 
     key = jax.random.PRNGKey(seed)
     params = T.init_params(cfg, key, tp=tp)
-    opt = init_opt_state(cfg, mesh, block=block_size, layout=layout,
-                         hierarchical=(topology == "hier"))
+    opt = init_train_state(cfg, mesh, block=block_size, layout=layout,
+                           topology=topology, optimizer=optim)
+    # the slot-registry context every checkpoint conversion derives from:
+    # EF slots are SAVED in the canonical (serial) global-element keying
+    # and scattered into this run's bucket partition on load, so
+    # checkpoints are portable across --pipeline off/N/M by construction
+    slots = optim.state_slots(layout)
+    state_ctx = state_layout_ctx(cfg, mesh, block=spec.block_size,
+                                 topology=topology)
     start_step = 0
     if resume:
-        # the chunk EF slots (server_err/outer_err) are bucket-major
-        # under pipelining: their layout is fixed by the bucket count
-        # the checkpoint was trained with — absent metadata means the
-        # checkpoint predates pipelining, i.e. was written serially
-        ck_nb = load_meta(resume).get("n_buckets", 1)
-        if int(ck_nb) != n_buckets:
-            msg = (f"checkpoint {resume} was written with "
-                   f"pipeline={int(ck_nb)} bucket(s); its EF slots are "
-                   f"laid out bucket-major and cannot be resumed with "
-                   f"{n_buckets}")
-            if pipeline_explicit:
-                raise ValueError(
-                    msg + f" (drop --pipeline or pass --pipeline {int(ck_nb)})")
-            if effective_buckets(int(ck_nb)) != int(ck_nb):
-                # e.g. a different --block-size changed the alignment
-                # units: this run cannot reproduce the checkpoint's
-                # bucket layout at all
-                raise ValueError(
-                    msg + f"; pipeline={int(ck_nb)} is not expressible "
-                    f"on this run either (block_size={block_size} "
-                    "alignment clamps it) — resume with the original "
-                    "block size")
-            print(msg + f" — adopting pipeline={int(ck_nb)}")
-            n_buckets = int(ck_nb)
-            base_tsc = dataclasses.replace(base_tsc, pipeline=n_buckets)
-        # backfill: pre-plan-IR checkpoints lack new EF slots (outer_err);
-        # they start at their zeros template, with a warning listing them
-        (params, opt), start_step = load_pytree(resume, (params, opt),
-                                                backfill=True)
+        # slot-diff-driven migration (repro.state.checkpoint): slots the
+        # archive predates resume from their zeros template, named from
+        # the registry; bucket-keyed EF slots re-key to this run's
+        # bucket partition
+        (params, opt), start_step = load_train_state(
+            resume, params, opt, slots=slots, ctx=state_ctx,
+            n_buckets=n_buckets, block=spec.block_size)
         print(f"resumed from {resume} at step {start_step}")
 
     steps_fns = {}
@@ -314,11 +299,13 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                   f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
                   f"({dt:.1f}s)")
         if ckpt and (step + 1) % 100 == 0:
-            save_pytree(ckpt, (params, opt), step + 1,
-                        meta={"n_buckets": n_buckets})
+            save_train_state(ckpt, params, opt, step + 1, slots=slots,
+                             ctx=state_ctx, n_buckets=n_buckets,
+                             block=spec.block_size)
     if ckpt:
-        save_pytree(ckpt, (params, opt), steps,
-                    meta={"n_buckets": n_buckets})
+        save_train_state(ckpt, params, opt, steps, slots=slots,
+                         ctx=state_ctx, n_buckets=n_buckets,
+                         block=spec.block_size)
     if log_file:
         with open(log_file, "w") as f:
             json.dump(history, f)

@@ -11,9 +11,15 @@ Two registries:
 
 Plus the shared :class:`WarmupSwitch` stage policy (manual step count or
 the paper's Sec. 7.1 variance-ratio auto-freeze).
+
+Optimizer state is DECLARED: :meth:`TwoStageOptimizer.state_slots`
+returns the :class:`repro.state.SlotSpec`s of the family, and one
+generic :class:`repro.state.StateTree` replaces the per-layout
+NamedTuples (``OptState``/``ZeroOptState`` are gone); see repro.state.
 """
-from repro.optim.base import (OptState, SegmentInfo, TwoStageOptimizer,
-                              ZeroOptState, get_optimizer, list_optimizers,
+from repro.state import SlotSpec, StateTree
+from repro.optim.base import (LAYOUTS, SegmentInfo, TwoStageOptimizer,
+                              get_optimizer, list_optimizers,
                               register_optimizer, segment_norms,
                               segments_of)
 from repro.optim.compressors import (Compressor, IdentityCompressor,
@@ -29,9 +35,9 @@ from repro.optim import onebit_lamb as _onebit_lamb    # noqa: F401
 from repro.optim import zerone_adam as _zerone_adam    # noqa: F401
 
 __all__ = [
-    "Compressor", "IdentityCompressor", "OneBitCompressor",
-    "TopKCompressor", "OptState", "SegmentInfo", "TwoStageOptimizer",
-    "WarmupSwitch", "ZeroOptState", "as_compressor",
+    "Compressor", "IdentityCompressor", "LAYOUTS", "OneBitCompressor",
+    "SegmentInfo", "SlotSpec", "StateTree", "TopKCompressor",
+    "TwoStageOptimizer", "WarmupSwitch", "as_compressor",
     "compressor_has_kernel", "from_config",
     "get_compressor", "get_optimizer", "list_compressors",
     "list_optimizers", "register_compressor", "register_optimizer",

@@ -23,16 +23,30 @@ and exposes four small hooks where the algorithms differ:
 plus one host-side hook, ``sync_due(step)``, for optimizers that skip
 synchronisation entirely on some steps (0/1 Adam's "0-bit" local steps).
 
-State is flat and shard_map-friendly, exactly as in
-:mod:`repro.core.onebit_adam`; per-layer information travels as a
-:class:`SegmentInfo` (the ``ravel_pytree`` leaf boundaries), so layerwise
-optimizers work on the same flat vectors as elementwise ones.
+State is DECLARED, not hand-built: :meth:`TwoStageOptimizer.state_slots`
+names every slot once as a :class:`repro.state.SlotSpec` (extent x
+replication x dtype), and the ``repro.state`` machinery materialises the
+per-rank zeros (:meth:`init_state`), the mesh-global shapes and
+PartitionSpecs (``repro.train.step``), the per-bucket views of the
+pipelined executor, and the checkpoint zeros/migration templates from
+those declarations.  One generic :class:`repro.state.StateTree` carries
+every layout — the ``replicated``/``local`` layouts hold ``v``
+per-param, the ``zero1`` layout declares ``v_shard``/``master_shard``
+dp-sharded chunks instead, and ONE :meth:`update` path branches on
+which slots the state declares rather than on a layout enum.  A new
+optimizer that needs extra state (e.g. per-worker drift params for a
+true-local 0/1 Adam) overrides ``state_slots`` and declares it — no
+plumbing.
+
+Per-layer information travels as a :class:`SegmentInfo` (the
+``ravel_pytree`` leaf boundaries), so layerwise optimizers work on the
+same flat vectors as elementwise ones.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,44 +54,10 @@ import numpy as np
 
 from repro.core import comm
 from repro.optim.compressors import Compressor, OneBitCompressor
+from repro.state import (SlotSpec, StateLayout, StateTree, ef_errs,
+                         init_rank_state)
 
-
-class OptState(NamedTuple):
-    """Replicated-layout optimizer state (per model-shard flat views).
-
-    Pipelined execution (``n_buckets > 1``) slices these SAME buffers
-    into per-bucket EF slots: ``worker_err`` by value offset, the
-    chunk-sized ``server_err``/``outer_err`` by offset/stride — the
-    latter then hold their per-element residuals bucket-major, so one
-    training run keeps one bucket count (see repro.pipeline.executor).
-    """
-    m: jax.Array           # (D,)   f32 momentum
-    v: jax.Array           # (D,)   f32 second moment
-    worker_err: jax.Array  # (D,)   f32 per-dp-rank worker EF error
-    server_err: jax.Array  # (D/n,) f32 per-dp-rank server-chunk error
-    scale: jax.Array       # (S,)   f32 per-segment state (LAMB ratios)
-    count: jax.Array       # ()     i32
-    v_step: jax.Array      # ()     i32 count at last variance update
-    #                        (0/1 Adam's interval bookkeeping; 0 = never)
-    outer_err: jax.Array   # (D/n_inner,) f32 cross-pod EF slot: consumed
-    #                        by the hierarchical schedule's outer legs for
-    #                        SPARSE compressors; untouched zeros otherwise
-    #                        (sized like server_err)
-
-
-class ZeroOptState(NamedTuple):
-    """ZeRO-1 layout: ``v`` and the f32 master weights dp-sharded.
-    Per-bucket EF slot semantics under pipelining as in
-    :class:`OptState`."""
-    m: jax.Array             # (D,)   f32 (Alg. 1 needs the full momentum)
-    v_shard: jax.Array       # (D/n,) f32
-    master_shard: jax.Array  # (D/n,) f32
-    worker_err: jax.Array    # (D,)   f32
-    server_err: jax.Array    # (D/n_srv,) f32 (n_srv = inner size on hier)
-    scale: jax.Array         # (S,)   f32
-    count: jax.Array         # ()     i32
-    v_step: jax.Array        # ()     i32
-    outer_err: jax.Array     # (D/n_srv,) f32 cross-pod EF slot (see above)
+LAYOUTS = ("replicated", "local", "zero1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,46 +122,70 @@ class TwoStageOptimizer:
     weight_decay: float = 0.0
     bias_correction: bool = False       # BertAdam disables it (paper setup)
     compressor: Compressor = OneBitCompressor()
+    use_kernel: bool = False            # fused Pallas warmup Adam update
+    #                                     (kernels/fused_adam; the
+    #                                     compressor carries its own flag)
 
     name: str = "?"
 
-    # --- state ------------------------------------------------------------
-    def init(self, d: int, n_dp: int, n_segments: int = 1,
-             n_inner: Optional[int] = None) -> OptState:
-        """Zeros state for a ``d``-element exchange over ``n_dp`` ranks.
+    # --- declared state ----------------------------------------------------
+    def state_slots(self, layout: str = "replicated"
+                    ) -> Tuple[SlotSpec, ...]:
+        """The optimizer family's state, declared once (repro.state).
+
+        ``layout`` selects the replication of the adaptive state:
+        ``replicated`` (paper), ``local`` (per-dp-rank m/v/scale —
+        required when ``sync_due`` can skip), ``zero1`` (``v`` + f32
+        master weights dp-sharded).  EF slots are identical across
+        layouts: error state is inherently per-worker.  Optimizers with
+        extra state override this and append their slots.
+        """
+        assert layout in LAYOUTS, layout
+        adaptive = "per_dp_rank" if layout == "local" else "replicated"
+        slots = [SlotSpec("m", "per_param", "replicated"
+                          if layout != "local" else "per_dp_rank")]
+        if layout == "zero1":
+            slots += [SlotSpec("v_shard", "per_chunk", "dp_sharded",
+                               chunk_of="dp"),
+                      SlotSpec("master_shard", "per_chunk", "dp_sharded",
+                               chunk_of="dp")]
+        else:
+            slots += [SlotSpec("v", "per_param", adaptive)]
+        slots += [
+            SlotSpec("worker_err", "per_param", "per_dp_rank",
+                     ef="worker"),
+            SlotSpec("server_err", "per_chunk", "per_dp_rank",
+                     chunk_of="server", ef="server", bucket_keyed=True),
+            SlotSpec("scale", "per_segment", adaptive),
+            SlotSpec("count", "scalar", dtype="int32"),
+            SlotSpec("v_step", "scalar", dtype="int32"),
+            # cross-pod EF slots of the hierarchical schedule: consumed
+            # only by sparse compressors on "hier", untouched zeros
+            # otherwise (declared unconditionally so the state schema —
+            # and checkpoints — do not depend on the compressor choice)
+            SlotSpec("outer_err", "per_chunk", "per_dp_rank",
+                     chunk_of="server", ef="outer", bucket_keyed=True),
+            SlotSpec("outer_ag_err", "per_chunk", "per_dp_rank",
+                     chunk_of="total", ef="outer_ag", bucket_keyed=True),
+        ]
+        return tuple(slots)
+
+    def init_state(self, d: int, n_dp: int = 1, n_segments: int = 1,
+                   n_inner: Optional[int] = None,
+                   layout: str = "replicated") -> StateTree:
+        """Zeros per-rank state for a ``d``-element exchange over
+        ``n_dp`` ranks, built from :meth:`state_slots`.
 
         For the HIERARCHICAL topology pass ``n_inner`` (the intra-pod dp
-        size): the server/outer EF chunks are then (d/n_inner,), matching
-        what the two-level schedule exchanges — the ``n_dp``-chunked
-        default only fits the flat topology (``repro.train.step``'s
-        ``init_opt_state(hierarchical=True)`` does this for the step)."""
+        size): the server/outer EF chunks then follow the two-level
+        schedule's groups.  ``repro.train.step`` materialises the
+        mesh-GLOBAL state from the same declarations."""
         n = max(n_dp, 1)
         n_srv = max(n_inner or n, 1)
-        assert d % n == 0 and d % n_srv == 0, (d, n, n_srv)
-        z = jnp.zeros
-        return OptState(m=z((d,), jnp.float32), v=z((d,), jnp.float32),
-                        worker_err=z((d,), jnp.float32),
-                        server_err=z((d // n_srv,), jnp.float32),
-                        scale=z((n_segments,), jnp.float32),
-                        count=z((), jnp.int32), v_step=z((), jnp.int32),
-                        outer_err=z((d // n_srv,), jnp.float32))
-
-    def init_zero1(self, d: int, n_dp: int, n_segments: int = 1,
-                   n_inner: Optional[int] = None) -> ZeroOptState:
-        """As :meth:`init`; ``v``/master shards stay (d/n_dp,) in every
-        topology, only the server/outer EF chunks follow ``n_inner``."""
-        n = max(n_dp, 1)
-        n_srv = max(n_inner or n, 1)
-        assert d % n == 0 and d % n_srv == 0, (d, n, n_srv)
-        z = jnp.zeros
-        return ZeroOptState(
-            m=z((d,), jnp.float32), v_shard=z((d // n,), jnp.float32),
-            master_shard=z((d // n,), jnp.float32),
-            worker_err=z((d,), jnp.float32),
-            server_err=z((d // n_srv,), jnp.float32),
-            scale=z((n_segments,), jnp.float32), count=z((), jnp.int32),
-            v_step=z((), jnp.int32),
-            outer_err=z((d // n_srv,), jnp.float32))
+        ctx = StateLayout(d=d, n_dp=n, n_srv=n_srv,
+                          n_outer=max(n // n_srv, 1),
+                          n_segments=max(n_segments, 1))
+        return init_rank_state(self.state_slots(layout), ctx)
 
     # --- hooks (the whole per-algorithm surface) ---------------------------
     def _update_v(self, v: jax.Array, v_step: jax.Array,
@@ -223,22 +227,26 @@ class TwoStageOptimizer:
         return True
 
     def with_kernels(self, enabled: bool) -> "TwoStageOptimizer":
-        """This optimizer with the compressor's fused Pallas path
-        toggled (``launch.train --kernels`` / the tuner's ``use_kernel``
-        axis land here).  Numerics are unchanged — the kernel writes the
-        identical wire format — so flipping mid-run is safe.  Raises for
-        compressors without a kernel path when enabling."""
+        """This optimizer with the fused Pallas paths toggled — the
+        compressor's compress/EF kernels (``kernels/onebit``) AND the
+        warmup-stage fused Adam update (``kernels/fused_adam``);
+        ``launch.train --kernels`` / the tuner's ``use_kernel`` axis
+        land here.  The compressor kernels write the bitwise-identical
+        wire format and the fused Adam matches to the ULP, so flipping
+        mid-run is safe.  Raises for compressors without a kernel path
+        when enabling."""
         comp = self.compressor
-        if getattr(comp, "use_kernel", None) is bool(enabled):
-            return self
         if enabled and not getattr(comp, "has_kernel", False):
             raise ValueError(f"compressor {comp.name!r} has no fused "
                              "kernel path (has_kernel=False)")
-        if not enabled and not hasattr(comp, "use_kernel"):
+        comp_state = getattr(comp, "use_kernel", False)
+        if comp_state is bool(enabled) and \
+                self.use_kernel is bool(enabled):
             return self
-        return dataclasses.replace(
-            self, compressor=dataclasses.replace(comp,
-                                                 use_kernel=bool(enabled)))
+        if hasattr(comp, "use_kernel") and comp_state is not bool(enabled):
+            comp = dataclasses.replace(comp, use_kernel=bool(enabled))
+        return dataclasses.replace(self, compressor=comp,
+                                   use_kernel=bool(enabled))
 
     @property
     def may_skip_sync(self) -> bool:
@@ -246,54 +254,90 @@ class TwoStageOptimizer:
         use the per-dp-rank ("local") state layout."""
         return False
 
+    @property
+    def _fused_warmup_ok(self) -> bool:
+        """The fused Adam kernel computes the base warmup update exactly:
+        usable iff no hook reshapes the direction and bias correction is
+        off (the kernel implements BertAdam)."""
+        return (self.use_kernel and not self.bias_correction
+                and type(self)._warmup_direction
+                is TwoStageOptimizer._warmup_direction)
+
     # --- warmup stage ------------------------------------------------------
-    def warmup_update(self, g_local: jax.Array, state: OptState,
+    def warmup_update(self, g_local: jax.Array, state: StateTree,
                       x: jax.Array, lr: jax.Array, *,
                       dp_axes: Sequence[str] = (),
                       tp_axes: Sequence[str] = (),
                       segs: Optional[SegmentInfo] = None,
-                      ) -> Tuple[jax.Array, OptState, dict]:
-        """Uncompressed adaptive step on the dp-mean gradient."""
+                      ) -> Tuple[jax.Array, StateTree, dict]:
+        """Uncompressed adaptive step on the dp-mean gradient.
+
+        With ``use_kernel`` (and no direction-shaping hook) the whole
+        elementwise update — both EMAs, the preconditioning, the axpy —
+        runs as ONE fused Pallas kernel (``kernels/fused_adam``; 4 reads
+        + 3 writes per element vs ~6+5 unfused).  Same math in the same
+        order; kernel-vs-jnp agreement is pinned at the ULP level
+        (FMA-contraction association — tests/test_state.py, matching
+        the tests/test_kernels.py kernel parity tolerance).
+        """
         g = comm.allreduce_mean(g_local, dp_axes)
         count = state.count + 1
-        m = self.b1 * state.m + (1.0 - self.b1) * g
-        v = self.b2 * state.v + (1.0 - self.b2) * jnp.square(g)
-        if self.bias_correction:
-            t = count.astype(jnp.float32)
-            m_hat = m / (1.0 - self.b1 ** t)
-            v_hat = v / (1.0 - self.b2 ** t)
+        if self._fused_warmup_ok:
+            from repro.kernels.fused_adam import ops as _fa
+            new_x, m, v = _fa.adam_step(
+                x, state.m, state.v, g, lr, b1=self.b1, b2=self.b2,
+                eps=self.eps, weight_decay=self.weight_decay)
         else:
-            m_hat, v_hat = m, v
-        upd = m_hat / (jnp.sqrt(v_hat) + self.eps)
-        if self.weight_decay:
-            upd = upd + self.weight_decay * x
-        seg_ids_fn = segs.ids if segs is not None else None
-        n_seg = segs.n if segs is not None else 1
-        upd = self._warmup_direction(upd, x, seg_ids_fn, n_seg,
-                                     tuple(tp_axes))
-        new_x = x - lr * upd
+            m = self.b1 * state.m + (1.0 - self.b1) * g
+            v = self.b2 * state.v + (1.0 - self.b2) * jnp.square(g)
+            if self.bias_correction:
+                t = count.astype(jnp.float32)
+                m_hat = m / (1.0 - self.b1 ** t)
+                v_hat = v / (1.0 - self.b2 ** t)
+            else:
+                m_hat, v_hat = m, v
+            upd = m_hat / (jnp.sqrt(v_hat) + self.eps)
+            if self.weight_decay:
+                upd = upd + self.weight_decay * x
+            seg_ids_fn = segs.ids if segs is not None else None
+            n_seg = segs.n if segs is not None else 1
+            upd = self._warmup_direction(upd, x, seg_ids_fn, n_seg,
+                                         tuple(tp_axes))
+            new_x = x - lr * upd
         stats = {"v_l1": jnp.sum(jnp.abs(v)),
                  "grad_norm": jnp.linalg.norm(g)}
         return new_x, state._replace(m=m, v=v, count=count), stats
 
-    # --- compression stage (replicated layout) -----------------------------
-    def compressed_update(self, g_local: jax.Array, state: OptState,
-                          x: jax.Array, lr: jax.Array, *,
-                          dp_axes: Sequence[str] = (),
-                          pod_axes: Sequence[str] = (),
-                          tp_axes: Sequence[str] = (),
-                          segs: Optional[SegmentInfo] = None,
-                          sync: bool = True,
-                          n_buckets: int = 1,
-                          ) -> Tuple[jax.Array, OptState, dict]:
+    # --- compression stage (ONE path, parameterised by the slots) ----------
+    def update(self, g_local: jax.Array, state: StateTree, lr: jax.Array,
+               *,
+               x: Optional[jax.Array] = None,
+               dp_axes: Sequence[str] = (),
+               pod_axes: Sequence[str] = (),
+               tp_axes: Sequence[str] = (),
+               segs: Optional[SegmentInfo] = None,
+               sync: bool = True,
+               n_buckets: int = 1,
+               ) -> Tuple[jax.Array, StateTree, dict]:
         """Compressed (or, with ``sync=False``, purely local) momentum
-        step preconditioned by the (hook-governed) second moment.
+        step preconditioned by the (hook-governed) second moment — the
+        ONE compression-stage path for every state layout.
 
-        ``n_buckets > 1`` runs the exchange through the bucketed
-        pipelined executor (``repro.pipeline``): numerically bitwise the
-        serial schedule, with the chunk-sized EF slots (``server_err``,
-        ``outer_err``) stored bucket-major — keep the bucket count fixed
-        for the life of those buffers.
+        The state's declared slots drive the math: a ``v`` slot means
+        the replicated/local layout (``x`` required; the new full
+        parameter vector is returned); ``v_shard``/``master_shard``
+        slots mean ZeRO-1 (``x`` ignored — the update lands on this
+        rank's f32 master chunk and the rebuilt bf16 replica is
+        returned via one all_gather).  The EF slot dict handed to the
+        exchange is likewise read off the declared slots (every spec
+        with ``ef=`` set, via :func:`repro.state.ef_errs`), so new EF
+        slots never need threading.
+
+        With ``pod_axes`` the momentum exchange runs the hierarchical
+        two-level schedule (``dp_axes`` = intra-pod, ``pod_axes`` =
+        cross-pod); ``n_buckets > 1`` runs it through the bucketed
+        pipelined executor (``repro.pipeline``), bitwise the serial
+        schedule for every compressor.
 
         A ``sync=False`` ("0-bit") step moves NO bytes and applies NO
         model update: the local gradient folds into the per-rank momentum
@@ -306,144 +350,98 @@ class TwoStageOptimizer:
         momentum itself does diverge between syncs, hence the "local"
         optimizer-state layout requirement (see repro.train.step).
         """
+        sharded = "master_shard" in state
+        all_axes = tuple(pod_axes) + tuple(dp_axes)
         m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
         if not sync:
+            x_full = self._full_params(state, x, all_axes)
             stats = {
-                "v_l1": jnp.sum(jnp.abs(state.v)),
+                "v_l1": jnp.sum(jnp.abs(state.v_shard if sharded
+                                        else state.v)),
                 "momentum_norm": jnp.linalg.norm(m_local),
                 "worker_err_norm": jnp.linalg.norm(state.worker_err),
                 "server_err_norm": jnp.linalg.norm(state.server_err),
             }
-            return x, state._replace(m=m_local, count=state.count + 1), stats
-        if pod_axes:
-            m_bar, w_err, s_err, o_err = \
-                comm.compressed_allreduce_hierarchical(
-                    m_local, state.worker_err, state.server_err,
-                    inner_axes=dp_axes, outer_axes=pod_axes,
-                    cfg=self.compressor, outer_err=state.outer_err,
-                    n_buckets=n_buckets)
-        else:
-            m_bar, w_err, s_err = comm.compressed_allreduce(
-                m_local, state.worker_err, state.server_err,
-                tuple(dp_axes), self.compressor, n_buckets=n_buckets)
-            o_err = state.outer_err
+            return x_full, state._replace(m=m_local,
+                                          count=state.count + 1), stats
 
+        # the declared ef= fields ARE the state-slot -> plan-slot map
+        # (EF slots are layout-invariant, so any layout's declaration
+        # serves; subclasses declaring extra EF slots are picked up)
+        ef_slots = tuple(s for s in self.state_slots(
+            "zero1" if sharded else "replicated")
+            if s.ef is not None and s.name in state)
+        m_bar, errs = comm.compressed_exchange(
+            m_local, ef_errs(state, ef_slots), dp_axes, pod_axes,
+            self.compressor, n_buckets=n_buckets)
         count = state.count + 1
-        v, v_step = self._update_v(state.v, state.v_step, state.m, m_bar,
-                                   count)
-        upd = m_bar / (jnp.sqrt(v) + self.eps)
         seg_ids_fn = segs.ids if segs is not None else None
         n_seg = segs.n if segs is not None else 1
-        scale = self._update_scale(state.scale, x, upd, seg_ids_fn, n_seg,
-                                   tuple(tp_axes))
+
+        if sharded:
+            n = comm.axis_size(all_axes)
+            d = m_bar.shape[0]
+            chunk = d // max(n, 1)
+            idx = (jax.lax.axis_index(all_axes) * chunk if all_axes
+                   else 0)
+            my_mbar = jax.lax.dynamic_slice(m_bar, (idx,), (chunk,))
+            my_mprev = jax.lax.dynamic_slice(state.m, (idx,), (chunk,))
+            v, v_step = self._update_v(state.v_shard, state.v_step,
+                                       my_mprev, my_mbar, count)
+            upd = my_mbar / (jnp.sqrt(v) + self.eps)
+            master = state.master_shard
+            if seg_ids_fn is not None:
+                ids_full = seg_ids_fn
+                seg_ids_fn = lambda: jax.lax.dynamic_slice(  # noqa: E731
+                    ids_full(), (idx,), (chunk,))
+            # each rank holds one chunk: segment norms need the dp psum
+            norm_axes = tuple(tp_axes) + all_axes
+        else:
+            assert x is not None, \
+                "update() needs x for the replicated/local layouts"
+            v, v_step = self._update_v(state.v, state.v_step, state.m,
+                                       m_bar, count)
+            upd = m_bar / (jnp.sqrt(v) + self.eps)
+            master = x
+            norm_axes = tuple(tp_axes)
+
+        scale = self._update_scale(state.scale, master, upd, seg_ids_fn,
+                                   n_seg, norm_axes)
         pe = self._scale_per_elem(scale, seg_ids_fn)
         if pe is not None:
             upd = upd * pe
         if self.weight_decay:
-            upd = upd + self.weight_decay * x
-        new_x = x - lr * upd
+            upd = upd + self.weight_decay * master
+        new_master = master - lr * upd
+
+        repl = {s.name: errs[s.ef] for s in ef_slots}
+        repl.update(m=m_bar, scale=scale, count=count, v_step=v_step)
+        if sharded:
+            repl.update(v_shard=v, master_shard=new_master)
+            x_full = self._gather_replica(new_master, all_axes)
+        else:
+            repl.update(v=v)
+            x_full = new_master
         stats = {
             "v_l1": jnp.sum(jnp.abs(v)),
             "momentum_norm": jnp.linalg.norm(m_bar),
-            "worker_err_norm": jnp.linalg.norm(w_err),
-            "server_err_norm": jnp.linalg.norm(s_err),
+            "worker_err_norm": jnp.linalg.norm(errs["worker"]),
+            "server_err_norm": jnp.linalg.norm(errs["server"]),
         }
-        new_state = state._replace(m=m_bar, v=v, worker_err=w_err,
-                                   server_err=s_err, scale=scale,
-                                   count=count, v_step=v_step,
-                                   outer_err=o_err)
-        return new_x, new_state, stats
+        return x_full, state._replace(**repl), stats
 
-    # --- compression stage (ZeRO-1 layout) ---------------------------------
-    def zero1_update(self, g_local: jax.Array, state: ZeroOptState,
-                     lr: jax.Array, *,
-                     dp_axes: Sequence[str] = (),
-                     pod_axes: Sequence[str] = (),
-                     tp_axes: Sequence[str] = (),
-                     segs: Optional[SegmentInfo] = None,
-                     sync: bool = True,
-                     n_buckets: int = 1,
-                     ) -> Tuple[jax.Array, ZeroOptState, dict]:
-        """Same math on the dp-sharded layout. Returns the rebuilt bf16
-        full params (one all_gather), the new state, and stats.
-
-        With ``pod_axes`` the momentum exchange runs the hierarchical
-        two-level schedule (``dp_axes`` = intra-pod, ``pod_axes`` =
-        cross-pod) while ``v``/master stay sharded over the FULL dp
-        super-axis (pod-major chunk order, matching the flat layout).
-
-        ``sync=False`` behaves as in :meth:`compressed_update`: momentum
-        accumulates per rank, the master update is deferred.
-        ``n_buckets > 1`` pipelines the momentum exchange exactly as in
-        :meth:`compressed_update` (the sharded v/master updates and the
-        param all_gather are untouched)."""
-        all_axes = tuple(pod_axes) + tuple(dp_axes)
-        m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
-        if not sync:
-            if all_axes:
-                x_full = jax.lax.all_gather(
-                    state.master_shard.astype(jnp.bfloat16),
-                    all_axes, tiled=True)
-            else:
-                x_full = state.master_shard.astype(jnp.bfloat16)
-            stats = {"v_l1": jnp.sum(jnp.abs(state.v_shard)),
-                     "momentum_norm": jnp.linalg.norm(m_local)}
-            return x_full, state._replace(m=m_local,
-                                          count=state.count + 1), stats
-        if pod_axes:
-            m_bar, w_err, s_err, o_err = \
-                comm.compressed_allreduce_hierarchical(
-                    m_local, state.worker_err, state.server_err,
-                    inner_axes=dp_axes, outer_axes=pod_axes,
-                    cfg=self.compressor, outer_err=state.outer_err,
-                    n_buckets=n_buckets)
-        else:
-            m_bar, w_err, s_err = comm.compressed_allreduce(
-                m_local, state.worker_err, state.server_err,
-                tuple(dp_axes), self.compressor, n_buckets=n_buckets)
-            o_err = state.outer_err
-        n = comm.axis_size(all_axes)
-        d = m_bar.shape[0]
-        chunk = d // max(n, 1)
+    @staticmethod
+    def _gather_replica(master_shard: jax.Array, all_axes) -> jax.Array:
         if all_axes:
-            idx = jax.lax.axis_index(all_axes) * chunk
-        else:
-            idx = 0
-        my_mbar = jax.lax.dynamic_slice(m_bar, (idx,), (chunk,))
-        my_mprev = jax.lax.dynamic_slice(state.m, (idx,), (chunk,))
-        count = state.count + 1
-        v_shard, v_step = self._update_v(state.v_shard, state.v_step,
-                                         my_mprev, my_mbar, count)
-        upd = my_mbar / (jnp.sqrt(v_shard) + self.eps)
-        if segs is not None:
-            seg_ids_fn = lambda: jax.lax.dynamic_slice(  # noqa: E731
-                segs.ids(), (idx,), (chunk,))
-            n_seg = segs.n
-        else:
-            seg_ids_fn, n_seg = None, 1
-        # each rank holds one chunk: segment norms need the dp psum too
-        scale = self._update_scale(state.scale, state.master_shard, upd,
-                                   seg_ids_fn, n_seg,
-                                   tuple(tp_axes) + all_axes)
-        pe = self._scale_per_elem(scale, seg_ids_fn)
-        if pe is not None:
-            upd = upd * pe
-        if self.weight_decay:
-            upd = upd + self.weight_decay * state.master_shard
-        new_master = state.master_shard - lr * upd
-        if all_axes:
-            x_full = jax.lax.all_gather(new_master.astype(jnp.bfloat16),
-                                        all_axes, tiled=True)
-        else:
-            x_full = new_master.astype(jnp.bfloat16)
-        stats = {"v_l1": jnp.sum(jnp.abs(v_shard)),
-                 "momentum_norm": jnp.linalg.norm(m_bar)}
-        new_state = state._replace(m=m_bar, v_shard=v_shard,
-                                   master_shard=new_master,
-                                   worker_err=w_err, server_err=s_err,
-                                   scale=scale, count=count,
-                                   v_step=v_step, outer_err=o_err)
-        return x_full, new_state, stats
+            return jax.lax.all_gather(master_shard.astype(jnp.bfloat16),
+                                      all_axes, tiled=True)
+        return master_shard.astype(jnp.bfloat16)
+
+    def _full_params(self, state: StateTree, x, all_axes) -> jax.Array:
+        if "master_shard" in state:
+            return self._gather_replica(state.master_shard, all_axes)
+        assert x is not None
+        return x
 
 
 # --------------------------------------------------------------------------

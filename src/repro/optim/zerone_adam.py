@@ -27,7 +27,7 @@ Generalises 1-bit Adam along both of its frozen dimensions:
     adaptation of the paper's local steps — the dp-mean commutes with
     the momentum recursion, so the sync step applies exactly the mean
     EMA of every gradient seen since the last sync; see
-    ``TwoStageOptimizer.compressed_update``).  Requires the "local"
+    ``TwoStageOptimizer.update``).  Requires the "local"
     optimizer-state layout (per-rank momentum diverges between syncs).
 
 With ``var_update_interval = 0`` and ``sync_double_every = 0`` this

@@ -18,11 +18,10 @@ from repro.perf.device import (DEVICES, DeviceSpec, as_device, get_device,
                                list_devices)
 from repro.perf.kernel_cost import (ComputeSpec, ZERO_COMPUTE,
                                     adam_update_cost, combine_cost,
-                                    ef_combine_cost, elementwise_pass,
-                                    fold_cost)
+                                    ef_combine_cost, elementwise_pass)
 
 __all__ = [
     "DEVICES", "DeviceSpec", "ComputeSpec", "ZERO_COMPUTE",
     "adam_update_cost", "as_device", "combine_cost", "ef_combine_cost",
-    "elementwise_pass", "fold_cost", "get_device", "list_devices",
+    "elementwise_pass", "get_device", "list_devices",
 ]

@@ -92,13 +92,6 @@ def ef_combine_cost(d: int) -> ComputeSpec:
     return elementwise_pass(d, 2, 1) + elementwise_pass(d, 2, 1)
 
 
-def fold_cost(d: int) -> ComputeSpec:
-    """The hierarchical gather's residual fold (sparse compressors):
-    ``resid = value - deco`` plus a dynamic-slice read-modify-write of
-    the chunk-sized EF slot — two elementwise passes over ``d``."""
-    return elementwise_pass(d, 2, 1) + elementwise_pass(d, 2, 1)
-
-
 def combine_cost(d_total: int, n: int) -> ComputeSpec:
     """AllToAll's local combine: mean/sum of ``n`` decompressed chunks
     (``d_total = n * chunk``): one reduction pass reading all chunks and

@@ -23,16 +23,26 @@ flat dependency DAG.  Bucket sizes need not be uniform, which the
 remainder-handling size policy exploits.
 
 Numerics: per-bucket execution is BITWISE identical to the serial
-executor on the value and worker-error outputs whenever buckets are
-block-aligned (``Bucketer`` enforces it): per-block compression cannot
-see bucket boundaries that coincide with block boundaries, and the
-per-rank chunk means reduce the same operands in the same order.  The
-chunk-sized EF slots (``server``/``outer``) hold the same per-element
-residuals in a BUCKET-MAJOR layout (each rank's buffer concatenates
-its per-bucket sub-chunks instead of one contiguous serial chunk), so
-a training run must keep one bucket count for those buffers to stay
-self-consistent — switching mid-run re-interprets (not loses) the
-residual layout, and ``n_buckets=1`` is byte-for-byte the serial plan.
+executor — for EVERY topology x compressor combination — whenever
+buckets are block-aligned (``Bucketer`` enforces it): per-block
+compression cannot see bucket boundaries that coincide with block
+boundaries, the per-rank chunk means reduce the same operands in the
+same order, and every EF slot is consumed and produced by one op for
+the elements the executing rank serves, so the per-element error-
+feedback arithmetic never depends on the bucket partition
+(tests/test_distributed.py::TestPipelinedParity pins all combos over
+chained exchanges).
+
+EF slot layout: a chunk-sized slot (``server``/``outer``/``outer_ag``)
+holds this rank's residuals ordered by global element index WITHIN the
+rank's served set; per-bucket views are contiguous slices computed
+from the bucket structure (the strides above), not a stored format the
+buffer owns.  Which elements a rank serves does depend on the bucket
+partition, so checkpoints store these slots in the bucket-count-
+independent canonical (serial) keying and scatter them into the
+resuming run's partition (``repro.state.layout`` — the same
+``ef_element_map`` describes both views), making saved state portable
+across ``--pipeline off/N/M``.
 
 The compressor's ``use_kernel`` flag routes each bucket's compress /
 EF / decompress through the fused Pallas kernels (``kernels/onebit``)
@@ -42,19 +52,6 @@ included), so kernel choice never affects what the collectives move —
 only the compute stream the cost model prices
 (``repro.plan.cost.pipeline_breakdown``, via the per-bucket
 ComputeSpec annotations ``lower_to_pipelined`` attaches).
-
-One genuine semantic caveat: the sparse outer-EF FOLD of the
-hierarchical schedule (``AllGather.fold_err_slot``) parks each rank's
-gather residual for the elements THAT RANK holds — and bucketing
-changes which global elements a rank holds (bucket-major sub-chunks
-instead of one contiguous serial sub-chunk).  So for hier + sparse
-compressors the pipelined trajectory is bitwise-identical to serial on
-the FIRST exchange (all EF starts at zero) and thereafter remains an
-exact error-feedback trajectory — every parked coordinate is re-sent
-by the next exchange — but over a different residual partition, hence
-not bitwise.  Dense/lossless compressors, and sparse ones on the flat
-schedule, have no fold and stay bitwise for the whole run
-(tests/test_distributed.py::TestPipelinedParity pins both claims).
 """
 from __future__ import annotations
 

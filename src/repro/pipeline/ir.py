@@ -137,8 +137,7 @@ class PipelinedPlan:
                 "compute annotations must cover every op or none",
                 len(bp.compute), len(bp.plan.ops))
             bp.plan.validate()
-            ks = tuple((op.kind, op.tier, op.err_slot,
-                        getattr(op, "fold_err_slot", None))
+            ks = tuple((op.kind, op.tier, op.err_slot)
                        for op in bp.plan.ops)
             assert kinds is None or ks == kinds, (
                 "buckets must share one op sequence", kinds, ks)
@@ -168,14 +167,11 @@ class PipelinedPlan:
 
 
 def _slot_len(plan: CommPlan, slot: str) -> int:
-    """EF-buffer length a plan requires for ``slot`` (matches what the
-    executor's compress/fold rules index)."""
+    """EF-buffer length a plan requires for ``slot`` (what the
+    executor's compress rules index: the op's incoming value)."""
     for op in plan.ops:
         if op.err_slot == slot:
             return op.d_in
-        if getattr(op, "fold_err_slot", None) == slot:
-            # the fold slot spans the gather group's full chunk
-            return op.d_in * max(op.n, 1)
     raise KeyError(f"plan {plan.name!r} has no err slot {slot!r}")
 
 

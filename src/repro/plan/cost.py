@@ -50,7 +50,7 @@ from typing import Dict, Optional, Tuple
 
 from repro.perf.device import DeviceSpec, TPU_V5E, as_device
 from repro.perf.kernel_cost import (ComputeSpec, ZERO_COMPUTE,
-                                    combine_cost, fold_cost)
+                                    combine_cost)
 from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
                            CollectiveOp, CommPlan, ReduceScatter, log2ceil)
 
@@ -223,9 +223,9 @@ def plan_time(plan: CommPlan, spec: ClusterSpec) -> float:
 
 def op_compute(op: CollectiveOp, comp) -> Tuple[ComputeSpec, ComputeSpec]:
     """(pre, post) ComputeSpecs of one collective op: the compute that
-    must finish BEFORE its wire leg can start (EF-compress / fold of
-    the outgoing payload) and the compute that consumes the received
-    payload AFTER it (decompress + combine).
+    must finish BEFORE its wire leg can start (the EF- or plain
+    compress of the outgoing payload) and the compute that consumes the
+    received payload AFTER it (decompress + combine).
 
     Mirrors ``repro.plan.executor`` rule for rule; the per-compressor
     costs are single-sourced from ``Compressor.compute_specs`` (the
@@ -238,14 +238,7 @@ def op_compute(op: CollectiveOp, comp) -> Tuple[ComputeSpec, ComputeSpec]:
                                        Broadcast)):
         return ZERO_COMPUTE, ZERO_COMPUTE
     specs = comp.compute_specs(op.d_in)
-    if op.err_slot is not None:
-        pre = specs["ef_compress"]
-    elif getattr(op, "fold_err_slot", None) is not None:
-        # plain compress + decompress (for the residual) + the fold's
-        # read-modify-write of the chunk EF slot
-        pre = specs["compress"] + specs["decompress"] + fold_cost(op.d_in)
-    else:
-        pre = specs["compress"]
+    pre = specs["ef_compress" if op.err_slot is not None else "compress"]
     if isinstance(op, AllToAll):
         # decompress the n received chunks (d_in elements in total),
         # then mean/sum-combine them into the (d_out,) result

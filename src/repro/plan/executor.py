@@ -76,21 +76,7 @@ def _exec_all_to_all(op: AllToAll, comp, value, errs):
 
 
 def _exec_all_gather(op: AllGather, comp, value, errs):
-    if op.fold_err_slot is not None:
-        # EF for the compress side of a gather: park this rank's residual
-        # in the slot at this rank's chunk offset; the next exchange that
-        # consumes the slot re-sends it (no coordinate is dropped forever)
-        payload = comp.compress(value)
-        _check_payload(op, payload)
-        resid = value - comp.decompress(payload)
-        err = errs[op.fold_err_slot]
-        idx = (jax.lax.axis_index(op.axes) if op.axes else 0) * value.shape[0]
-        patch = jax.lax.dynamic_slice(err, (idx,), (value.shape[0],)) + resid
-        errs = dict(errs)
-        errs[op.fold_err_slot] = jax.lax.dynamic_update_slice(
-            err, patch, (idx,))
-    else:
-        payload, errs = _compress(op, comp, value, errs)
+    payload, errs = _compress(op, comp, value, errs)
     if op.axes:
         out = tuple(jax.lax.all_gather(p, op.axes, tiled=op.tiled)
                     for p in payload)

@@ -149,14 +149,13 @@ class AllGather(CollectiveOp):
     """Gather every device's (compressed) chunk and decompress the full
     vector (Fig. 3c). Value length: ``d_in -> d_in * n``.
 
-    ``fold_err_slot``: optional error-feedback for the COMPRESS side of a
-    gather — the compression residual of this rank's chunk is accumulated
-    into the named slot at this rank's chunk offset, to be re-sent by the
-    next exchange that consumes the slot (used by the hierarchical
-    schedule's cross-pod leg for sparse compressors)."""
+    A gather's ``err_slot`` error-compensates its compress side like any
+    other op: the slot covers exactly this rank's (d_in,) chunk, keyed by
+    global element index — the hierarchical schedule's cross-pod leg
+    gives sparse compressors a dedicated ``outer_ag`` slot this way
+    (one EF loop per lossy hop, no cross-op residual folding)."""
 
     tiled: bool = True
-    fold_err_slot: Optional[str] = None
 
     @property
     def d_out(self) -> int:
@@ -251,9 +250,8 @@ class CommPlan:
     def err_slots(self) -> Tuple[str, ...]:
         out = []
         for op in self.ops:
-            for s in (op.err_slot, getattr(op, "fold_err_slot", None)):
-                if s is not None and s not in out:
-                    out.append(s)
+            if op.err_slot is not None and op.err_slot not in out:
+                out.append(op.err_slot)
         return tuple(out)
 
     @property
@@ -291,8 +289,6 @@ class CommPlan:
         for op in self.ops:
             leaves = ", ".join(f"{w.dtype}{list(w.shape)}" for w in op.payload)
             ef = f" ef={op.err_slot}" if op.err_slot else ""
-            fold = getattr(op, "fold_err_slot", None)
-            ef += f" fold={fold}" if fold else ""
             lines.append(
                 f"  {op.kind:13s} axes={op.axes} n={op.n} tier={op.tier}"
                 f" d={op.d_in}->{op.d_out} [{leaves}]{ef}")

@@ -63,10 +63,16 @@ def hier_schedule(comp, d: int, n_inner: int, n_outer: int,
 
     Lossless compressors take a plain cross-pod all-reduce; lossy dense
     ones run EF-free compressed legs (bitwise the pre-IR schedule);
-    sparse ones require ``outer_ef=True``, which adds the ``outer`` EF
-    slot (one (d/n_inner,) buffer): the all_to_all leg is
-    error-compensated and the all_gather leg folds its residual into the
-    same slot at this rank's sub-chunk offset.
+    sparse ones require ``outer_ef=True``, which gives EVERY lossy
+    cross-pod hop its own error-feedback loop: the all_to_all leg gets
+    the ``outer`` slot (one (d/n_inner,) buffer per rank) and the
+    all_gather leg the ``outer_ag`` slot (one (d/(n_inner*n_outer),)
+    buffer per rank, covering exactly this rank's gather sub-chunk).
+    Each slot is read and written by the SAME rank for the SAME global
+    elements, so the per-element EF arithmetic is independent of how
+    the exchange is partitioned into pipeline buckets — hier+sparse is
+    bitwise vs serial under bucketing (tests/test_distributed.py
+    ::TestPipelinedParity).
     """
     inner_axes, outer_axes = tuple(inner_axes), tuple(outer_axes)
     n_inner, n_outer = max(n_inner, 1), max(n_outer, 1)
@@ -84,7 +90,7 @@ def hier_schedule(comp, d: int, n_inner: int, n_outer: int,
                             err_slot="outer" if outer_ef else None))
         ops.append(AllGather(axes=outer_axes, n=n_outer, tier="cross",
                              payload=comp.wire_specs(sub), d_in=sub,
-                             fold_err_slot="outer" if outer_ef else None))
+                             err_slot="outer_ag" if outer_ef else None))
     ops.append(AllGather(axes=inner_axes, n=n_inner, tier="intra",
                          payload=comp.wire_specs(chunk), d_in=chunk,
                          err_slot="server"))

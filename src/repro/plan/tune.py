@@ -24,6 +24,15 @@ Validity is structural, not heuristic:
     policy) — a clamped candidate is priced at its EFFECTIVE bucket
     count, never at a fictional one.
 
+Optimizer-state memory is priced from the DECLARED slot registry
+(``repro.state``): every candidate carries ``state_bytes_per_rank`` —
+the per-rank bytes of the optimizer's :class:`~repro.state.SlotSpec`
+extents materialised for the candidate's (topology, layout) — and a
+``layouts`` axis with ``max_state_bytes_per_rank`` lets the tuner trade
+the paper's replicated layout against ZeRO-1 sharding when the
+replicated state does not fit: no hand-derived size formula anywhere,
+the same declarations that build the state price it.
+
 Update frequency is a second objective axis (0/1 Adam, 2202.06009): a
 ``sync_interval`` of k means the optimizer exchanges once every k
 steps, so the AVERAGE per-step cost is ``t_exchange / k`` (and
@@ -76,6 +85,9 @@ class Candidate:
     use_kernel: bool = False     # fused Pallas compress path priced
     t_compute: float = 0.0       # compute share of t_exchange (roofline
     #                              busy seconds; 0 when not priced)
+    layout: str = "replicated"   # optimizer-state layout priced
+    state_bytes_per_rank: int = 0  # per-rank state bytes from the slot
+    #                                registry extents (repro.state)
 
     @property
     def t_step_avg(self) -> float:
@@ -96,6 +108,8 @@ class Candidate:
                 "t_exchange_s": self.t_exchange,
                 "t_compute_s": self.t_compute,
                 "t_step_avg_s": self.t_step_avg,
+                "layout": self.layout,
+                "state_bytes_per_rank": self.state_bytes_per_rank,
                 "hlo_bytes": self.hlo_bytes,
                 "bytes_per_step": self.bytes_per_step,
                 "dci_bytes_per_pod": self.dci_bytes_per_pod,
@@ -123,13 +137,27 @@ def _axes_for(spec: ClusterSpec, topology: str):
 
 
 def _invalid(topology, compressor, block_size, d, why,
-             n_buckets=1, sync_interval=1, use_kernel=False) -> Candidate:
+             n_buckets=1, sync_interval=1, use_kernel=False,
+             layout="replicated") -> Candidate:
     # record the REQUESTED bucket count so the table/CI artifact shows
     # every enumerated grid point, not one collapsed row
     return Candidate(topology, compressor, block_size, None,
                      float("inf"), 0.0, 0, d, valid=False, why=why,
                      n_buckets=n_buckets, sync_interval=sync_interval,
-                     use_kernel=use_kernel)
+                     use_kernel=use_kernel, layout=layout)
+
+
+def layout_state_bytes(spec: ClusterSpec, d_pad: int, topology: str,
+                       layout: str) -> int:
+    """Per-rank optimizer-state bytes, read off the DECLARED slot
+    extents (repro.state) — zero1's dp-sharded ``v``/master chunks and
+    hier's inner-sized EF chunks price themselves."""
+    from repro.optim.base import TwoStageOptimizer  # lazy: no cycle
+    from repro.state import StateLayout, state_bytes
+    n_srv = spec.n_inner if topology == "hier" else spec.n_total
+    ctx = StateLayout(d=d_pad, n_dp=spec.n_total, n_srv=n_srv,
+                      n_outer=spec.n_outer if topology == "hier" else 1)
+    return state_bytes(TwoStageOptimizer().state_slots(layout), ctx)
 
 
 def build_candidate(spec: ClusterSpec, d: int, topology: str,
@@ -138,7 +166,8 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
                     n_buckets: int = 1,
                     sync_interval: int = 1,
                     use_kernel: bool = False,
-                    price_compute: bool = True) -> Candidate:
+                    price_compute: bool = True,
+                    layout: str = "replicated") -> Candidate:
     """Price one (topology, compressor, block_size, n_buckets,
     use_kernel) point.
 
@@ -206,7 +235,10 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
                      cross_pod_bytes(plan, spec), d_pad,
                      outer_ef=outer_ef, n_buckets=eff_buckets,
                      sync_interval=max(sync_interval, 1),
-                     use_kernel=use_kernel, t_compute=t_comp)
+                     use_kernel=use_kernel, t_compute=t_comp,
+                     layout=layout,
+                     state_bytes_per_rank=layout_state_bytes(
+                         spec, d_pad, topology, layout))
 
 
 def enumerate_candidates(spec: ClusterSpec, d: int,
@@ -217,7 +249,8 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
                          n_buckets_options: Sequence[int] = (1,),
                          sync_intervals: Sequence[int] = (1,),
                          use_kernel_options: Sequence[bool] = (False,),
-                         price_compute: bool = True
+                         price_compute: bool = True,
+                         layouts: Sequence[str] = ("replicated",)
                          ) -> Tuple[Candidate, ...]:
     from repro.optim.compressors import list_compressors
     names = list(compressors) if compressors else list_compressors()
@@ -229,14 +262,27 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
                 for nb in n_buckets_options:
                     for uk in use_kernel_options:
                         # build/price the plan ONCE; the sync interval
-                        # only rescales the derived per-step figures
+                        # only rescales the derived per-step figures,
+                        # and the layout only swaps the slot-registry
+                        # state bytes — neither re-lowers the plan
                         base = build_candidate(
                             spec, d, topo, name, block,
                             compressor_kwargs, n_buckets=nb,
-                            use_kernel=uk, price_compute=price_compute)
-                        out.extend(dataclasses.replace(
-                            base, sync_interval=max(si, 1))
-                            for si in sync_intervals)
+                            use_kernel=uk,
+                            price_compute=price_compute,
+                            layout=layouts[0])
+                        for lay in layouts:
+                            c = base if lay == layouts[0] else \
+                                dataclasses.replace(
+                                    base, layout=lay,
+                                    state_bytes_per_rank=(
+                                        layout_state_bytes(
+                                            spec, base.d_padded, topo,
+                                            lay)
+                                        if base.valid else 0))
+                            out.extend(dataclasses.replace(
+                                c, sync_interval=max(si, 1))
+                                for si in sync_intervals)
     return tuple(out)
 
 
@@ -247,7 +293,7 @@ def _dedupe(cands: Tuple[Candidate, ...]) -> Tuple[Candidate, ...]:
     seen, out = set(), []
     for c in cands:
         key = (c.topology, c.compressor, c.block_size, c.n_buckets,
-               c.sync_interval, c.use_kernel, c.valid)
+               c.sync_interval, c.use_kernel, c.layout, c.valid)
         if key in seen:
             continue
         seen.add(key)
@@ -265,7 +311,9 @@ def autotune(spec: ClusterSpec, d: int,
              use_kernel_options: Sequence[bool] = (False,),
              price_compute: bool = True,
              max_bytes_per_step: Optional[float] = None,
-             max_t_per_step: Optional[float] = None) -> TuneResult:
+             max_t_per_step: Optional[float] = None,
+             layouts: Sequence[str] = ("replicated",),
+             max_state_bytes_per_rank: Optional[int] = None) -> TuneResult:
     """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
 
     Selection order: smallest ``sync_interval`` first (update frequency
@@ -274,9 +322,12 @@ def autotune(spec: ClusterSpec, d: int,
     exposure and trace size), then ``flat`` before ``hier`` (fewer
     stages, no outer EF state), then the larger block size (fewer scale
     bytes), then the jnp path before the Pallas kernel (only take on
-    kernel surface when it pays).  ``max_bytes_per_step`` /
-    ``max_t_per_step`` mark over-budget candidates invalid
-    (``why="over comm budget"``).
+    kernel surface when it pays), then the replicated (paper) state
+    layout before zero1 (shard state only when memory forces it).
+    ``max_bytes_per_step`` / ``max_t_per_step`` mark over-budget
+    candidates invalid (``why="over comm budget"``);
+    ``max_state_bytes_per_rank`` does the same against the slot-registry
+    state bytes (``why="over state-memory budget"``).
 
     ``price_compute=False`` reverts to link-only pricing — the pre-
     ``repro.perf`` objective, kept so decision diffs are testable (and
@@ -287,8 +338,9 @@ def autotune(spec: ClusterSpec, d: int,
     table = _dedupe(enumerate_candidates(
         spec, d, compressors, block_sizes, topologies, compressor_kwargs,
         n_buckets_options, sync_intervals, use_kernel_options,
-        price_compute))
-    if max_bytes_per_step is not None or max_t_per_step is not None:
+        price_compute, layouts))
+    if (max_bytes_per_step is not None or max_t_per_step is not None
+            or max_state_bytes_per_rank is not None):
         budgeted = []
         for c in table:
             over = c.valid and (
@@ -296,14 +348,21 @@ def autotune(spec: ClusterSpec, d: int,
                  and c.bytes_per_step > max_bytes_per_step)
                 or (max_t_per_step is not None
                     and c.t_step_avg > max_t_per_step))
+            over_state = c.valid and (
+                max_state_bytes_per_rank is not None
+                and c.state_bytes_per_rank > max_state_bytes_per_rank)
             budgeted.append(dataclasses.replace(
-                c, valid=c.valid and not over,
-                why=c.why or ("over comm budget" if over else "")))
+                c, valid=c.valid and not over and not over_state,
+                why=c.why or ("over comm budget" if over
+                              else "over state-memory budget"
+                              if over_state else "")))
         table = tuple(budgeted)
     valid = [c for c in table if c.valid]
     assert valid, f"no valid plan for {spec.name} (d={d})"
+    from repro.optim.base import LAYOUTS as _LAYOUTS  # lazy: no cycle
     best = min(valid, key=lambda c: (c.sync_interval, c.t_step_avg,
                                      c.n_buckets,
                                      TOPOLOGIES.index(c.topology),
-                                     -c.block_size, c.use_kernel))
+                                     -c.block_size, c.use_kernel,
+                                     _LAYOUTS.index(c.layout)))
     return TuneResult(best=best, table=table)

@@ -1,0 +1,29 @@
+"""repro.state — declarative optimizer-state slot registry.
+
+Optimizers declare their state once as :class:`SlotSpec`s; machinery
+derives per-rank init, global shapes/PartitionSpecs, per-bucket EF slot
+views, checkpoint zeros templates + slot-diff migration, and the
+bucket-count-independent canonical EF layout (see the submodule
+docstrings).
+"""
+from repro.state.slots import (CHUNK_DIVISORS, EXTENTS, REPLICATIONS,
+                               SlotSpec, StateLayout, StateTree, ef_errs,
+                               global_shapes, init_global_state,
+                               init_rank_state, rank_shapes, slot_length,
+                               state_bytes, state_specs)
+from repro.state.layout import (bucket_sizes_for, canonicalize_state,
+                                ef_element_map, ef_slot_perm,
+                                from_canonical, layout_manifest,
+                                manifest_json, to_canonical)
+from repro.state.checkpoint import (load_train_state, save_train_state,
+                                    slot_diff)
+
+__all__ = [
+    "CHUNK_DIVISORS", "EXTENTS", "REPLICATIONS", "SlotSpec",
+    "StateLayout", "StateTree", "bucket_sizes_for", "canonicalize_state",
+    "ef_element_map", "ef_errs", "ef_slot_perm", "from_canonical",
+    "global_shapes", "init_global_state", "init_rank_state",
+    "layout_manifest", "load_train_state", "manifest_json",
+    "rank_shapes", "save_train_state", "slot_diff", "slot_length",
+    "state_bytes", "state_specs", "to_canonical",
+]

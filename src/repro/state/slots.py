@@ -1,0 +1,307 @@
+"""Declarative optimizer-state slot registry.
+
+Every optimizer in the compressed-optimizer family declares its state
+ONCE as a tuple of :class:`SlotSpec`s — name, extent, replication,
+dtype — and machinery derives everything that used to be hand-written
+in four places:
+
+  * per-rank zero state for the flat optimizer API
+    (:func:`init_rank_state` — ``TwoStageOptimizer.init_state``);
+  * global (mesh-wide) shapes and ``PartitionSpec``s for the shard_map
+    train step (:func:`init_global_state` / :func:`state_specs` —
+    ``repro.train.step``);
+  * zeros templates + slot-diff-driven migration for checkpoints
+    (``repro.state.checkpoint``);
+  * per-rank state-memory accounting for the auto-tuner
+    (:func:`state_bytes` — ``repro.plan.tune`` prices the zero1 layout
+    from the declared extents instead of a hand-derived formula).
+
+Extents (how long the slot is, per model-parallel rank):
+
+  ``per_param``    one element per flat parameter (length ``d``);
+  ``per_chunk``    one element per served chunk element — ``d`` divided
+                   by the divisor named in ``chunk_of``: ``"dp"`` (the
+                   full dp super-axis, e.g. ZeRO-1 ``v``/master shards),
+                   ``"server"`` (the server-chunk group: all of dp on
+                   the flat topology, the intra-pod group on hier), or
+                   ``"total"`` (server group x pods — the hierarchical
+                   gather sub-chunk);
+  ``per_segment``  one element per ``ravel_pytree`` segment (layerwise
+                   state, e.g. the LAMB trust ratios);
+  ``scalar``       a single scalar (step counters).
+
+Replications (who holds which values):
+
+  ``replicated``   every dp rank holds the same values (``m``/``v`` in
+                   the paper layout);
+  ``per_dp_rank``  every dp rank holds its OWN values (EF error state:
+                   worker momentum residuals are inherently per-worker);
+  ``dp_sharded``   the dp ranks partition one logical ``per_param``
+                   vector (ZeRO-1 ``v_shard``/``master_shard``).
+
+EF slots additionally name the plan error slot they back (``ef=``, the
+key the collective executor consumes) and whether their RUN layout
+follows the pipeline bucket structure (``bucket_keyed=True``): those
+buffers store each rank's residuals ordered by global element index
+*within the rank's served set*, which depends on the bucket partition —
+``repro.state.layout`` canonicalises them to the bucket-count-
+independent serial keying at checkpoint boundaries.
+
+The generic :class:`StateTree` (one ordered, attribute-accessible
+pytree container) replaces the per-layout NamedTuple zoo
+(``OptState``/``ZeroOptState``/``FlatOptState``/``ZeroFlatOptState``).
+Its key paths flatten as ``GetAttrKey`` so checkpoints written by the
+NamedTuple era keep their leaf keys byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, Iterator, Mapping, Optional,
+                    Sequence, Tuple)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EXTENTS = ("per_param", "per_chunk", "per_segment", "scalar")
+REPLICATIONS = ("replicated", "per_dp_rank", "dp_sharded")
+CHUNK_DIVISORS = ("dp", "server", "total")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotSpec:
+    """One declared optimizer-state slot (see module docstring)."""
+
+    name: str
+    extent: str = "per_param"
+    replication: str = "replicated"
+    dtype: str = "float32"
+    chunk_of: str = "server"          # per_chunk divisor name
+    ef: Optional[str] = None          # plan err-slot this state slot backs
+    bucket_keyed: bool = False        # run layout follows bucket structure
+
+    def __post_init__(self):
+        assert self.extent in EXTENTS, self.extent
+        assert self.replication in REPLICATIONS, self.replication
+        assert self.chunk_of in CHUNK_DIVISORS, self.chunk_of
+        if self.extent == "scalar":
+            assert self.replication == "replicated", \
+                (self.name, "scalar slots must be replicated")
+        if self.replication == "dp_sharded":
+            # dp_sharded means the ranks PARTITION one logical per-param
+            # vector — the slot must be its per-rank chunk, or the
+            # materialised shape (and the tuner's state pricing) would
+            # silently be a full per-rank copy
+            assert self.extent == "per_chunk" and self.chunk_of == "dp", \
+                (self.name, "dp_sharded slots must be per_chunk over dp")
+        if self.bucket_keyed:
+            assert self.extent == "per_chunk", \
+                (self.name, "only per_chunk slots can be bucket-keyed")
+
+    def manifest(self) -> Dict[str, object]:
+        return {"name": self.name, "extent": self.extent,
+                "replication": self.replication, "dtype": self.dtype,
+                "chunk_of": self.chunk_of if self.extent == "per_chunk"
+                else None,
+                "ef": self.ef, "bucket_keyed": self.bucket_keyed}
+
+
+@dataclasses.dataclass(frozen=True)
+class StateLayout:
+    """Static materialisation context for a slot set.
+
+    ``d`` is the padded per-model-rank flat parameter length; ``n_srv``
+    the server-chunk group size (== ``n_dp`` on the flat topology, the
+    intra-pod dp size on hier); ``n_outer`` the pod count (1 = flat).
+    ``dp_sizes``/``tp`` shape the global (mesh-wide) arrays only.
+    """
+
+    d: int
+    n_dp: int = 1
+    n_srv: int = 1
+    n_outer: int = 1
+    n_segments: int = 1
+    dp_sizes: Tuple[int, ...] = ()
+    tp: int = 1
+
+    def __post_init__(self):
+        assert self.d % max(self.n_dp, 1) == 0, (self.d, self.n_dp)
+        assert self.d % self.chunk_divisor("total") == 0, self
+        if self.dp_sizes:
+            n = 1
+            for s in self.dp_sizes:
+                n *= s
+            assert n == self.n_dp, (self.dp_sizes, self.n_dp)
+
+    def chunk_divisor(self, chunk_of: str) -> int:
+        return {"dp": max(self.n_dp, 1),
+                "server": max(self.n_srv, 1),
+                "total": max(self.n_srv, 1) * max(self.n_outer, 1)
+                }[chunk_of]
+
+
+def slot_length(spec: SlotSpec, ctx: StateLayout) -> Optional[int]:
+    """Per-rank element count of ``spec`` (None for scalars)."""
+    if spec.extent == "per_param":
+        return ctx.d
+    if spec.extent == "per_chunk":
+        div = ctx.chunk_divisor(spec.chunk_of)
+        assert ctx.d % div == 0, (spec.name, ctx.d, div)
+        return ctx.d // div
+    if spec.extent == "per_segment":
+        return ctx.n_segments
+    return None
+
+
+def state_bytes(slots: Sequence[SlotSpec], ctx: StateLayout) -> int:
+    """Optimizer-state bytes ONE dp rank holds (per model rank) — the
+    quantity layout decisions trade against: ``dp_sharded`` slots cost
+    their shard, everything else its full per-rank extent."""
+    total = 0
+    for s in slots:
+        n = slot_length(s, ctx)
+        total += np.dtype(s.dtype).itemsize * (1 if n is None else n)
+    return total
+
+
+# --------------------------------------------------------------------------
+# StateTree — the one generic state container
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class StateTree(Mapping):
+    """Ordered, attribute-accessible pytree of state slots.
+
+    Key paths flatten as ``GetAttrKey(name)``, so checkpoint leaf keys
+    match what the NamedTuple containers produced (``.m``, ``.v``, ...)
+    — old checkpoints load without key translation.
+    """
+
+    __slots__ = ("_data",)
+
+    def __init__(self, data: Mapping[str, Any] = (), **kw: Any):
+        d = dict(data)
+        d.update(kw)
+        object.__setattr__(self, "_data", d)
+
+    # --- mapping protocol --------------------------------------------------
+    def __getitem__(self, key: str) -> Any:
+        return self._data[key]
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: object) -> bool:
+        return key in self._data
+
+    # --- ergonomics --------------------------------------------------------
+    def __getattr__(self, name: str) -> Any:
+        try:
+            return self._data[name]
+        except KeyError:
+            raise AttributeError(name) from None
+
+    def __setattr__(self, name: str, value: Any):
+        raise AttributeError("StateTree is immutable; use _replace")
+
+    def _replace(self, **kw: Any) -> "StateTree":
+        unknown = set(kw) - set(self._data)
+        assert not unknown, f"unknown state slots: {sorted(unknown)}"
+        return StateTree({k: kw.get(k, v) for k, v in self._data.items()})
+
+    def map(self, fn: Callable[[Any], Any]) -> "StateTree":
+        return StateTree({k: fn(v) for k, v in self._data.items()})
+
+    def __repr__(self) -> str:
+        def _fmt(v):
+            shape = getattr(v, "shape", None)
+            return f"{getattr(v, 'dtype', '')}{list(shape)}" \
+                if shape is not None else repr(v)
+        inner = ", ".join(f"{k}={_fmt(v)}" for k, v in self._data.items())
+        return f"StateTree({inner})"
+
+    # --- pytree protocol ---------------------------------------------------
+    def tree_flatten_with_keys(self):
+        keys = tuple(self._data)
+        children = [(jax.tree_util.GetAttrKey(k), self._data[k])
+                    for k in keys]
+        return children, keys
+
+    def tree_flatten(self):
+        keys = tuple(self._data)
+        return tuple(self._data[k] for k in keys), keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        return cls(dict(zip(keys, children)))
+
+
+# --------------------------------------------------------------------------
+# materialisation — rank-local (optimizer API) and global (train step)
+# --------------------------------------------------------------------------
+
+def rank_shapes(slots: Sequence[SlotSpec], ctx: StateLayout
+                ) -> "StateTree":
+    """Per-rank flat (shape, dtype) pairs — what the optimizer update
+    math consumes inside shard_map."""
+    out = {}
+    for s in slots:
+        n = slot_length(s, ctx)
+        out[s.name] = (() if n is None else (n,), jnp.dtype(s.dtype))
+    return StateTree(out)
+
+
+def init_rank_state(slots: Sequence[SlotSpec], ctx: StateLayout
+                    ) -> "StateTree":
+    """Zeros per-rank state (the optimizer-level ``init_state``)."""
+    return rank_shapes(slots, ctx).map(lambda sd: jnp.zeros(*sd))
+
+
+def global_shapes(slots: Sequence[SlotSpec], ctx: StateLayout,
+                  layout: str = "replicated") -> "StateTree":
+    """Mesh-global (shape, dtype) pairs: replicated slots are
+    ``(tp, L)``; per-dp-rank and dp-sharded slots gain the leading
+    ``(*dp_sizes,)`` dims; scalars stay ``()``."""
+    out = {}
+    for s in slots:
+        n = slot_length(s, ctx)
+        if n is None:
+            out[s.name] = ((), jnp.dtype(s.dtype))
+            continue
+        lead = (tuple(ctx.dp_sizes) if s.replication != "replicated"
+                else ())
+        out[s.name] = (lead + (ctx.tp, n), jnp.dtype(s.dtype))
+    return StateTree(out)
+
+
+def init_global_state(slots: Sequence[SlotSpec], ctx: StateLayout,
+                      abstract: bool = False) -> "StateTree":
+    shapes = global_shapes(slots, ctx)
+    if abstract:
+        return shapes.map(lambda sd: jax.ShapeDtypeStruct(*sd))
+    return shapes.map(lambda sd: jnp.zeros(*sd))
+
+
+def state_specs(slots: Sequence[SlotSpec], dp_axes: Sequence[str],
+                model_axis: str = "model") -> "StateTree":
+    """PartitionSpecs matching :func:`global_shapes`."""
+    from jax.sharding import PartitionSpec as P
+    dp = tuple(dp_axes)
+    out = {}
+    for s in slots:
+        if s.extent == "scalar":
+            out[s.name] = P()
+        elif s.replication == "replicated":
+            out[s.name] = P(model_axis, None)
+        else:
+            out[s.name] = P(*dp, model_axis, None)
+    return StateTree(out)
+
+
+def ef_errs(state: Mapping[str, Any],
+            slots: Sequence[SlotSpec]) -> Dict[str, Any]:
+    """The plan-executor errs dict backed by ``state``'s EF slots."""
+    return {s.ef: state[s.name] for s in slots if s.ef is not None}

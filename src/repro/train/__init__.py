@@ -1,3 +1,3 @@
-from repro.train.step import (TrainStepConfig, init_opt_state,  # noqa: F401
+from repro.train.step import (TrainStepConfig, init_train_state,  # noqa: F401
                               make_serve_step, make_train_step,
-                              opt_state_specs)
+                              state_layout_ctx, train_state_specs)

@@ -17,8 +17,9 @@ semantics:
 
 The optimizer itself is pluggable: ``TrainStepConfig`` names a registered
 ``repro.optim`` optimizer and compressor, and the step body only ever
-calls the uniform ``warmup_update`` / ``compressed_update`` /
-``zero1_update`` interface — no optimizer-specific branches live here.
+calls the uniform ``warmup_update`` / ``update`` interface — no
+optimizer-specific branches live here (the compression-stage ``update``
+is ONE path for every state layout, driven by the declared slots).
 Orthogonal to the optimizer choice are:
 
   ``stage``     "warmup" | "compressed" (legacy values
@@ -36,20 +37,16 @@ Orthogonal to the optimizer choice are:
   ``topology``  "flat" | "hier" (two-level compressed allreduce across
                 pods — composes with any registered optimizer).
 
-Optimizer state layout (global shapes; Dp = padded per-model-rank flat
-parameter size, n_dp = product of dp axis sizes, S = number of
-``ravel_pytree`` segments incl. the padding tail):
-
-  m, v        (tp, Dp)                 P("model", None)  — dp-replicated
-  worker_err  (*dp_sizes, tp, Dp)      P(*dp, "model", None) — per dp rank
-  server_err  (*dp_sizes, tp, Dp/n_s)  P(*dp, "model", None) — per dp rank
-  outer_err   (*dp_sizes, tp, Dp/n_s)  P(*dp, "model", None) — per dp rank
-  scale       (tp, S)                  P("model", None)  — per-segment
-  count       ()                       P()
-  [n_s = n_dp on "flat", the INNER dp size on "hier"; outer_err is the
-   hierarchical schedule's cross-pod EF slot, zeros/untouched unless the
-   compressor is sparse]
-  ["local" layout: m, v, scale gain the leading (*dp_sizes,) dims]
+Optimizer state is NOT spelled out here: the optimizer declares its
+slots once (:meth:`repro.optim.TwoStageOptimizer.state_slots`, a tuple
+of :class:`repro.state.SlotSpec`s) and this module materialises the
+mesh-global zeros (:func:`init_train_state`) and ``PartitionSpec``s
+(:func:`train_state_specs`) from those declarations — replicated slots
+become ``(tp, L)`` / ``P("model", None)``, per-dp-rank and dp-sharded
+slots gain the leading ``(*dp_sizes,)`` dims / ``P(*dp, "model",
+None)``, with every length derived from the slot's extent (``d``, the
+server/total chunk, the segment count, or a scalar).  Adding optimizer
+state is a slot declaration, not a plumbing change.
 
 Replicating m/v over dp is paper-faithful (DeepSpeed's 1-bit Adam does not
 compose with ZeRO for the same reason: worker momentum + error state are
@@ -60,7 +57,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,8 +71,10 @@ from repro.core import onebit_adam as OB
 from repro.core.compression import padded_length
 from repro.models import transformer as T
 from repro.models.common import ParallelCtx
-from repro.optim import (OptState, TwoStageOptimizer, ZeroOptState,
-                         from_config, get_optimizer, segments_of)
+from repro.optim import (TwoStageOptimizer, from_config, get_optimizer,
+                         segments_of)
+from repro.state import (StateLayout, StateTree, init_global_state,
+                         state_specs)
 
 LAYOUTS = ("replicated", "local", "zero1")
 TOPOLOGIES = ("flat", "hier")
@@ -155,6 +154,10 @@ class TrainStepConfig:
             comp_kwargs["use_kernel"] = True
         return get_optimizer(self.optimizer, compressor=self.compressor,
                              compressor_kwargs=comp_kwargs,
+                             # the optimizer-level flag routes the WARMUP
+                             # stage through kernels/fused_adam (bitwise
+                             # the jnp chain; pinned in tests/test_state)
+                             use_kernel=self.kernel_enabled,
                              **(self.opt_kwargs or {}))
 
     @property
@@ -186,17 +189,6 @@ class TrainStepConfig:
         if self.opt is not None:
             return self.opt.compression.block_size
         return (self.comp_kwargs or {}).get("block_size", self.block_size)
-
-
-class FlatOptState(NamedTuple):
-    m: jax.Array
-    v: jax.Array
-    worker_err: jax.Array
-    server_err: jax.Array
-    scale: jax.Array
-    count: jax.Array
-    v_step: jax.Array
-    outer_err: jax.Array
 
 
 def mesh_axes(mesh: Mesh, model_axis: str = "model"):
@@ -260,63 +252,66 @@ def _n_segments(cfg: ArchConfig, tp: int, d_pad: int) -> int:
     return len(sizes) + (1 if d_pad > sum(sizes) else 0)
 
 
-def opt_state_specs(mesh: Mesh, model_axis: str = "model",
-                    layout: str = "replicated") -> FlatOptState:
-    dp_axes, _, _ = mesh_axes(mesh, model_axis)
-    dp = tuple(dp_axes)
-    per_rank = P(*dp, model_axis, None)
-    replicated = P(model_axis, None)
-    state = per_rank if layout == "local" else replicated
-    return FlatOptState(
-        m=state, v=state,
-        worker_err=per_rank,
-        server_err=per_rank,
-        scale=state,
-        count=P(),
-        v_step=P(),
-        outer_err=per_rank,
-    )
+def _as_optimizer(optimizer) -> TwoStageOptimizer:
+    """Resolve ``optimizer`` (instance | registry name | None) to the
+    slot-declaring object; None = the base family slots (every current
+    registered optimizer shares them)."""
+    if optimizer is None:
+        return TwoStageOptimizer()
+    if isinstance(optimizer, str):
+        return get_optimizer(optimizer)
+    return optimizer
 
 
-def init_opt_state(cfg: ArchConfig, mesh: Mesh, model_axis: str = "model",
-                   block: int = 4096, abstract: bool = False,
-                   hierarchical: bool = False,
-                   layout: str = "replicated") -> FlatOptState:
-    """Global optimizer state (zeros). abstract=True -> ShapeDtypeStructs.
-
-    hierarchical=True sizes the per-rank server-error chunk by the INNER
-    (intra-pod) dp size — the two-level compressed allreduce runs the
-    paper's server stage within the pod only. The padded flat length is
-    always a multiple of n_dp_total * block (hier sub-chunks each server
-    chunk over the outer axes).
-
-    layout="local" stores m/v/scale per dp rank (required for optimizers
-    that skip syncs; see the module docstring).
-    """
+def state_layout_ctx(cfg: ArchConfig, mesh: Mesh,
+                     model_axis: str = "model", block: int = 4096,
+                     topology: str = "flat") -> StateLayout:
+    """The :class:`repro.state.StateLayout` materialisation context of a
+    training run: padded flat length, dp/server/pod group sizes, segment
+    count — THE numbers every state consumer (init, specs, pipelined
+    slot views, checkpoint canonicalisation, tuner pricing) derives
+    from."""
     dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
     n_dp = 1
     for s in dp_sizes:
         n_dp *= s
-    dp_ = _flat_dim(cfg, tp, n_dp, block)
-    if hierarchical:
-        # server chunks span the INNER axes only
-        _, _, n_dp, _ = pod_split(dp_axes, dp_sizes)
-    n_seg = _n_segments(cfg, tp, dp_)
-    lead = tuple(dp_sizes) if layout == "local" else ()
-    shapes = FlatOptState(
-        m=(lead + (tp, dp_), jnp.float32),
-        v=(lead + (tp, dp_), jnp.float32),
-        worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
-        server_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
-        scale=(lead + (tp, n_seg), jnp.float32),
-        count=((), jnp.int32),
-        v_step=((), jnp.int32),
-        outer_err=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
-    )
-    if abstract:
-        return FlatOptState(*(jax.ShapeDtypeStruct(s, d)
-                              for s, d in shapes))
-    return FlatOptState(*(jnp.zeros(s, d) for s, d in shapes))
+    d_pad = _flat_dim(cfg, tp, n_dp, block)
+    n_srv, n_outer = n_dp, 1
+    if topology == "hier" and len(dp_axes) > 1:
+        _, _, n_srv, n_outer = pod_split(dp_axes, dp_sizes)
+    return StateLayout(d=d_pad, n_dp=n_dp, n_srv=n_srv, n_outer=n_outer,
+                       n_segments=_n_segments(cfg, tp, d_pad),
+                       dp_sizes=tuple(dp_sizes), tp=tp)
+
+
+def train_state_specs(mesh: Mesh, model_axis: str = "model",
+                      layout: str = "replicated",
+                      optimizer=None) -> StateTree:
+    """PartitionSpecs for the mesh-global optimizer state, derived from
+    the optimizer's declared slots."""
+    dp_axes, _, _ = mesh_axes(mesh, model_axis)
+    return state_specs(_as_optimizer(optimizer).state_slots(layout),
+                       dp_axes, model_axis)
+
+
+def init_train_state(cfg: ArchConfig, mesh: Mesh,
+                     model_axis: str = "model", block: int = 4096,
+                     abstract: bool = False, layout: str = "replicated",
+                     topology: str = "flat",
+                     optimizer=None) -> StateTree:
+    """Mesh-global optimizer state (zeros; ``abstract=True`` ->
+    ShapeDtypeStructs), built from the optimizer's declared slots.
+
+    ``topology="hier"`` sizes the server/outer EF chunks by the INNER
+    (intra-pod) dp size — the two-level compressed allreduce runs the
+    paper's server stage within the pod only.  The padded flat length is
+    always a multiple of n_dp_total * block in both topologies.
+    ``layout`` selects replicated (paper) / per-dp-rank "local" /
+    dp-sharded "zero1" adaptive state.
+    """
+    ctx = state_layout_ctx(cfg, mesh, model_axis, block, topology)
+    return init_global_state(_as_optimizer(optimizer).state_slots(layout),
+                             ctx, abstract=abstract)
 
 
 def _ctx(mesh: Mesh, model_axis: str) -> ParallelCtx:
@@ -338,67 +333,6 @@ def batch_specs(cfg: ArchConfig, shape_kind: str, dp_axes) -> Dict[str, P]:
 
 def _select(spec_map: Dict[str, Any], batch: Dict[str, Any]):
     return {k: spec_map[k] for k in batch}
-
-
-class ZeroFlatOptState(NamedTuple):
-    """Global container for the ZeRO-1-composed stage (see
-    repro.optim.base.ZeroOptState): v/master sharded over dp as well."""
-    m: jax.Array             # (tp, Dp)                 P(model, None)
-    v_shard: jax.Array       # (*dp, tp, Dp/n)          P(*dp, model, None)
-    master_shard: jax.Array  # (*dp, tp, Dp/n)
-    worker_err: jax.Array    # (*dp, tp, Dp)
-    server_err: jax.Array    # (*dp, tp, Dp/n_s)  (n_s = inner on "hier")
-    scale: jax.Array         # (tp, S)                  P(model, None)
-    count: jax.Array
-    v_step: jax.Array
-    outer_err: jax.Array     # (*dp, tp, Dp/n_s) cross-pod EF slot
-
-
-def zero1_opt_specs(mesh: Mesh, model_axis: str = "model"):
-    dp_axes, _, _ = mesh_axes(mesh, model_axis)
-    dp = tuple(dp_axes)
-    return ZeroFlatOptState(
-        m=P(model_axis, None),
-        v_shard=P(*dp, model_axis, None),
-        master_shard=P(*dp, model_axis, None),
-        worker_err=P(*dp, model_axis, None),
-        server_err=P(*dp, model_axis, None),
-        scale=P(model_axis, None),
-        count=P(), v_step=P(),
-        outer_err=P(*dp, model_axis, None))
-
-
-def init_zero1_opt_state(cfg: ArchConfig, mesh: Mesh,
-                         model_axis: str = "model", block: int = 4096,
-                         abstract: bool = False,
-                         hierarchical: bool = False) -> ZeroFlatOptState:
-    """ZeRO-1 global state (zeros). ``v``/master shard over the FULL dp
-    super-axis regardless of topology; with ``hierarchical=True`` the
-    server/outer EF chunks are sized by the INNER (intra-pod) dp size,
-    exactly as in :func:`init_opt_state`."""
-    dp_axes, dp_sizes, tp = mesh_axes(mesh, model_axis)
-    n_dp = 1
-    for s in dp_sizes:
-        n_dp *= s
-    dp_ = _flat_dim(cfg, tp, n_dp, block)
-    n_srv = n_dp
-    if hierarchical:
-        # server chunks span the INNER axes only
-        _, _, n_srv, _ = pod_split(dp_axes, dp_sizes)
-    n_seg = _n_segments(cfg, tp, dp_)
-    shapes = ZeroFlatOptState(
-        m=((tp, dp_), jnp.float32),
-        v_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
-        master_shard=(tuple(dp_sizes) + (tp, dp_ // n_dp), jnp.float32),
-        worker_err=(tuple(dp_sizes) + (tp, dp_), jnp.float32),
-        server_err=(tuple(dp_sizes) + (tp, dp_ // n_srv), jnp.float32),
-        scale=((tp, n_seg), jnp.float32),
-        count=((), jnp.int32), v_step=((), jnp.int32),
-        outer_err=(tuple(dp_sizes) + (tp, dp_ // n_srv), jnp.float32))
-    if abstract:
-        return ZeroFlatOptState(*(jax.ShapeDtypeStruct(s, d)
-                                  for s, d in shapes))
-    return ZeroFlatOptState(*(jnp.zeros(s, d) for s, d in shapes))
 
 
 # --------------------------------------------------------------------------
@@ -431,9 +365,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         ctx = dataclasses.replace(ctx, sp=True)
     tp_axes = (tsc.model_axis,) if tp > 1 else ()
     pspecs = T.param_specs(cfg, tsc.model_axis, tp)
-    osp = (zero1_opt_specs(mesh, tsc.model_axis)
-           if tsc.layout == "zero1"
-           else opt_state_specs(mesh, tsc.model_axis, tsc.layout))
+    osp = train_state_specs(mesh, tsc.model_axis, tsc.layout, optimizer)
     block = tsc.opt_block_size
 
     hier = tsc.topology == "hier" and len(dp_axes) > 1
@@ -443,7 +375,7 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         inner_axes, outer_axes = dp_axes, ()
     # padding basis: the flat vector must chunk into n_dp_total * block in
     # BOTH topologies (hier additionally sub-chunks each server chunk over
-    # the outer axes — see core/comm.py); matches init_opt_state
+    # the outer axes — see core/comm.py); matches init_train_state
     d_pad = _flat_dim(cfg, tp, n_dp, block)
 
     def step(params, opt, batch, lr):
@@ -480,69 +412,35 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
         segs = segments_of(grads, d_pad)
 
-        if tsc.layout == "zero1":
-            st = ZeroOptState(
-                m=opt.m.reshape(-1), v_shard=opt.v_shard.reshape(-1),
-                master_shard=opt.master_shard.reshape(-1),
-                worker_err=opt.worker_err.reshape(-1),
-                server_err=opt.server_err.reshape(-1),
-                scale=opt.scale.reshape(-1), count=opt.count,
-                v_step=opt.v_step,
-                outer_err=opt.outer_err.reshape(-1))
-            x_full, st, stats = optimizer.zero1_update(
+        # global -> per-rank views: flatten every non-scalar slot (the
+        # per-rank shard of any slot is its length with singleton leads)
+        st = StateTree({k: (v.reshape(-1) if v.ndim else v)
+                        for k, v in opt.items()})
+        sharded = "master_shard" in st
+
+        if sharded:
+            x_full, st, stats = optimizer.update(
                 g_flat, st, lr, dp_axes=inner_axes, pod_axes=outer_axes,
                 tp_axes=tp_axes, segs=segs, sync=tsc.sync,
                 n_buckets=tsc.n_buckets)
             new_params = unravel(x_full[:d_r].astype(flat0.dtype))
-            new_opt = ZeroFlatOptState(
-                m=st.m.reshape(opt.m.shape),
-                v_shard=st.v_shard.reshape(opt.v_shard.shape),
-                master_shard=st.master_shard.reshape(
-                    opt.master_shard.shape),
-                worker_err=st.worker_err.reshape(opt.worker_err.shape),
-                server_err=st.server_err.reshape(opt.server_err.shape),
-                scale=st.scale.reshape(opt.scale.shape),
-                count=st.count, v_step=st.v_step,
-                outer_err=st.outer_err.reshape(opt.outer_err.shape))
-            out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
-                           for k, v in metrics.items()}
-            v_l1 = stats["v_l1"]
-            if dp_axes:  # v sharded over dp: SUM the shard norms
-                v_l1 = jax.lax.psum(v_l1, dp_axes)
-            if ctx.tp_axis:
-                v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
-            out_metrics["v_l1"] = v_l1
-            out_metrics["total"] = (jax.lax.pmean(total, dp_axes)
-                                    if dp_axes else total)
-            return new_params, new_opt, out_metrics
-
-        st = OptState(
-            m=opt.m.reshape(-1), v=opt.v.reshape(-1),
-            worker_err=opt.worker_err.reshape(-1),
-            server_err=opt.server_err.reshape(-1),
-            scale=opt.scale.reshape(-1), count=opt.count,
-            v_step=opt.v_step,
-            outer_err=opt.outer_err.reshape(-1))
-        x = jnp.pad(flat0, (0, d_pad - d_r))
-
-        if tsc.stage == "warmup":
-            new_x, st, stats = optimizer.warmup_update(
-                g_flat, st, x, lr, dp_axes=dp_axes, tp_axes=tp_axes,
-                segs=segs)
         else:
-            new_x, st, stats = optimizer.compressed_update(
-                g_flat, st, x, lr, dp_axes=inner_axes,
-                pod_axes=outer_axes, tp_axes=tp_axes, segs=segs,
-                sync=tsc.sync, n_buckets=tsc.n_buckets)
+            x = jnp.pad(flat0, (0, d_pad - d_r))
+            if tsc.stage == "warmup":
+                new_x, st, stats = optimizer.warmup_update(
+                    g_flat, st, x, lr, dp_axes=dp_axes, tp_axes=tp_axes,
+                    segs=segs)
+            else:
+                new_x, st, stats = optimizer.update(
+                    g_flat, st, lr, x=x, dp_axes=inner_axes,
+                    pod_axes=outer_axes, tp_axes=tp_axes, segs=segs,
+                    sync=tsc.sync, n_buckets=tsc.n_buckets)
+            new_params = unravel(new_x[:d_r])
 
-        new_params = unravel(new_x[:d_r])
-        new_opt = FlatOptState(
-            m=st.m.reshape(opt.m.shape), v=st.v.reshape(opt.v.shape),
-            worker_err=st.worker_err.reshape(opt.worker_err.shape),
-            server_err=st.server_err.reshape(opt.server_err.shape),
-            scale=st.scale.reshape(opt.scale.shape),
-            count=st.count, v_step=st.v_step,
-            outer_err=st.outer_err.reshape(opt.outer_err.shape))
+        # per-rank -> global views, generically (scalars pass through)
+        new_opt = StateTree({k: (st[k].reshape(opt[k].shape)
+                                 if opt[k].ndim else st[k])
+                             for k in opt})
 
         # metrics: mean over dp (a no-op while replicated; the honest
         # cross-rank mean in the "local" layout); v_l1 summed over model
@@ -550,7 +448,9 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         out_metrics = {k: jax.lax.pmean(v, dp_axes) if dp_axes else v
                        for k, v in metrics.items()}
         v_l1 = stats["v_l1"]
-        if tsc.layout == "local" and dp_axes:
+        if sharded and dp_axes:   # v sharded over dp: SUM the shard norms
+            v_l1 = jax.lax.psum(v_l1, dp_axes)
+        elif tsc.layout == "local" and dp_axes:
             v_l1 = jax.lax.pmean(v_l1, dp_axes)
         if ctx.tp_axis:
             v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)

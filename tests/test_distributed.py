@@ -130,9 +130,9 @@ class TestCompressedAllreduceDistributed:
         zs = jnp.zeros((2, 4, d // 4), jnp.float32)
 
         def body(x, we, se):
-            out, _, _ = compressed_allreduce_hierarchical(
-                x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
-                outer_axes=("pod",), cfg=cfg)
+            out, _ = compressed_allreduce_hierarchical(
+                x[0, 0], {"worker": we[0, 0], "server": se[0, 0]},
+                inner_axes=("data",), outer_axes=("pod",), cfg=cfg)
             return out[None, None]
 
         f = jax.jit(jax.shard_map(
@@ -275,7 +275,7 @@ class TestDistributedTraining:
         import jax, jax.numpy as jnp, dataclasses
         from repro.configs import get_config, SHAPES
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig, init_opt_state,
+        from repro.train.step import (TrainStepConfig, init_train_state,
                                       make_train_step)
         from repro.data import SyntheticStream
         from repro.launch.mesh import make_mesh
@@ -290,7 +290,7 @@ class TestDistributedTraining:
         ocfg = OB.OneBitAdamConfig(
             compression=CompressionConfig(block_size=512))
         params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
-        opt = init_opt_state(cfg, mesh, block=512)
+        opt = init_train_state(cfg, mesh, block=512)
         s_w = make_train_step(cfg, mesh,
                               TrainStepConfig(opt=ocfg, stage="warmup"),
                               donate=False)
@@ -379,8 +379,8 @@ class TestZero1Composition:
         from repro.configs import get_config
         from repro.configs.base import InputShape
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig, init_opt_state,
-                                      init_zero1_opt_state, make_train_step)
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
         from repro.data import SyntheticStream
         from repro.core import onebit_adam as OB
         from repro.core.compression import CompressionConfig
@@ -395,14 +395,14 @@ class TestZero1Composition:
         params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
         # real flow: warmup with the replicated stage, then convert v and
         # the master weights into dp shards (the production switch path)
-        opt = init_opt_state(cfg, mesh, block=512)
+        opt = init_train_state(cfg, mesh, block=512)
         s_w = make_train_step(
             cfg, mesh, TrainStepConfig(opt=ocfg, stage="warmup"),
             donate=False)
         for t in range(8):
             params, opt, _ = s_w(params, opt, stream.batch_at(t),
                                  jnp.float32(2e-3))
-        z = init_zero1_opt_state(cfg, mesh, block=512)
+        z = init_train_state(cfg, mesh, block=512, layout="zero1")
         v = np.asarray(opt.v)
         Dp = v.shape[1]
         vs = np.stack([v[:, i * (Dp // 4):(i + 1) * (Dp // 4)]
@@ -462,7 +462,7 @@ class TestLocalLayoutSyncSkipping:
         from repro.configs import get_config
         from repro.configs.base import InputShape
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig, init_opt_state,
+        from repro.train.step import (TrainStepConfig, init_train_state,
                                       make_train_step)
         from repro.data import SyntheticStream
         from repro.launch.mesh import make_mesh
@@ -488,7 +488,7 @@ class TestLocalLayoutSyncSkipping:
             donate=False)
         optim = s_c.optimizer
         params = T.init_params(cfg, jax.random.PRNGKey(0), tp=2)
-        opt = init_opt_state(cfg, mesh, block=512, layout="local")
+        opt = init_train_state(cfg, mesh, block=512, layout="local")
         losses = []
         for step in range(30):
             if step < 10:
@@ -608,10 +608,11 @@ class TestPlanExecutorParity:
                 rng.normal(size=(2, 4, d // 4)).astype(np.float32)) * 0.1
 
             def new_body2(x, we, se):
-                o, nw, ns = compressed_allreduce_hierarchical(
-                    x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
-                    outer_axes=("pod",), cfg=comp)
-                return o[None, None], nw[None, None], ns[None, None]
+                o, errs = compressed_allreduce_hierarchical(
+                    x[0, 0], {"worker": we[0, 0], "server": se[0, 0]},
+                    inner_axes=("data",), outer_axes=("pod",), cfg=comp)
+                return (o[None, None], errs["worker"][None, None],
+                        errs["server"][None, None])
 
             def old_body2(x, we, se):
                 o, nw, ns = legacy_hier(x[0, 0], we[0, 0], se[0, 0],
@@ -682,22 +683,25 @@ class TestPlanExecutorParity:
         xs = jnp.asarray(rng.normal(size=(2, 4, d)).astype(np.float32))
         target = np.mean(np.asarray(xs).reshape(8, d), axis=0)
 
-        def body(x, we, se, oe):
-            o, nw, ns, noe = compressed_allreduce_hierarchical(
-                x[0, 0], we[0, 0], se[0, 0], inner_axes=("data",),
-                outer_axes=("pod",), cfg=comp, outer_err=oe[0, 0])
-            return (o[None, None], nw[None, None], ns[None, None],
-                    noe[None, None])
+        def body(x, we, se, oe, oae):
+            o, errs = compressed_allreduce_hierarchical(
+                x[0, 0], {"worker": we[0, 0], "server": se[0, 0],
+                          "outer": oe[0, 0], "outer_ag": oae[0, 0]},
+                inner_axes=("data",), outer_axes=("pod",), cfg=comp)
+            lift = lambda a: a[None, None]
+            return (lift(o), lift(errs["worker"]), lift(errs["server"]),
+                    lift(errs["outer"]), lift(errs["outer_ag"]))
 
-        specs = (P("pod", "data", None),) * 4
+        specs = (P("pod", "data", None),) * 5
         f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=specs,
                                   out_specs=specs, check_vma=False))
         we = jnp.zeros((2, 4, d))
         se = jnp.zeros((2, 4, d // 4))
         oe = jnp.zeros((2, 4, d // 4))
+        oae = jnp.zeros((2, 4, d // 8))
         outs = []
         for t in range(16):
-            o, we, se, oe = f(xs, we, se, oe)
+            o, we, se, oe, oae = f(xs, we, se, oe, oae)
             outs.append(np.asarray(o)[0, 0])
             # all ranks agree exactly on every step
             for i in range(2):
@@ -712,6 +716,7 @@ class TestPlanExecutorParity:
         # exchange by a wide margin, and the error states stay bounded
         assert err_avg < 0.5 * err_first, (err_first, err_avg)
         assert np.isfinite(np.asarray(oe)).all()
+        assert np.isfinite(np.asarray(oae)).all()
         assert float(jnp.linalg.norm(oe)) < 10 * float(jnp.linalg.norm(xs))
         print("OK", err_first, err_avg)
         """, timeout=1800)
@@ -735,8 +740,7 @@ class TestHierZero1Composition:
         from repro.data import SyntheticStream
         from repro.launch.mesh import make_mesh
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig,
-                                      init_zero1_opt_state,
+        from repro.train.step import (TrainStepConfig, init_train_state,
                                       make_train_step)
 
         mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
@@ -757,8 +761,8 @@ class TestHierZero1Composition:
                                   stage="compressed", layout="zero1",
                                   topology=topo)
             step = make_train_step(cfg, mesh, tsc, donate=False)
-            z = init_zero1_opt_state(cfg, mesh, block=512,
-                                     hierarchical=hier)
+            z = init_train_state(cfg, mesh, block=512, layout="zero1",
+                                 topology=topo)
             from jax.flatten_util import ravel_pytree
             flat, _ = ravel_pytree(jax.tree.map(
                 lambda a: a.astype(jnp.float32), params0))
@@ -795,7 +799,8 @@ class TestHierZero1Composition:
                               stage="compressed", layout="zero1",
                               topology="hier")
         step = make_train_step(cfg, mesh, tsc, donate=False)
-        z = init_zero1_opt_state(cfg, mesh, block=512, hierarchical=True)
+        z = init_train_state(cfg, mesh, block=512, layout="zero1",
+                             topology="hier")
         z = z._replace(v_shard=jnp.ones_like(z.v_shard) * 0.1)
         params = jax.tree.map(lambda a: a.astype(jnp.bfloat16), params0)
         losses = []
@@ -815,14 +820,15 @@ class TestPipelinedParity:
     serial executor BITWISE across (flat, hier) x (replicated, zero1) x
     (onebit, topk, identity) when buckets align with compressor blocks
     (the Bucketer guarantees alignment). Three chained steps carry the
-    EF state through both executors, so the bucket-major server/outer
-    residual layout is exercised, not just the first exchange.
-
-    Exception, pinned as such: hier + sparse (topk) runs the outer-EF
-    FOLD, which parks residuals per rank-held element — bucketing
-    re-partitions rank ownership, so that combo is bitwise on the first
-    exchange only and exact-EF (not bitwise) after (see
-    repro.pipeline.executor docstring)."""
+    EF state through both executors, so the bucket-partitioned EF slot
+    views are exercised, not just the first exchange — INCLUDING
+    hier + sparse (topk): since every lossy hop owns its per-element EF
+    slot (no cross-op residual fold), the EF arithmetic is independent
+    of the bucket partition and the old "first exchange only" caveat is
+    gone.  The chunk EF slots themselves live in bucket-partitioned
+    layouts that differ between runs; their per-element equality is
+    pinned via the repro.state canonicalisation in
+    tests/test_state.py."""
 
     def test_optimizer_parity_all_combos(self):
         out = run_with_devices("""
@@ -855,19 +861,18 @@ class TestPipelinedParity:
                     inner, outer, n_in = ("data",), ("pod",), 4
                 else:
                     inner, outer, n_in = ("pod", "data"), (), None
-                # hier+topk: bitwise only while the outer-EF fold has
-                # not yet parked rank-local residuals (see class doc)
-                steps = 1 if (topo == "hier" and kind == "topk") else 3
+                steps = 3   # full-trajectory parity for EVERY combo
 
                 # --- replicated layout ------------------------------
                 def run(nb):
-                    st = jax.tree.map(stack, opt.init(d, 8, n_inner=n_in))
+                    st = jax.tree.map(stack,
+                                      opt.init_state(d, 8, n_inner=n_in))
                     x = stack(x0)
 
                     def body(g, s, xx):
                         s1 = jax.tree.map(lambda a: a[0, 0], s)
-                        nx, ns, _ = opt.compressed_update(
-                            g[0, 0], s1, xx[0, 0], jnp.float32(1e-2),
+                        nx, ns, _ = opt.update(
+                            g[0, 0], s1, jnp.float32(1e-2), x=xx[0, 0],
                             dp_axes=inner, pod_axes=outer, n_buckets=nb)
                         lift = lambda a: jnp.broadcast_to(
                             a, (1, 1) + a.shape)
@@ -896,7 +901,8 @@ class TestPipelinedParity:
 
                 # --- zero1 layout -----------------------------------
                 def run_z(nb):
-                    st = opt.init_zero1(d, 8, n_inner=n_in)
+                    st = opt.init_state(d, 8, n_inner=n_in,
+                                        layout="zero1")
                     chunks = x0.reshape(2, 4, d // 8)
                     st = st._replace(
                         v_shard=jnp.ones_like(st.v_shard) * 0.1)
@@ -905,7 +911,7 @@ class TestPipelinedParity:
 
                     def body(g, s):
                         s1 = jax.tree.map(lambda a: a[0, 0], s)
-                        xf, ns, _ = opt.zero1_update(
+                        xf, ns, _ = opt.update(
                             g[0, 0], s1, jnp.float32(1e-2),
                             dp_axes=inner, pod_axes=outer, n_buckets=nb)
                         lift = lambda a: jnp.broadcast_to(
@@ -938,10 +944,22 @@ class TestPipelinedParity:
     def test_hier_zero1_topk_step_parity(self):
         """Satellite: the full train step with pipeline=2 vs off on the
         deepest composition — hier topology + zero1 layout + sparse
-        topk compressor (outer EF slot in play). First step bitwise
-        (params, master shards, momentum); the pipelined run then keeps
-        training (finite, improving) with its bucket-major outer-EF
-        partition."""
+        topk compressor (both outer EF slots in play).  The EXCHANGE is
+        bitwise under bucketing for this combo over chained steps (the
+        caveat this refactor removed — pinned in
+        test_optimizer_parity_all_combos and tests/test_state.py); at
+        the FULL-step level XLA may contract the surrounding
+        elementwise chains (momentum EMA, master update) into FMAs
+        differently for the two compiled programs, so this test pins
+        the first step fully bitwise, then bounds the DISAGREEING
+        COORDINATE COUNT over three chained steps: a 1-ULP contraction
+        difference occasionally flips a topk selection at the k-th
+        |value| boundary (an O(value) diff at a couple of coordinates,
+        immediately re-sent by EF), while a real EF-partition bug — the
+        removed fold caveat — mispartitions residuals across ranks and
+        flips HUNDREDS of coordinates per step (measured ~600-800 on
+        this config with the old fold).  The pipelined run then keeps
+        training (finite, improving)."""
         out = run_with_devices("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
@@ -949,8 +967,7 @@ class TestPipelinedParity:
         from repro.data import SyntheticStream
         from repro.launch.mesh import make_mesh
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig,
-                                      init_zero1_opt_state,
+        from repro.train.step import (TrainStepConfig, init_train_state,
                                       make_train_step)
 
         mesh = make_mesh((2, 2, 1), ("pod", "data", "model"))
@@ -968,26 +985,48 @@ class TestPipelinedParity:
                                   stage="compressed", layout="zero1",
                                   topology="hier", pipeline=pipe)
             step = make_train_step(cfg, mesh, tsc, donate=False)
-            z = init_zero1_opt_state(cfg, mesh, block=512,
-                                     hierarchical=True)
+            z = init_train_state(cfg, mesh, block=512, layout="zero1",
+                                 topology="hier")
             z = z._replace(v_shard=jnp.ones_like(z.v_shard) * 0.1)
-            params, z, m = step(params0, z, stream.batch_at(0),
-                                jnp.float32(1e-3))
-            runs[pipe] = (params, z, step, float(m["loss"]))
+            params = params0
+            losses = []
+            snaps = []
+            for t in range(3):
+                params, z, m = step(params, z, stream.batch_at(t),
+                                    jnp.float32(1e-3))
+                losses.append(float(m["loss"]))
+                snaps.append((jax.tree.map(np.asarray, params),
+                              np.asarray(z.m),
+                              np.asarray(z.master_shard)))
+            runs[pipe] = (params, z, step, losses, snaps)
 
-        po, zo, _, lo = runs["off"]
-        pp, zp, step, lp = runs[2]
+        po, zo, _, lo, so = runs["off"]
+        pp, zp, step, lp, sp_ = runs[2]
+        # first step fully bitwise (all EF starts at zero)
+        for a, b in zip(jax.tree.leaves(so[0][0]),
+                        jax.tree.leaves(sp_[0][0])):
+            np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(so[0][1], sp_[0][1])
+        np.testing.assert_array_equal(so[0][2], sp_[0][2])
+        # three chained steps: coordinates disagreeing beyond 1-ULP
+        # noise must stay in the single digits (see class docstring)
+        def n_flips(a, b, tol=1e-6):
+            return int(np.sum(np.abs(np.asarray(a, np.float32)
+                                     - np.asarray(b, np.float32)) > tol))
         for a, b in zip(jax.tree.leaves(po), jax.tree.leaves(pp)):
-            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-        np.testing.assert_array_equal(np.asarray(zo.master_shard),
-                                      np.asarray(zp.master_shard))
-        np.testing.assert_array_equal(np.asarray(zo.m), np.asarray(zp.m))
-        assert lo == lp and np.isfinite(lo)
-        print("OK first-step bitwise", lo)
+            assert n_flips(a, b) <= 16, "replica diverged"
+        for name in ("master_shard", "m", "worker_err"):
+            flips = n_flips(getattr(zo, name), getattr(zp, name))
+            assert flips <= 64, (name, flips)
+        # losses to tolerance too: a tolerated coordinate flip at step
+        # t-1 legitimately perturbs the step-t loss
+        np.testing.assert_allclose(lo, lp, rtol=1e-4)
+        assert np.isfinite(lo).all(), lo
+        print("OK 3-step parity", lo)
 
         # the pipelined run keeps training on its own EF partition
-        losses = [lp]
-        for t in range(1, 9):
+        losses = list(lp)
+        for t in range(3, 11):
             pp, zp, m = step(pp, zp, stream.batch_at(t),
                              jnp.float32(1e-3))
             losses.append(float(m["loss"]))

@@ -130,12 +130,14 @@ class TestCompressorRegistry:
 
     def test_hierarchical_rejects_sparse_compressor(self):
         """EF-free cross-pod legs would silently drop the non-top-k mass
-        (systematic bias) — hier + sparse must fail loudly."""
+        (systematic bias) — hier + sparse without its outer EF slots
+        must fail loudly."""
         from repro.core.comm import compressed_allreduce_hierarchical
         comp = get_compressor("topk", block_size=256, ratio=8)
         with pytest.raises(AssertionError, match="dense"):
             compressed_allreduce_hierarchical(
-                jnp.zeros((D,)), jnp.zeros((D,)), jnp.zeros((D,)),
+                jnp.zeros((D,)),
+                {"worker": jnp.zeros((D,)), "server": jnp.zeros((D,))},
                 inner_axes=(), outer_axes=("pod",), cfg=comp)
 
     def test_unknown_names_raise(self):
@@ -155,7 +157,7 @@ class TestOptimizerParity:
 
     def _run(self, opt, segs=None, sync_fn=None):
         grad = quad_grad(0)
-        st = opt.init(D, 1, segs.n if segs else 1)
+        st = opt.init_state(D, 1, segs.n if segs else 1)
         x = jnp.zeros((D,))
         key = jax.random.PRNGKey(0)
         xs = []
@@ -168,9 +170,8 @@ class TestOptimizerParity:
                                              segs=segs)
             else:
                 sync = sync_fn(i - self.WARMUP) if sync_fn else True
-                x, st, _ = opt.compressed_update(g, st, x,
-                                                 jnp.float32(self.LR),
-                                                 segs=segs, sync=sync)
+                x, st, _ = opt.update(g, st, jnp.float32(self.LR), x=x,
+                                      segs=segs, sync=sync)
             xs.append(np.asarray(x))
         return xs, st
 
@@ -275,19 +276,19 @@ class TestOptimizerParity:
                             sync_max_interval=2)
         assert opt.may_skip_sync
         grad = quad_grad(1)
-        st = opt.init(D, 1)
+        st = opt.init_state(D, 1)
         x = rand(D, 9)
         key = jax.random.PRNGKey(1)
-        x1, st1, _ = opt.compressed_update(grad(x, key), st, x,
-                                           jnp.float32(1e-2), sync=False)
+        x1, st1, _ = opt.update(grad(x, key), st, jnp.float32(1e-2),
+                                x=x, sync=False)
         np.testing.assert_array_equal(np.asarray(x1), np.asarray(x))
         np.testing.assert_array_equal(np.asarray(st1.worker_err),
                                       np.asarray(st.worker_err))
         assert not np.array_equal(np.asarray(st1.m), np.asarray(st.m))
         assert int(st1.count) == 1
         # the deferred gradient is still in m: the next synced step moves x
-        x2, st2, _ = opt.compressed_update(grad(x1, key), st1, x1,
-                                           jnp.float32(1e-2), sync=True)
+        x2, st2, _ = opt.update(grad(x1, key), st1, jnp.float32(1e-2),
+                                x=x1, sync=True)
         assert not np.array_equal(np.asarray(x2), np.asarray(x1))
 
     def test_warmup_is_adam_for_all_optimizers(self):
@@ -296,7 +297,7 @@ class TestOptimizerParity:
         grad = quad_grad(2)
         for name in list_optimizers():
             opt = get_optimizer(name, compressor="identity")
-            st = opt.init(D, 1)
+            st = opt.init_state(D, 1)
             sta = adam_init(D)
             x1 = x2 = jnp.zeros((D,))
             key = jax.random.PRNGKey(2)
@@ -325,17 +326,17 @@ class TestZero1Parity:
         v0 = jnp.abs(rand(D, 11)) + 0.1
         m0 = rand(D, 12, 0.1)
         x0 = rand(D, 13)
-        st_r = opt.init(D, 1, segs.n)._replace(m=m0, v=v0)
-        st_z = opt.init_zero1(D, 1, segs.n)._replace(
+        st_r = opt.init_state(D, 1, segs.n)._replace(m=m0, v=v0)
+        st_z = opt.init_state(D, 1, segs.n, layout="zero1")._replace(
             m=m0, v_shard=v0, master_shard=x0)
         key = jax.random.PRNGKey(3)
         x_r = x0
         for i in range(6):
             key, k = jax.random.split(key)
             g = grad(x_r, k)
-            x_r, st_r, _ = opt.compressed_update(
-                g, st_r, x_r, jnp.float32(1e-2), segs=segs)
-            xf, st_z, _ = opt.zero1_update(
+            x_r, st_r, _ = opt.update(
+                g, st_r, jnp.float32(1e-2), x=x_r, segs=segs)
+            xf, st_z, _ = opt.update(
                 g, st_z, jnp.float32(1e-2), segs=segs)
             np.testing.assert_array_equal(np.asarray(st_z.master_shard),
                                           np.asarray(x_r))
@@ -356,8 +357,8 @@ class TestZero1Parity:
         from repro.data import SyntheticStream
         from repro.launch.mesh import make_mesh
         from repro.models import transformer as T
-        from repro.train.step import (TrainStepConfig, init_opt_state,
-                                      init_zero1_opt_state, make_train_step)
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
 
         cfg = get_config("internlm2-1.8b").reduced()
         mesh = make_mesh((1, 1), ("data", "model"))
@@ -376,12 +377,12 @@ class TestZero1Parity:
             dataclasses.replace(tsc, stage="compressed", layout="zero1"),
             donate=False)
         params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
-        opt = init_opt_state(cfg, mesh, block=512)
+        opt = init_train_state(cfg, mesh, block=512)
         for t in range(4):
             params, opt, _ = s_w(params, opt, stream.batch_at(t),
                                  jnp.float32(1e-3))
         # convert replicated warmup state -> zero1 state (1 dev: no chunking)
-        z = init_zero1_opt_state(cfg, mesh, block=512)
+        z = init_train_state(cfg, mesh, block=512, layout="zero1")
         flat, _ = ravel_pytree(params)
         dp_len = z.master_shard.reshape(-1).shape[0]
         master = jnp.pad(flat.astype(jnp.float32),

@@ -95,6 +95,8 @@ class TestLowering:
         assert strides["server"] == 4          # chunk-sized: d / n_inner
         if kind == "topk":
             assert strides["outer"] == 4
+            # gather-leg EF: per-element sub-chunk slot, d / (n_in*n_out)
+            assert strides["outer_ag"] == 8
         # streams: cross legs sandwiched by intra legs
         assert pp.streams[0] == "intra" and pp.streams[-1] == "intra"
         assert "cross" in pp.streams
@@ -435,10 +437,10 @@ class TestCommLayerIntegration:
             TrainStepConfig(pipeline=0).n_buckets
 
     def test_checkpoint_records_bucket_count(self, tmp_path):
-        """The chunk EF slots are bucket-major: a checkpoint carries the
-        bucket count it was written with (launch.train refuses/adopts on
-        a resume mismatch) and stays loadable by the metadata-unaware
-        reader."""
+        """A checkpoint carries the bucket count it was written with —
+        the repro.state loader uses it to lift bucket-major-era archives
+        to the canonical EF keying — and stays loadable by the
+        metadata-unaware reader."""
         from repro.checkpoint import load_meta, load_pytree, save_pytree
         tree = {"a": jnp.arange(4.0), "b": jnp.zeros((2,))}
         p = str(tmp_path / "ck.npz")

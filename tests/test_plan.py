@@ -92,12 +92,18 @@ class TestIR:
         assert [op.kind for op in plan_i.ops] == \
             ["AllToAll", "AllReduce", "AllGather"]
 
-    def test_hier_sparse_gets_outer_ef_slot(self):
+    def test_hier_sparse_gets_outer_ef_slots(self):
         comp = get_compressor("topk", block_size=BLOCK, ratio=8)
         assert needs_outer_ef(comp)
         plan = hier_schedule(comp, D, 4, 2, ("data",), ("pod",),
                              outer_ef=True)
-        assert plan.err_slots == ("worker", "outer", "server")
+        # one EF loop per lossy hop: a2a leg = "outer", gather leg =
+        # "outer_ag" (its own per-element slot — no cross-op fold)
+        assert plan.err_slots == ("worker", "outer", "outer_ag",
+                                  "server")
+        ag_outer = plan.ops[2]
+        assert ag_outer.err_slot == "outer_ag"
+        assert ag_outer.d_in == D // (4 * 2)
         # dense compressors keep the EF-free outer legs (bitwise parity
         # with the pre-IR schedule)
         ob = get_compressor("onebit", block_size=BLOCK)
@@ -110,7 +116,7 @@ class TestIR:
         txt = hier_schedule(comp, D, 4, 2, ("data",), ("pod",),
                             outer_ef=True).describe()
         assert "AllToAll" in txt and "AllGather" in txt
-        assert "ef=outer" in txt and "fold=outer" in txt
+        assert "ef=outer" in txt and "ef=outer_ag" in txt
 
 
 class TestExecutorParity:
@@ -164,19 +170,26 @@ class TestExecutorParity:
         comp = get_compressor("topk", block_size=BLOCK, ratio=8)
         with pytest.raises(AssertionError, match="dense"):
             compressed_allreduce_hierarchical(
-                jnp.zeros((D,)), jnp.zeros((D,)), jnp.zeros((D,)),
+                jnp.zeros((D,)),
+                {"worker": jnp.zeros((D,)), "server": jnp.zeros((D,))},
                 inner_axes=(), outer_axes=("pod",), cfg=comp)
 
     def test_hier_degenerate_passthrough_returns_outer_err(self):
-        """No outer axes: falls back to flat, outer_err passes through."""
+        """No outer axes: falls back to flat, the outer EF slots pass
+        through untouched."""
         comp = get_compressor("topk", block_size=BLOCK, ratio=8)
         x, we, se = rand(D, 2), rand(D, 3, 0.1), rand(D, 4, 0.1)
-        oe = rand(D, 5, 0.1)
-        out = compressed_allreduce_hierarchical(
-            x, we, se, inner_axes=(), outer_axes=(), cfg=comp,
-            outer_err=oe)
-        assert len(out) == 4
-        np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(oe))
+        oe, oae = rand(D, 5, 0.1), rand(D, 6, 0.1)
+        out, errs = compressed_allreduce_hierarchical(
+            x, {"worker": we, "server": se, "outer": oe,
+                "outer_ag": oae},
+            inner_axes=(), outer_axes=(), cfg=comp)
+        np.testing.assert_array_equal(np.asarray(errs["outer"]),
+                                      np.asarray(oe))
+        np.testing.assert_array_equal(np.asarray(errs["outer_ag"]),
+                                      np.asarray(oae))
+        assert not np.array_equal(np.asarray(errs["worker"]),
+                                  np.asarray(we))
 
 
 class TestCostModel:

@@ -17,7 +17,7 @@ from repro.core.compression import CompressionConfig
 from repro.data import SyntheticStream, make_batch
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
-from repro.train.step import (TrainStepConfig, init_opt_state,
+from repro.train.step import (TrainStepConfig, init_train_state,
                               make_serve_step, make_train_step)
 
 
@@ -27,7 +27,7 @@ def small_setup(arch="internlm2-1.8b", block=512):
     ocfg = OB.OneBitAdamConfig(compression=CompressionConfig(
         block_size=block))
     params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
-    opt = init_opt_state(cfg, mesh, block=block)
+    opt = init_train_state(cfg, mesh, block=block)
     return cfg, mesh, ocfg, params, opt
 
 
