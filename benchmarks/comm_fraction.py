@@ -12,10 +12,18 @@ using the paper's own hardware constants, then show the same model with
 the measured 1-bit wire compression applied. The compute times come from
 the paper (V100 measurements we cannot re-measure on CPU); the bytes come
 from the model size and our compiled wire format.
+
+With ``--telemetry DIR`` every row is also emitted as ``comm`` events in
+the :mod:`repro.obs` schema (one per compressor variant, ``source:
+"analytic"``), so these Table 1 points and a live run's measured comm
+fractions fold through the same ``repro.obs.report`` path.
 """
 from __future__ import annotations
 
+import argparse
 from typing import Dict, List
+
+from repro.obs import as_sink
 
 BERT_LARGE_PARAMS = 340e6
 FP32 = 4
@@ -39,7 +47,7 @@ def compressed_time_ms(model_bytes_fp32: float, n: int, bw_bits: float,
     return 2.0 * (n - 1) / n * (model_bytes_fp32 / compression) / bw * 1e3
 
 
-def run(verbose: bool = True) -> List[Dict]:
+def run(verbose: bool = True, telemetry=None) -> List[Dict]:
     rows = []
     cases = [
         ("Ethernet", 4.1e9, 64), ("Ethernet", 4.1e9, 16),
@@ -47,6 +55,7 @@ def run(verbose: bool = True) -> List[Dict]:
         ("InfiniBand", 100e9, 8),
     ]
     mb = BERT_LARGE_PARAMS * FP16
+    sink = as_sink(telemetry, filename="comm_fraction.jsonl")
     for net, bw, n in cases:
         t_ar = ring_allreduce_time_ms(mb, n, bw)
         frac = t_ar / (t_ar + T_COMPUTE_MS)
@@ -59,6 +68,17 @@ def run(verbose: bool = True) -> List[Dict]:
             "onebit_ms": round(t_1b, 1),
             "onebit_frac": round(frac_1b, 3),
         })
+        for comp, t_ms, fr, nbytes in (
+                ("none", t_ar, frac, mb),
+                ("onebit", t_1b, frac_1b, BERT_LARGE_PARAMS * FP32 / 32)):
+            sink.emit("comm", t_comm=t_ms / 1e3,
+                      t_compute=T_COMPUTE_MS / 1e3,
+                      label=f"{net}/{n}gpu/{comp}", n=n, gbps=bw / 1e9,
+                      frac=fr, compressor=comp, bytes=float(nbytes),
+                      source="analytic")
+    sink.close()
+    if telemetry and verbose:
+        print(f"telemetry: {sink.n_events} events -> {sink.path}")
     if verbose:
         print("== comm_fraction (Table 1, analytic from paper constants) ==")
         for r in rows:
@@ -74,4 +94,9 @@ def run(verbose: bool = True) -> List[Dict]:
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="emit the repro.obs event schema to "
+                         "DIR/comm_fraction.jsonl (fold with "
+                         "python -m repro.obs.report)")
+    run(telemetry=ap.parse_args().telemetry)

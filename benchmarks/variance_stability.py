@@ -15,9 +15,16 @@ Two measurements:
    plumbing end-to-end (on a 120-step toy LM `v` rises then decays as the
    model converges, unlike BERT's 150K-step run, so only the firing is
    asserted there, not a plateau).
+
+With ``--telemetry DIR`` both phases emit the :mod:`repro.obs` event
+schema — per-step ``step`` events carrying ``v_l1`` (and the running
+variance ratio) plus a ``transition`` event where the rule fires — so
+this benchmark's Fig. 2 curve and a live ``launch.train --telemetry``
+run fold through the SAME ``repro.obs.report`` path.
 """
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import jax
@@ -32,11 +39,31 @@ from repro.core.variance import VarianceMonitor
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
+from repro.obs import NullSink, as_sink
 from repro.train.step import (TrainStepConfig, init_train_state,
                               make_train_step)
 
 
-def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30):
+def _observe(sink, mon: VarianceMonitor, t: int, v: float,
+             stage: str) -> bool:
+    """Feed the monitor + emit the matching step (and, on firing,
+    transition) events; returns the monitor's frozen verdict."""
+    fired_before = mon.freeze_step is not None
+    frozen = mon.observe(t, v)
+    fields = {"v_l1": v, "stage": stage}
+    if mon.ratio is not None:
+        fields["ratio"] = float(mon.ratio)
+    sink.emit("step", step=t, **fields)
+    if frozen and not fired_before and mon.freeze_step is not None:
+        sink.emit("transition", step=t, kind="stage", frm="warmup",
+                  to="compressed", mode="auto",
+                  **({"ratio": float(mon.ratio)}
+                     if mon.ratio is not None else {}))
+    return frozen
+
+
+def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30,
+                     sink=NullSink()):
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.uniform(0.5, 5.0, (d,)).astype(np.float32))
     t_star = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
@@ -53,7 +80,7 @@ def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30):
         x, st = adam_update(g, st, x, cfg, lr)
         v = float(jnp.sum(jnp.abs(st.v)))
         v_hist.append(v)
-        if mon.observe(t, v) and freeze_at is None:
+        if _observe(sink, mon, t, v, "quadratic") and freeze_at is None:
             freeze_at = t
     delta = mon.delta
     return {
@@ -64,7 +91,7 @@ def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30):
     }
 
 
-def _system_phase(steps=80, b2=0.97, lr_warmup=15):
+def _system_phase(steps=80, b2=0.97, lr_warmup=15, sink=NullSink()):
     cfg = get_config("internlm2-1.8b").reduced()
     shape = InputShape("bench", 64, 8, "train")
     mesh = make_mesh((1, 1), ("data", "model"))
@@ -81,14 +108,21 @@ def _system_phase(steps=80, b2=0.97, lr_warmup=15):
     for t in range(steps):
         lr = jnp.float32(1e-3 * min((t + 1) / lr_warmup, 1.0))
         params, opt, m = step(params, opt, stream.batch_at(t), lr)
-        if mon.observe(t, float(m["v_l1"])) and freeze_at is None:
+        if _observe(sink, mon, t, float(m["v_l1"]),
+                    "system") and freeze_at is None:
             freeze_at = t
     return {"freeze_step": freeze_at, "lr_warmup": lr_warmup}
 
 
-def run(verbose: bool = True):
-    quad = _quadratic_phase()
-    sys_ = _system_phase()
+def run(verbose: bool = True, telemetry=None):
+    with as_sink(telemetry, filename="variance_stability.jsonl") as sink:
+        sink.emit("run_meta", optimizer="adam", compressor="none",
+                  topology="flat", n_buckets=1,
+                  source="benchmarks/variance_stability")
+        quad = _quadratic_phase(sink=sink)
+        sys_ = _system_phase(sink=sink)
+    if telemetry and verbose:
+        print(f"telemetry: {sink.n_events} events -> {sink.path}")
     results = {f"quad_{k}": (round(v, 4) if isinstance(v, float) else v)
                for k, v in quad.items()}
     results.update({f"system_{k}": v for k, v in sys_.items()})
@@ -111,4 +145,9 @@ def run(verbose: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="emit the repro.obs event schema to "
+                         "DIR/variance_stability.jsonl (fold with "
+                         "python -m repro.obs.report)")
+    run(telemetry=ap.parse_args().telemetry)

@@ -9,6 +9,7 @@ Runs host-side on the scalar ``v_l1`` stat emitted by the warmup step.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 
@@ -20,10 +21,23 @@ class VarianceMonitor:
         self.lr_warmup_steps = lr_warmup_steps
         self.history: list[float] = []
         self.freeze_step: Optional[int] = None
+        self.n_rejected = 0
 
     def observe(self, step: int, v_l1: float) -> bool:
-        """Record ||v_t||_1; returns True when the warmup should end."""
-        self.history.append(float(v_l1))
+        """Record ||v_t||_1; returns True when the warmup should end.
+
+        Non-finite values (a diverged warmup step) are REJECTED, not
+        recorded: a NaN in the Delta-window would poison every ratio
+        that looks back at it — NaN comparisons are False, so the freeze
+        would be silently blocked for ``delta`` steps (and an inf could
+        trigger it spuriously).  Rejections are counted so callers can
+        surface them (``repro.optim.WarmupSwitch`` logs a warning
+        event)."""
+        v = float(v_l1)
+        if not math.isfinite(v):
+            self.n_rejected += 1
+            return self.freeze_step is not None
+        self.history.append(v)
         if self.freeze_step is not None:
             return True
         if step < self.lr_warmup_steps or len(self.history) <= self.delta:

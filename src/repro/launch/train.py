@@ -14,12 +14,21 @@ Usage (CPU-scale example — see examples/ for ready-made invocations):
       --steps 200 --batch 8 --seq 128 --mesh 1x1 --lr 1e-3 --warmup-steps 40
   PYTHONPATH=src python -m repro.launch.train --recipe onebit_lamb ...
   PYTHONPATH=src python -m repro.launch.train --recipe zerone_adam_local ...
+
+``--telemetry DIR`` turns on structured run telemetry (repro.obs):
+typed JSONL events (step metrics via a BUFFERED device→host path,
+stage/sync transitions, per-tier plan bytes, warnings), executor trace
+spans, and — with ``--drift-probe`` — the predicted-vs-measured
+cost-model drift monitor.  Fold the log with
+``python -m repro.obs.report DIR/telemetry.jsonl``.  The layer is
+zero-cost when off (NullSink + disabled tracing + async metric parking).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import os
 import time
 from typing import Optional
 
@@ -32,6 +41,7 @@ from repro.configs.base import InputShape
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
+from repro.obs import MetricBuffer, Tracer, as_sink, set_tracing
 from repro.optim import WarmupSwitch, list_compressors, list_optimizers
 from repro.state import load_train_state, save_train_state
 from repro.train.step import (TrainStepConfig, _flat_dim, init_train_state,
@@ -157,6 +167,79 @@ def lr_schedule(step: int, base_lr: float, lr_warmup: int,
     return base_lr * (decay ** ((step - lr_warmup) // decay_every))
 
 
+def run_plans(optim, cfg, mesh, topology: str, block_size: int):
+    """The (warmup, compressed) CommPlans THIS run executes — the same
+    constructions ``repro.core.comm`` lowers inside the step, rebuilt
+    host-side so telemetry can account their per-tier bytes and the
+    drift probe can time their ops without retracing the step."""
+    from repro.plan import (allreduce_schedule, flat_schedule,
+                            hier_schedule, needs_outer_ef)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    n_dp = max(n_dp, 1)
+    inner_axes, outer_axes, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
+    d = _flat_dim(cfg, tp, n_dp, block_size)
+    comp = optim.compressor
+    warm = allreduce_schedule(d, n_dp, dp_axes,
+                              tier="cross" if n_outer > 1 else "intra")
+    if topology == "hier" and len(dp_axes) > 1:
+        comp_plan = hier_schedule(comp, d, n_inner, n_outer, inner_axes,
+                                  outer_axes,
+                                  outer_ef=needs_outer_ef(comp))
+    else:
+        comp_plan = flat_schedule(comp, d, n_dp, dp_axes)
+    return warm, comp_plan
+
+
+def emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology: str,
+                        n_buckets: int, block_size: int, cluster: str,
+                        device: str, drift_probe: bool = False,
+                        telemetry_dir: Optional[str] = None) -> None:
+    """Emit the run's ``plan`` events (per-tier HLO bytes + predicted
+    α-β times of the executed CommPlans) and, with ``drift_probe``, time
+    each compressed-exchange collective in isolation on the real mesh
+    and run the predicted-vs-measured drift monitor over the samples —
+    writing a ``ClusterSpec.from_measured`` recalibration JSON into the
+    telemetry dir when drift exceeds the threshold."""
+    from repro.plan import cross_pod_bytes, get_cluster, plan_time
+    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
+    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
+                       device=device)
+    warm, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
+    for stage, p, nb in (("warmup", warm, 1),
+                         ("compressed", comp_plan, n_buckets)):
+        sink.emit("plan", name=p.name, stage=stage, d=p.d,
+                  intra_hlo_bytes=float(p.hlo_bytes("intra")),
+                  cross_hlo_bytes=float(p.hlo_bytes("cross")),
+                  n_buckets=nb,
+                  wire_send_bytes=float(p.wire_send_bytes()),
+                  dci_bytes_per_pod=float(cross_pod_bytes(p, spec)),
+                  t_predicted=float(plan_time(p, spec)))
+    if not drift_probe:
+        return
+    from repro.obs import DriftMonitor, probe_plan
+    mon = DriftMonitor(spec)
+    with tracer.span("drift.probe"):
+        samples = probe_plan(comp_plan, mesh)
+    for s in samples:
+        mon.observe(s.op_kind, s.tier, s.n, s.payload_bytes, s.seconds)
+        sink.emit("span", name=f"probe::{s.op_kind}@{s.tier}",
+                  stream=s.tier, dur=s.seconds, op_kind=s.op_kind,
+                  tier=s.tier, payload_bytes=s.payload_bytes)
+    recal_path = (os.path.join(telemetry_dir, "recalibration.json")
+                  if telemetry_dir else None)
+    for etype, fields in mon.events(emit_recal_path=recal_path):
+        sink.emit(etype, **fields)
+    for pair in mon.drifting:
+        print(f"[drift] {pair[0]}@{pair[1]} outside the cost model's "
+              f"{mon.threshold:.0%} band"
+              + (f" — recalibration written to {recal_path}"
+                 if recal_path else ""))
+
+
 def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         base_lr: float = 1e-3, lr_warmup: int = 100,
         warmup_steps: Optional[int] = None, block_size: int = 4096,
@@ -166,7 +249,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         recipe: str = "onebit_adam", optimizer: Optional[str] = None,
         compressor: Optional[str] = None, topology: Optional[str] = None,
         cluster: str = "ethernet-10g", pipeline=None, kernels=None,
-        device: str = "tpu-v5e"):
+        device: str = "tpu-v5e", telemetry: Optional[str] = None,
+        drift_probe: bool = False):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -263,49 +347,129 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         warmup_steps=warmup_steps if warmup_steps is not None else 0,
         b2=optim.b2, threshold=spec.var_freeze_threshold,
         lr_warmup_steps=lr_warmup)
+
+    # --- telemetry (repro.obs; every piece a no-op when --telemetry is
+    # off: NullSink swallows events, tracing stays disabled, and the
+    # metric buffer only ever parks async device arrays) ------------------
+    sink = as_sink(telemetry)
+    tracer = Tracer(sink)
+    set_tracing(sink.enabled)
+    if sink.enabled:
+        sink.emit("run_meta", optimizer=spec.optimizer,
+                  compressor=spec.compressor, topology=topology,
+                  n_buckets=n_buckets, arch=arch, layout=layout,
+                  use_kernel=bool(use_kernel),
+                  mesh=[int(s) for s in mesh_shape], steps=steps,
+                  block_size=spec.block_size, cluster=cluster,
+                  device=device, seed=seed, recipe=recipe,
+                  source="launch.train")
+        emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology,
+                            n_buckets, spec.block_size, cluster, device,
+                            drift_probe=drift_probe,
+                            telemetry_dir=telemetry)
+
+    def on_warning(wstep: int, detail: str) -> None:
+        print(f"[warn] step {wstep}: {detail}")
+        sink.emit("warning", what="non-finite v_l1", step=wstep,
+                  detail=detail)
+
     was_compressed = False
+    prev_sync = True
     comp_step = 0  # compression-stage step index (drives sync_due)
     history = []
+    mbuf = MetricBuffer()
+    pending = {}   # step -> (stage, sync), until the batched drain
+
+    def drain():
+        """Materialise every parked step's metrics in ONE device_get and
+        fold them into history + step events, in step order."""
+        for s, m in mbuf.drain():
+            st_stage, st_sync = pending.pop(s)
+            rec = {"step": s, "stage": st_stage, "sync": st_sync,
+                   "optimizer": optim.name, **m}
+            history.append(rec)
+            sink.emit("step", **rec)
+
     t_start = time.time()
-    for step in range(start_step, steps):
-        if stage_override:
-            stage, sync = stage_override, True
-        else:
-            compressed = switch.compressed(step)
-            if compressed and not was_compressed:
-                if switch.mode == "auto":
-                    print(f"[auto-warmup] variance frozen at step {step} "
-                          f"(ratio {switch.ratio:.4f})"
-                          if switch.ratio is not None else
-                          f"[auto-warmup] variance frozen at step {step}")
-                was_compressed = True
-            stage = "compressed" if compressed else "warmup"
-            sync = optim.sync_due(comp_step) if compressed else True
-            if compressed:
-                comp_step += 1
-        batch_data = stream.batch_at(step)
-        lr = jnp.float32(lr_schedule(step, base_lr, lr_warmup))
-        params, opt, metrics = get_step(stage, sync)(params, opt,
-                                                     batch_data, lr)
-        switch.observe(step, {k: float(v) for k, v in metrics.items()})
-        rec = {"step": step, "stage": stage, "sync": sync,
-               "optimizer": optim.name,
-               **{k: float(v) for k, v in metrics.items()}}
-        history.append(rec)
-        if step % log_every == 0 or step == steps - 1:
-            dt = time.time() - t_start
-            print(f"step {step:5d} [{stage:10s}{'' if sync else ' local'}] "
-                  f"loss {rec['loss']:.4f} "
-                  f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
-                  f"({dt:.1f}s)")
-        if ckpt and (step + 1) % 100 == 0:
-            save_train_state(ckpt, params, opt, step + 1, slots=slots,
-                             ctx=state_ctx, n_buckets=n_buckets,
-                             block=spec.block_size)
-    if ckpt:
-        save_train_state(ckpt, params, opt, steps, slots=slots,
-                         ctx=state_ctx, n_buckets=n_buckets,
-                         block=spec.block_size)
+    win_t0, win_step0 = t_start, start_step
+    try:
+        for step in range(start_step, steps):
+            if stage_override:
+                stage, sync = stage_override, True
+            else:
+                compressed = switch.compressed(step)
+                if compressed and not was_compressed:
+                    if switch.mode == "auto":
+                        print(f"[auto-warmup] variance frozen at step "
+                              f"{step} (ratio {switch.ratio:.4f})"
+                              if switch.ratio is not None else
+                              f"[auto-warmup] variance frozen at step "
+                              f"{step}")
+                    ratio = switch.ratio if switch.mode == "auto" else None
+                    sink.emit("transition", step=step, kind="stage",
+                              frm="warmup", to="compressed",
+                              mode=switch.mode,
+                              **({"ratio": float(ratio)}
+                                 if ratio is not None else {}))
+                    was_compressed = True
+                stage = "compressed" if compressed else "warmup"
+                sync = optim.sync_due(comp_step) if compressed else True
+                if compressed:
+                    comp_step += 1
+            batch_data = stream.batch_at(step)
+            lr = jnp.float32(lr_schedule(step, base_lr, lr_warmup))
+            params, opt, metrics = get_step(stage, sync)(params, opt,
+                                                         batch_data, lr)
+            # park the device metrics — async dispatch, no host sync;
+            # only consumers that need host floats THIS step fetch them
+            # (one batched transfer), everything else waits for a drain
+            mbuf.push(step, metrics)
+            pending[step] = (stage, sync)
+            if sync != prev_sync:
+                sink.emit("transition", step=step, kind="sync",
+                          frm="sync" if prev_sync else "local",
+                          to="sync" if sync else "local")
+                prev_sync = sync
+            if switch.mode == "auto" and not stage_override:
+                # the variance-ratio rule needs v_l1 on the host every
+                # step: one batched fetch (vs one sync per scalar before)
+                switch.observe(step, mbuf.host(step),
+                               on_warning=on_warning)
+            else:
+                switch.observe(step, {})
+            if step % log_every == 0 or step == steps - 1:
+                rec = mbuf.host(step)
+                dt = time.time() - t_start
+                print(f"step {step:5d} "
+                      f"[{stage:10s}{'' if sync else ' local'}] "
+                      f"loss {rec['loss']:.4f} "
+                      f"acc {rec['acc']:.3f} v_l1 {rec['v_l1']:.3e} "
+                      f"({dt:.1f}s)")
+                # the window span ends at the host fetch above (a real
+                # sync point), so dur/n is an honest measured s/step
+                now = time.time()
+                sink.emit("span", name="train.window", stream="host",
+                          t_start=win_t0, dur=now - win_t0,
+                          n=step - win_step0 + 1, step=step)
+                win_t0, win_step0 = now, step + 1
+                drain()
+            if ckpt and (step + 1) % 100 == 0:
+                with tracer.span("checkpoint.save", step=step):
+                    save_train_state(ckpt, params, opt, step + 1,
+                                     slots=slots, ctx=state_ctx,
+                                     n_buckets=n_buckets,
+                                     block=spec.block_size)
+        drain()
+        if ckpt:
+            with tracer.span("checkpoint.save", step=steps):
+                save_train_state(ckpt, params, opt, steps, slots=slots,
+                                 ctx=state_ctx, n_buckets=n_buckets,
+                                 block=spec.block_size)
+    finally:
+        set_tracing(False)
+        sink.close()
+    if sink.enabled:
+        print(f"telemetry: {sink.n_events} events -> {sink.path}")
     if log_file:
         with open(log_file, "w") as f:
             json.dump(history, f)
@@ -342,7 +506,9 @@ def main(argv=None):
                          "default = the recipe's topology")
     ap.add_argument("--cluster", default="ethernet-10g",
                     help="cluster preset for --topology/--pipeline auto "
-                         "(repro.plan.list_clusters())")
+                         "(repro.plan.list_clusters()), or "
+                         "measured:<calibration.json> — a comm_sweep fit "
+                         "or a --drift-probe recalibration")
     ap.add_argument("--pipeline", default=None,
                     help="bucketed pipelined exchange: off, auto, or a "
                          "bucket count N (>1 overlaps cross-pod legs "
@@ -364,6 +530,18 @@ def main(argv=None):
     ap.add_argument("--stage", default=None,
                     choices=[None, "warmup", "compressed", "compressed_hier"])
     ap.add_argument("--log-file", default=None)
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="write structured run telemetry (repro.obs) to "
+                         "DIR/telemetry.jsonl: typed step/transition/"
+                         "plan/span events plus executor trace spans; "
+                         "summarize with python -m repro.obs.report")
+    ap.add_argument("--log-every", type=int, default=10,
+                    help="print + drain buffered metrics every N steps")
+    ap.add_argument("--drift-probe", action="store_true",
+                    help="with --telemetry: time each compressed-"
+                         "exchange collective on the real mesh before "
+                         "training and run the cost-model drift monitor "
+                         "(writes recalibration.json on drift)")
     args = ap.parse_args(argv)
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     run(args.arch, args.steps, args.batch, args.seq, mesh_shape,
@@ -375,7 +553,8 @@ def main(argv=None):
         optimizer=args.optimizer, compressor=args.compressor,
         topology=args.topology, cluster=args.cluster,
         pipeline=args.pipeline, kernels=args.kernels,
-        device=args.device)
+        device=args.device, telemetry=args.telemetry,
+        drift_probe=args.drift_probe, log_every=args.log_every)
 
 
 if __name__ == "__main__":

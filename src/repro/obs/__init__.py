@@ -1,0 +1,60 @@
+"""repro.obs — structured run telemetry.
+
+Four modules, one loop:
+
+  * :mod:`repro.obs.events` — the typed JSONL event schema (single
+    source of truth for writers, the report reader, and CI validation);
+  * :mod:`repro.obs.metrics` — :class:`TelemetrySink` (buffered JSONL
+    writer) / :class:`NullSink` (the zero-cost disabled twin) and
+    :class:`MetricBuffer`, the batched device→host metric path that
+    replaces per-scalar ``float(v)`` syncs in the training loop;
+  * :mod:`repro.obs.trace` — executor op scopes (``jax.named_scope``
+    HLO metadata, collective-neutral by construction) and host
+    wall-clock :class:`Tracer` spans;
+  * :mod:`repro.obs.drift` — :class:`DriftMonitor`, predicted-vs-
+    measured α-β residuals against :mod:`repro.plan.cost`, emitting
+    ``ClusterSpec.from_measured`` recalibrations; and
+    :mod:`repro.obs.report`, which folds any obs log into tables.
+
+Submodule attributes resolve lazily (PEP 562): ``repro.obs.trace`` is
+imported by the executors on their hot path, and eagerly importing
+``drift`` here would pull ``plan.cost`` (and numpy/jax) into every
+executor import — the laziness keeps ``import repro.plan.executor``
+cycle-free and cheap.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    "EVENT_SCHEMA": "repro.obs.events",
+    "STEP_METRICS": "repro.obs.events",
+    "make_event": "repro.obs.events",
+    "validate_event": "repro.obs.events",
+    "validate_records": "repro.obs.events",
+    "MetricBuffer": "repro.obs.metrics",
+    "NullSink": "repro.obs.metrics",
+    "TelemetrySink": "repro.obs.metrics",
+    "as_sink": "repro.obs.metrics",
+    "Tracer": "repro.obs.trace",
+    "collective_signature": "repro.obs.trace",
+    "op_scope": "repro.obs.trace",
+    "set_tracing": "repro.obs.trace",
+    "span_name": "repro.obs.trace",
+    "tracing": "repro.obs.trace",
+    "tracing_enabled": "repro.obs.trace",
+    "DriftMonitor": "repro.obs.drift",
+    "DriftSample": "repro.obs.drift",
+    "fit_linkspecs": "repro.obs.drift",
+    "probe_plan": "repro.obs.drift",
+}
+
+__all__ = sorted(_EXPORTS) + ["events", "metrics", "trace", "drift",
+                              "report"]
+
+
+def __getattr__(name):
+    import importlib
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    if name in ("events", "metrics", "trace", "drift", "report"):
+        return importlib.import_module(f"repro.obs.{name}")
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

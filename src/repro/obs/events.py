@@ -1,0 +1,186 @@
+"""Typed event schema of the structured run telemetry (repro.obs).
+
+A telemetry log is a JSONL file: one JSON object per line, each with a
+``type`` naming its event kind, a ``t`` host wall-clock timestamp
+(seconds since the epoch), and the kind's typed fields.  The schema
+below is the single source of truth three consumers share:
+
+  * the writers — ``launch.train --telemetry`` and the ported offline
+    benchmarks (``benchmarks/variance_stability.py``,
+    ``benchmarks/comm_fraction.py``) build records through
+    :func:`make_event`, which validates at emit time;
+  * the reader — ``repro.obs.report`` folds a log into summary tables
+    and re-validates with ``--validate`` (the CI smoke job runs it over
+    a real training log);
+  * tests — ``tests/test_obs.py`` pins the schema itself.
+
+Event kinds
+-----------
+
+``run_meta``     one per run: the resolved configuration (optimizer,
+                 compressor, topology, bucket count, mesh, ...).
+``plan``         byte/time accounting of an executed ``CommPlan``: the
+                 per-tier HLO bytes the cost model pinned to the
+                 compiled program, the predicted α-β time, and — for
+                 pipelined runs — the three-stream breakdown.
+``comm``         one comm-vs-compute ratio point (predicted or
+                 measured): the quantity of the paper's Table 1.
+``step``         per-training-step metrics (loss, the Fig. 2 fused
+                 variance norm ``v_l1``, EF-residual norms, ...).
+``transition``   a stage or sync edge: warmup→compressed (the
+                 variance-freeze switch) or 0/1 Adam sync skips.
+``warning``      host-side anomaly (e.g. a non-finite variance ratio
+                 the auto-freeze guard rejected).
+``span``         one timed region: host wall-clock spans from the
+                 driver, or probe-measured collective-op times (the
+                 drift monitor's input).
+``drift``        one predicted-vs-measured verdict of the cost-model
+                 drift monitor, per (op kind, tier).
+``recalibration``pointer to an emitted ``ClusterSpec.from_measured``
+                 JSON when drift exceeded the threshold.
+
+Validation policy: the per-kind REQUIRED fields must be present with
+the right JSON types; OPTIONAL fields are type-checked when present;
+unknown extra fields are allowed but must be JSON scalars (so logs stay
+greppable and forward-compatible).
+"""
+from __future__ import annotations
+
+import numbers
+import time
+from typing import Dict, Iterable, Tuple
+
+_NUM = numbers.Real          # int or float (bools are excluded explicitly)
+_SCALAR = (str, int, float, bool, type(None))
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, _NUM) and not isinstance(v, bool)
+
+
+_CHECKS = {
+    "num": _is_num,
+    "int": lambda v: isinstance(v, int) and not isinstance(v, bool),
+    "str": lambda v: isinstance(v, str),
+    "bool": lambda v: isinstance(v, bool),
+    "list": lambda v: isinstance(v, list),
+    "dict": lambda v: isinstance(v, dict),
+}
+
+# metric fields a ``step`` event may carry (all host floats)
+STEP_METRICS = ("loss", "acc", "aux", "total", "v_l1", "grad_norm",
+                "momentum_norm", "worker_err_norm", "server_err_norm",
+                "lr", "ratio")
+
+# type -> (required {field: typename}, optional {field: typename})
+EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
+    "run_meta": (
+        {"optimizer": "str", "compressor": "str", "topology": "str",
+         "n_buckets": "int"},
+        {"arch": "str", "layout": "str", "use_kernel": "bool",
+         "mesh": "list", "steps": "int", "block_size": "int",
+         "cluster": "str", "device": "str", "seed": "int",
+         "recipe": "str", "source": "str"},
+    ),
+    "plan": (
+        {"name": "str", "stage": "str", "d": "int",
+         "intra_hlo_bytes": "num", "cross_hlo_bytes": "num"},
+        {"n_buckets": "int", "wire_send_bytes": "num",
+         "dci_bytes_per_pod": "num", "t_predicted": "num",
+         "t_compute_predicted": "num", "breakdown": "dict",
+         "ops": "list"},
+    ),
+    "comm": (
+        {"t_comm": "num", "t_compute": "num"},
+        {"label": "str", "n": "int", "gbps": "num", "frac": "num",
+         "compressor": "str", "stage": "str", "bytes": "num",
+         "source": "str"},
+    ),
+    "step": (
+        {"step": "int"},
+        {"stage": "str", "sync": "bool", "optimizer": "str",
+         **{m: "num" for m in STEP_METRICS}},
+    ),
+    "transition": (
+        {"step": "int", "kind": "str", "to": "str"},
+        {"frm": "str", "ratio": "num", "mode": "str"},
+    ),
+    "warning": (
+        {"what": "str"},
+        {"step": "int", "value": "num", "detail": "str"},
+    ),
+    "span": (
+        {"name": "str", "dur": "num"},
+        {"stream": "str", "t_start": "num", "step": "int", "n": "int",
+         "bucket": "int", "stage": "int", "op_kind": "str",
+         "tier": "str", "payload_bytes": "num", "group": "int"},
+    ),
+    "drift": (
+        {"op_kind": "str", "tier": "str", "n_samples": "int",
+         "t_measured": "num", "t_predicted": "num", "ratio": "num",
+         "drifting": "bool"},
+        {"threshold": "num"},
+    ),
+    "recalibration": (
+        {"op_overhead": "num"},
+        {"path": "str", "intra": "dict", "cross": "dict",
+         "reason": "str", "n_inner": "int", "n_outer": "int"},
+    ),
+}
+
+# transition kinds (the ``kind`` field of a "transition" event)
+TRANSITION_KINDS = ("stage", "sync")
+
+
+def validate_event(rec: dict) -> dict:
+    """Check one record against the schema; returns it, raises
+    ``ValueError`` with a pointed message otherwise."""
+    if not isinstance(rec, dict):
+        raise ValueError(f"event must be an object, got {type(rec).__name__}")
+    etype = rec.get("type")
+    if etype not in EVENT_SCHEMA:
+        raise ValueError(f"unknown event type {etype!r}; "
+                         f"known: {sorted(EVENT_SCHEMA)}")
+    if "t" in rec and not _is_num(rec["t"]):
+        raise ValueError(f"{etype}: timestamp 't' must be a number, "
+                         f"got {rec['t']!r}")
+    required, optional = EVENT_SCHEMA[etype]
+    for field, tname in required.items():
+        if field not in rec:
+            raise ValueError(f"{etype}: missing required field {field!r}")
+        if not _CHECKS[tname](rec[field]):
+            raise ValueError(f"{etype}.{field}: expected {tname}, "
+                             f"got {rec[field]!r}")
+    for field, tname in optional.items():
+        if field in rec and rec[field] is not None \
+                and not _CHECKS[tname](rec[field]):
+            raise ValueError(f"{etype}.{field}: expected {tname}, "
+                             f"got {rec[field]!r}")
+    for field, value in rec.items():
+        if field in ("type", "t") or field in required or field in optional:
+            continue
+        if not isinstance(value, _SCALAR):
+            raise ValueError(
+                f"{etype}.{field}: unknown fields must be JSON scalars, "
+                f"got {type(value).__name__}")
+    return rec
+
+
+def make_event(etype: str, t: float = None, **fields) -> dict:
+    """Build + validate one event record (adds the ``t`` timestamp)."""
+    rec = {"type": etype, "t": time.time() if t is None else float(t)}
+    rec.update(fields)
+    return validate_event(rec)
+
+
+def validate_records(records: Iterable[dict]) -> int:
+    """Validate a record stream; returns the count, raises on the first
+    invalid record (with its index in the message)."""
+    n = 0
+    for i, rec in enumerate(records):
+        try:
+            validate_event(rec)
+        except ValueError as e:
+            raise ValueError(f"record {i}: {e}") from None
+        n += 1
+    return n

@@ -1,0 +1,257 @@
+"""Fold a telemetry JSONL log into summary tables.
+
+One analysis path for live runs and offline benchmarks: anything that
+emits the :mod:`repro.obs.events` schema — ``launch.train --telemetry``,
+``benchmarks/variance_stability.py``, ``benchmarks/comm_fraction.py`` —
+folds through here.  Sections (each skipped when its events are absent):
+
+  * **run** — the ``run_meta`` record;
+  * **steps** — step count, loss first→last, the stage-switch point
+    (warmup→compressed transition + the variance ratio that triggered
+    it), sync-skip counts, and the tail of the Fig. 2 ``v_l1`` curve;
+  * **comm** — per-plan per-tier HLO bytes and predicted times from
+    ``plan`` events, plus comm-vs-compute fractions from ``comm``
+    events (predicted or measured — the ``source`` field says which);
+  * **spans** — host/probe timed regions grouped by name (count, mean,
+    total); ``train.window`` spans also yield measured s/step
+    (``dur / n`` — the window ends at a host sync, so the wall clock is
+    honest);
+  * **drift** — the drift monitor's predicted-vs-measured verdicts and
+    any emitted recalibration;
+  * **warnings** — host-side anomalies (e.g. non-finite variance).
+
+CLI (the CI smoke job runs this over a real training log)::
+
+    python -m repro.obs.report runs/telemetry.jsonl --validate
+    python -m repro.obs.report runs/telemetry.jsonl --json summary.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.events import validate_records
+
+
+def load(path: str, validate: bool = False) -> List[dict]:
+    """Read a JSONL telemetry log; optionally schema-check every
+    record (raises with the offending line's index)."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    if validate:
+        validate_records(records)
+    return records
+
+
+def _by_type(records: List[dict]) -> Dict[str, List[dict]]:
+    out: Dict[str, List[dict]] = {}
+    for r in records:
+        out.setdefault(r.get("type", "?"), []).append(r)
+    return out
+
+
+def summarize(records: List[dict]) -> Dict[str, object]:
+    """Fold a record list into the section dict ``format_report``
+    renders (also the ``--json`` payload)."""
+    by = _by_type(records)
+    out: Dict[str, object] = {"n_events": len(records),
+                              "by_type": {k: len(v) for k, v in
+                                          sorted(by.items())}}
+
+    if by.get("run_meta"):
+        out["run"] = {k: v for k, v in by["run_meta"][0].items()
+                      if k not in ("type", "t")}
+
+    steps = by.get("step", [])
+    if steps:
+        steps = sorted(steps, key=lambda r: r["step"])
+        sec: Dict[str, object] = {
+            "n_steps": len(steps),
+            "first_step": steps[0]["step"], "last_step": steps[-1]["step"],
+        }
+        losses = [(r["step"], r["loss"]) for r in steps if "loss" in r]
+        if losses:
+            sec["loss_first"], sec["loss_last"] = losses[0][1], losses[-1][1]
+        stages = [r.get("stage") for r in steps if r.get("stage")]
+        if stages:
+            sec["stages"] = {s: stages.count(s) for s in dict.fromkeys(stages)}
+        syncs = [r["sync"] for r in steps if "sync" in r]
+        if syncs:
+            sec["sync_skipped"] = syncs.count(False)
+        v_curve = [(r["step"], r["v_l1"]) for r in steps if "v_l1" in r]
+        if v_curve:
+            sec["v_l1_last"] = v_curve[-1][1]
+            sec["v_l1_curve_tail"] = v_curve[-8:]
+        out["steps"] = sec
+
+    transitions = by.get("transition", [])
+    switch = [r for r in transitions
+              if r.get("kind") == "stage" and r.get("to") == "compressed"]
+    if switch:
+        out.setdefault("steps", {})["switch_step"] = switch[0]["step"]
+        if "ratio" in switch[0]:
+            out["steps"]["switch_ratio"] = switch[0]["ratio"]
+
+    plans = by.get("plan", [])
+    if plans:
+        out["plans"] = [{k: r[k] for k in
+                         ("name", "stage", "d", "n_buckets",
+                          "intra_hlo_bytes", "cross_hlo_bytes",
+                          "wire_send_bytes", "t_predicted") if k in r}
+                        for r in plans]
+
+    comm = by.get("comm", [])
+    if comm:
+        rows = []
+        for r in comm:
+            tc, tx = r["t_comm"], r["t_compute"]
+            rows.append({
+                "label": r.get("label", r.get("compressor", "?")),
+                "t_comm": tc, "t_compute": tx,
+                "frac": r.get("frac", tc / (tc + tx) if tc + tx > 0
+                              else 0.0),
+                "source": r.get("source", "?"),
+            })
+        out["comm"] = rows
+
+    spans = by.get("span", [])
+    if spans:
+        groups: Dict[str, List[dict]] = {}
+        for r in spans:
+            groups.setdefault(r["name"], []).append(r)
+        sec = {}
+        for name, ss in sorted(groups.items()):
+            durs = [s["dur"] for s in ss]
+            row = {"count": len(ss), "total": sum(durs),
+                   "mean": sum(durs) / len(durs)}
+            nsteps = sum(s.get("n", 0) for s in ss)
+            if nsteps:                    # windowed spans: honest s/step
+                row["per_step"] = sum(durs) / nsteps
+            sec[name] = row
+        out["spans"] = sec
+
+    drift = by.get("drift", [])
+    if drift:
+        out["drift"] = [{k: r[k] for k in
+                         ("op_kind", "tier", "n_samples", "t_measured",
+                          "t_predicted", "ratio", "drifting") if k in r}
+                        for r in drift]
+        out["drifting"] = [f"{r['op_kind']}@{r['tier']}" for r in drift
+                           if r.get("drifting")]
+    recal = by.get("recalibration", [])
+    if recal:
+        out["recalibration"] = [{k: v for k, v in r.items()
+                                 if k not in ("type", "t")} for r in recal]
+
+    warnings = by.get("warning", [])
+    if warnings:
+        out["warnings"] = [{k: v for k, v in r.items()
+                            if k not in ("type", "t")} for r in warnings]
+    return out
+
+
+# --------------------------------------------------------------------------
+# rendering
+# --------------------------------------------------------------------------
+
+def _fmt(v) -> str:
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def _table(rows: List[dict], cols: List[str]) -> List[str]:
+    cells = [[_fmt(r.get(c, "")) for c in cols] for r in rows]
+    widths = [max(len(c), *(len(row[i]) for row in cells))
+              if cells else len(c) for i, c in enumerate(cols)]
+    lines = ["  ".join(c.ljust(w) for c, w in zip(cols, widths))]
+    lines += ["  ".join(c.ljust(w) for c, w in zip(row, widths))
+              for row in cells]
+    return lines
+
+
+def format_report(summary: Dict[str, object]) -> str:
+    lines: List[str] = []
+
+    def head(title):
+        lines.extend(["", f"== {title} =="])
+
+    lines.append(f"telemetry: {summary['n_events']} events "
+                 + " ".join(f"{k}:{v}" for k, v in
+                            summary["by_type"].items()))
+    if "run" in summary:
+        head("run")
+        lines += [f"  {k}: {_fmt(v)}" for k, v in summary["run"].items()]
+    if "steps" in summary:
+        head("steps")
+        s = summary["steps"]
+        lines += [f"  {k}: {_fmt(v)}" for k, v in s.items()
+                  if k != "v_l1_curve_tail"]
+        if "v_l1_curve_tail" in s:
+            lines.append("  v_l1 tail: " + " ".join(
+                f"{st}:{_fmt(v)}" for st, v in s["v_l1_curve_tail"]))
+    if "plans" in summary:
+        head("plans")
+        lines += ["  " + ln for ln in _table(
+            summary["plans"], ["name", "stage", "d", "n_buckets",
+                               "intra_hlo_bytes", "cross_hlo_bytes",
+                               "t_predicted"])]
+    if "comm" in summary:
+        head("comm fraction")
+        lines += ["  " + ln for ln in _table(
+            summary["comm"], ["label", "t_comm", "t_compute", "frac",
+                              "source"])]
+    if "spans" in summary:
+        head("spans")
+        rows = [{"name": n, **row} for n, row in summary["spans"].items()]
+        lines += ["  " + ln for ln in _table(
+            rows, ["name", "count", "mean", "total", "per_step"])]
+    if "drift" in summary:
+        head("cost-model drift")
+        lines += ["  " + ln for ln in _table(
+            summary["drift"], ["op_kind", "tier", "n_samples",
+                               "t_measured", "t_predicted", "ratio",
+                               "drifting"])]
+        if summary.get("drifting"):
+            lines.append("  DRIFTING: " + ", ".join(summary["drifting"]))
+    if "recalibration" in summary:
+        head("recalibration")
+        for r in summary["recalibration"]:
+            lines += [f"  {k}: {_fmt(v) if not isinstance(v, dict) else v}"
+                      for k, v in r.items()]
+    if "warnings" in summary:
+        head("warnings")
+        lines += [f"  {w}" for w in summary["warnings"]]
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize a repro.obs telemetry JSONL log.")
+    ap.add_argument("log", help="path to telemetry.jsonl")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check every record before summarizing")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the summary dict as JSON")
+    args = ap.parse_args(argv)
+    records = load(args.log, validate=args.validate)
+    if args.validate:
+        print(f"validated {len(records)} records OK")
+    summary = summarize(records)
+    print(format_report(summary))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(summary, f, indent=2, default=str)
+        print(f"\nwrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,10 +18,10 @@ generic :class:`repro.state.StateTree` replaces the per-layout
 NamedTuples (``OptState``/``ZeroOptState`` are gone); see repro.state.
 """
 from repro.state import SlotSpec, StateTree
-from repro.optim.base import (LAYOUTS, SegmentInfo, TwoStageOptimizer,
-                              get_optimizer, list_optimizers,
-                              register_optimizer, segment_norms,
-                              segments_of)
+from repro.optim.base import (LAYOUTS, STAT_KEYS, SegmentInfo,
+                              TwoStageOptimizer, get_optimizer,
+                              list_optimizers, register_optimizer,
+                              segment_norms, segments_of)
 from repro.optim.compressors import (Compressor, IdentityCompressor,
                                      OneBitCompressor, TopKCompressor,
                                      as_compressor, compressor_has_kernel,
@@ -35,7 +35,8 @@ from repro.optim import onebit_lamb as _onebit_lamb    # noqa: F401
 from repro.optim import zerone_adam as _zerone_adam    # noqa: F401
 
 __all__ = [
-    "Compressor", "IdentityCompressor", "LAYOUTS", "OneBitCompressor",
+    "Compressor", "IdentityCompressor", "LAYOUTS", "STAT_KEYS",
+    "OneBitCompressor",
     "SegmentInfo", "SlotSpec", "StateTree", "TopKCompressor",
     "TwoStageOptimizer", "WarmupSwitch", "as_compressor",
     "compressor_has_kernel", "from_config",

@@ -59,6 +59,14 @@ from repro.state import (SlotSpec, StateLayout, StateTree, ef_errs,
 
 LAYOUTS = ("replicated", "local", "zero1")
 
+# every update path (warmup / compressed sync / 0-bit local) emits this
+# SAME stat set, so the shard_map out-specs and the telemetry schema are
+# one fixed list regardless of stage (repro.train.step, repro.obs).
+# Per-model-rank scalars: the paper's fused-variance L1 norm (Fig. 2),
+# the grad/momentum L2 norms, and the two EF-residual L2 norms.
+STAT_KEYS = ("v_l1", "grad_norm", "momentum_norm", "worker_err_norm",
+             "server_err_norm")
+
 
 @dataclasses.dataclass(frozen=True)
 class SegmentInfo:
@@ -187,6 +195,19 @@ class TwoStageOptimizer:
                           n_segments=max(n_segments, 1))
         return init_rank_state(self.state_slots(layout), ctx)
 
+    @staticmethod
+    def _stats(v_l1, grad_norm, momentum_norm, state=None,
+               worker_err=None, server_err=None) -> dict:
+        """The uniform :data:`STAT_KEYS` dict.  EF-residual norms come
+        from the freshly produced errs when given, else from ``state``
+        (warmup / 0-bit steps, where the slots are carried unchanged)."""
+        we = worker_err if worker_err is not None else state.worker_err
+        se = server_err if server_err is not None else state.server_err
+        return {"v_l1": v_l1, "grad_norm": grad_norm,
+                "momentum_norm": momentum_norm,
+                "worker_err_norm": jnp.linalg.norm(we),
+                "server_err_norm": jnp.linalg.norm(se)}
+
     # --- hooks (the whole per-algorithm surface) ---------------------------
     def _update_v(self, v: jax.Array, v_step: jax.Array,
                   m_prev: jax.Array, m_bar: jax.Array, count: jax.Array
@@ -304,8 +325,10 @@ class TwoStageOptimizer:
             upd = self._warmup_direction(upd, x, seg_ids_fn, n_seg,
                                          tuple(tp_axes))
             new_x = x - lr * upd
-        stats = {"v_l1": jnp.sum(jnp.abs(v)),
-                 "grad_norm": jnp.linalg.norm(g)}
+        stats = self._stats(v_l1=jnp.sum(jnp.abs(v)),
+                            grad_norm=jnp.linalg.norm(g),
+                            momentum_norm=jnp.linalg.norm(m),
+                            state=state)
         return new_x, state._replace(m=m, v=v, count=count), stats
 
     # --- compression stage (ONE path, parameterised by the slots) ----------
@@ -355,13 +378,11 @@ class TwoStageOptimizer:
         m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
         if not sync:
             x_full = self._full_params(state, x, all_axes)
-            stats = {
-                "v_l1": jnp.sum(jnp.abs(state.v_shard if sharded
-                                        else state.v)),
-                "momentum_norm": jnp.linalg.norm(m_local),
-                "worker_err_norm": jnp.linalg.norm(state.worker_err),
-                "server_err_norm": jnp.linalg.norm(state.server_err),
-            }
+            stats = self._stats(
+                v_l1=jnp.sum(jnp.abs(state.v_shard if sharded
+                                     else state.v)),
+                grad_norm=jnp.linalg.norm(g_local),
+                momentum_norm=jnp.linalg.norm(m_local), state=state)
             return x_full, state._replace(m=m_local,
                                           count=state.count + 1), stats
 
@@ -422,12 +443,11 @@ class TwoStageOptimizer:
         else:
             repl.update(v=v)
             x_full = new_master
-        stats = {
-            "v_l1": jnp.sum(jnp.abs(v)),
-            "momentum_norm": jnp.linalg.norm(m_bar),
-            "worker_err_norm": jnp.linalg.norm(errs["worker"]),
-            "server_err_norm": jnp.linalg.norm(errs["server"]),
-        }
+        stats = self._stats(v_l1=jnp.sum(jnp.abs(v)),
+                            grad_norm=jnp.linalg.norm(g_local),
+                            momentum_norm=jnp.linalg.norm(m_bar),
+                            worker_err=errs["worker"],
+                            server_err=errs["server"])
         return x_full, state._replace(**repl), stats
 
     @staticmethod

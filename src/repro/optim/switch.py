@@ -16,7 +16,8 @@ bookkeeping and never enters the jitted graph.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import math
+from typing import Callable, Dict, Optional
 
 from repro.core.variance import VarianceMonitor
 
@@ -36,11 +37,23 @@ class WarmupSwitch:
         if mode == "steps" and warmup_steps == 0:
             self._frozen_at = 0
 
-    def observe(self, step: int, stats: Dict[str, float]) -> bool:
-        """Feed one step's metrics; returns True once frozen."""
+    def observe(self, step: int, stats: Dict[str, float],
+                on_warning: Optional[Callable[[int, str], None]] = None
+                ) -> bool:
+        """Feed one step's metrics; returns True once frozen.
+
+        A non-finite ``v_l1`` (diverged warmup step) can neither trigger
+        the freeze nor enter the variance window — the monitor rejects
+        it (see :meth:`VarianceMonitor.observe` for why a recorded NaN
+        would otherwise silently block the rule) — and ``on_warning``
+        (if given) is called with ``(step, detail)`` so the driver can
+        log it."""
         if self.mode == "auto":
-            if self._frozen_at is None and self.monitor.observe(
-                    step, float(stats["v_l1"])):
+            v = float(stats["v_l1"])
+            if not math.isfinite(v) and on_warning is not None:
+                on_warning(step, f"non-finite v_l1 ({v!r}) rejected by "
+                                 "the variance monitor")
+            if self._frozen_at is None and self.monitor.observe(step, v):
                 self._frozen_at = step + 1
         elif self._frozen_at is None and step + 1 >= self.warmup_steps:
             self._frozen_at = self.warmup_steps

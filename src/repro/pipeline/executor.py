@@ -96,7 +96,9 @@ def execute_pipelined(pplan: PipelinedPlan, comp, value: jax.Array,
     for b, s in pplan.issue_order():
         op = pplan.buckets[b].plan.ops[s]
         vals[b], bucket_errs[b] = execute_op(op, comp, vals[b],
-                                             bucket_errs[b])
+                                             bucket_errs[b],
+                                             plan_name=pplan.name,
+                                             stage=s, bucket=b)
 
     out = vals[0] if pplan.n_buckets == 1 else jnp.concatenate(vals)
     new_errs = dict(errs)

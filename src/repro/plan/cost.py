@@ -168,10 +168,20 @@ CLUSTERS: Dict[str, object] = {
 def get_cluster(name: str, n_inner: int, n_outer: int = 1,
                 **kw) -> ClusterSpec:
     """Size a cluster preset; ``device=`` accepts a DeviceSpec or a
-    ``repro.perf`` preset name (default: tpu-v5e)."""
+    ``repro.perf`` preset name (default: tpu-v5e).
+
+    ``measured:<path>`` loads a calibration JSON instead of a preset —
+    a ``benchmarks/comm_sweep.py`` fit or the ``recalibration.json``
+    the :mod:`repro.obs.drift` monitor emits when a run's fabric drifts
+    from its preset — re-sized to this deployment's pod split."""
+    if name.startswith("measured:"):
+        return ClusterSpec.from_measured(name[len("measured:"):],
+                                         n_inner=n_inner, n_outer=n_outer,
+                                         **kw)
     if name not in CLUSTERS:
         raise KeyError(f"unknown cluster preset {name!r}; "
-                       f"registered: {sorted(CLUSTERS)}")
+                       f"registered: {sorted(CLUSTERS)} "
+                       f"(or measured:<calibration.json>)")
     if "device" in kw:
         kw["device"] = as_device(kw["device"])
     return CLUSTERS[name](n_inner=n_inner, n_outer=n_outer, **kw)
@@ -210,6 +220,46 @@ def op_time(op: CollectiveOp, spec: ClusterSpec) -> float:
     s = float(op.payload_bytes)
     return spec.op_overhead + _LINK_TIME[type(op)](n, s, link.latency,
                                                    link.bandwidth)
+
+
+# the SAME formulas as linear coefficients (overhead, α, 1/β) — the
+# lstsq design rows of comm_sweep.fit_cluster and the drift monitor's
+# refit (repro.obs.drift).  op_time_kind prices THROUGH these rows, so
+# a fitted spec reproduces its samples by construction and the fit can
+# never disagree with the pricing above.
+_LINK_COEFFS = {
+    AllToAll: lambda n, s: (1.0, s * (n - 1) / n),
+    AllGather: lambda n, s: (log2ceil(n), s * (n - 1)),
+    AllReduce: lambda n, s: (2.0 * log2ceil(n), 2.0 * s * (n - 1) / n),
+    ReduceScatter: lambda n, s: (log2ceil(n), s * (n - 1) / n),
+    Broadcast: lambda n, s: (log2ceil(n), log2ceil(n) * s),
+}
+_KIND_TO_CLASS = {cls.__name__: cls for cls in _LINK_COEFFS}
+
+
+def op_coeffs_kind(kind: str, n: int,
+                   payload_bytes: float) -> Tuple[float, float, float]:
+    """Linear coefficients ``(overhead, α, 1/β)`` of one collective's
+    α-β time, keyed by kind NAME (``op.kind``) so callers holding only
+    measured samples — not IR ops — can build fit rows."""
+    if kind not in _KIND_TO_CLASS:
+        raise KeyError(f"op_coeffs_kind: unknown collective kind {kind!r}; "
+                       f"known: {sorted(_KIND_TO_CLASS)}")
+    ca, cb = _LINK_COEFFS[_KIND_TO_CLASS[kind]](int(n),
+                                                float(payload_bytes))
+    return 1.0, ca, cb
+
+
+def op_time_kind(kind: str, tier: str, n: int, payload_bytes: float,
+                 spec: ClusterSpec) -> float:
+    """``op_time`` for callers holding (kind, tier, n, bytes) tuples
+    instead of IR ops — same formulas, via the coefficient rows."""
+    if n <= 1:
+        return 0.0
+    ov, ca, cb = op_coeffs_kind(kind, n, payload_bytes)
+    link = spec.link(tier)
+    return (ov * spec.op_overhead + ca * link.latency
+            + cb / link.bandwidth)
 
 
 def plan_time(plan: CommPlan, spec: ClusterSpec) -> float:

@@ -23,6 +23,14 @@ Numerics are bit-for-bit the pre-IR inline schedules of
 ``repro.core.comm``: chunk exchange is ``all_to_all`` per payload leaf +
 vmapped decompress + ``jnp.mean``; gather is tiled ``all_gather`` per
 leaf + decompress (see tests/test_distributed.py parity tests).
+
+When trace spans are enabled (``repro.obs.trace.set_tracing``), every
+op lowers inside a ``jax.named_scope`` carrying its
+``obs::<plan>::[b<bucket>.]s<stage>::<Kind>@<tier>`` span name, so a
+profiler trace attributes device time to the same (bucket, stage,
+stream) grid the cost model prices.  Scopes are HLO *metadata* only —
+the compiled collectives are identical on and off (pinned by
+tests/test_obs.py) — and a shared nullcontext when disabled.
 """
 from __future__ import annotations
 
@@ -31,6 +39,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs.trace import op_scope
 from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
                            CollectiveOp, CommPlan, ReduceScatter)
 
@@ -119,11 +128,15 @@ _EXEC = {
 }
 
 
-def execute_op(op: CollectiveOp, comp, value: jax.Array, errs: Errs
-               ) -> Tuple[jax.Array, Errs]:
+def execute_op(op: CollectiveOp, comp, value: jax.Array, errs: Errs,
+               plan_name: str = "plan", stage: int = 0,
+               bucket: Optional[int] = None) -> Tuple[jax.Array, Errs]:
     """Lower ONE collective op (the public entry the pipelined executor
-    in :mod:`repro.pipeline.executor` steps through in wavefront order)."""
-    return _EXEC[type(op)](op, comp, value, errs)
+    in :mod:`repro.pipeline.executor` steps through in wavefront order).
+    ``plan_name``/``stage``/``bucket`` only label the op's trace span
+    when tracing is on — they never change the lowering."""
+    with op_scope(plan_name, stage, op, bucket):
+        return _EXEC[type(op)](op, comp, value, errs)
 
 
 def execute_plan(plan: CommPlan, comp, value: jax.Array,
@@ -138,6 +151,7 @@ def execute_plan(plan: CommPlan, comp, value: jax.Array,
     missing = [s for s in plan.err_slots if s not in errs]
     assert not missing, f"plan {plan.name!r} needs EF slots {missing}"
     assert value.shape == (plan.d,), (value.shape, plan.d)
-    for op in plan.ops:
-        value, errs = _EXEC[type(op)](op, comp, value, errs)
+    for stage, op in enumerate(plan.ops):
+        with op_scope(plan.name, stage, op):
+            value, errs = _EXEC[type(op)](op, comp, value, errs)
     return value, errs

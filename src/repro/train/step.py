@@ -71,8 +71,8 @@ from repro.core import onebit_adam as OB
 from repro.core.compression import padded_length
 from repro.models import transformer as T
 from repro.models.common import ParallelCtx
-from repro.optim import (TwoStageOptimizer, from_config, get_optimizer,
-                         segments_of)
+from repro.optim import (STAT_KEYS, TwoStageOptimizer, from_config,
+                         get_optimizer, segments_of)
 from repro.state import (StateLayout, StateTree, init_global_state,
                          state_specs)
 
@@ -455,6 +455,14 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         if ctx.tp_axis:
             v_l1 = jax.lax.psum(v_l1, ctx.tp_axis)
         out_metrics["v_l1"] = v_l1
+        # the remaining uniform STAT_KEYS (grad/momentum/EF-residual
+        # norms) are per-model-rank diagnostics: dp-meaned like the loss
+        # metrics (honest across divergent local state), not combined
+        # over tp (a cross-shard L2 would need the squared-sum psum)
+        for k, v in stats.items():
+            if k != "v_l1":
+                out_metrics[k] = (jax.lax.pmean(v, dp_axes)
+                                  if dp_axes else v)
         out_metrics["total"] = (jax.lax.pmean(total, dp_axes)
                                 if dp_axes else total)
         return new_params, new_opt, out_metrics
@@ -465,7 +473,8 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
         key = frozenset(batch_tree)
         if key not in _cache:
             bspec = _select(batch_specs(cfg, "train", dp_axes), batch_tree)
-            mspec = {k: P() for k in ["loss", "aux", "acc", "v_l1", "total"]}
+            mspec = {k: P() for k in
+                     ["loss", "aux", "acc", "total", *STAT_KEYS]}
             mapped = shard_map(
                 step, mesh=mesh,
                 in_specs=(pspecs, osp, bspec, P()),
