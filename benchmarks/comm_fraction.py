@@ -16,7 +16,10 @@ from the model size and our compiled wire format.
 With ``--telemetry DIR`` every row is also emitted as ``comm`` events in
 the :mod:`repro.obs` schema (one per compressor variant, ``source:
 "analytic"``), so these Table 1 points and a live run's measured comm
-fractions fold through the same ``repro.obs.report`` path.
+fractions fold through the same ``repro.obs.report`` path.  With
+``--ledger PATH`` the rows are ALSO written as a canonical BENCH perf
+ledger (:mod:`repro.obs.bench`, one record per table row) for
+``results/bench_compare.py``.
 """
 from __future__ import annotations
 
@@ -47,7 +50,8 @@ def compressed_time_ms(model_bytes_fp32: float, n: int, bw_bits: float,
     return 2.0 * (n - 1) / n * (model_bytes_fp32 / compression) / bw * 1e3
 
 
-def run(verbose: bool = True, telemetry=None) -> List[Dict]:
+def run(verbose: bool = True, telemetry=None, ledger: str = None
+        ) -> List[Dict]:
     rows = []
     cases = [
         ("Ethernet", 4.1e9, 64), ("Ethernet", 4.1e9, 16),
@@ -90,6 +94,14 @@ def run(verbose: bool = True, telemetry=None) -> List[Dict]:
         ok = eth64["allreduce_frac"] > 0.85  # paper: 93-94%
         print(f"  [{'PASS' if ok else 'FAIL'}] Ethernet/64GPU allreduce "
               f"fraction {eth64['allreduce_frac']:.0%} matches paper's ~93%")
+    if ledger:
+        from repro.obs.bench import records_from_result, write_ledger
+        payload = write_ledger(
+            ledger, records_from_result("comm_fraction", rows),
+            meta={"source": "analytic"})
+        if verbose:
+            print(f"  ledger: {len(payload['records'])} records "
+                  f"-> {ledger}")
     return rows
 
 
@@ -99,4 +111,8 @@ if __name__ == "__main__":
                     help="emit the repro.obs event schema to "
                          "DIR/comm_fraction.jsonl (fold with "
                          "python -m repro.obs.report)")
-    run(telemetry=ap.parse_args().telemetry)
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write the table rows as a BENCH perf ledger "
+                         "(compare with results/bench_compare.py)")
+    _a = ap.parse_args()
+    run(telemetry=_a.telemetry, ledger=_a.ledger)

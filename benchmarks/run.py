@@ -18,6 +18,13 @@
 
 Run all: PYTHONPATH=src python -m benchmarks.run
 One:     PYTHONPATH=src python -m benchmarks.run --only convergence
+
+``--json OUT`` routes every benchmark's result dict through the BENCH
+perf-ledger writer (:mod:`repro.obs.bench`): OUT is a canonical
+``BENCH_all.json`` — ``{"schema": "repro.obs.bench/v1", ...}`` with one
+record per named numeric cell — that ``results/bench_compare.py`` can
+diff against any other ledger.  ``--raw-json OUT`` keeps the old
+unvalidated result dump.
 """
 from __future__ import annotations
 
@@ -50,7 +57,11 @@ ALL = {
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", choices=list(ALL), default=None)
-    ap.add_argument("--json", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write all results as one BENCH_all.json "
+                         "perf ledger (repro.obs.bench schema)")
+    ap.add_argument("--raw-json", default=None, metavar="OUT",
+                    help="also dump the raw result dicts (legacy)")
     args = ap.parse_args(argv)
     names = [args.only] if args.only else list(ALL)
     out = {}
@@ -58,9 +69,19 @@ def main(argv=None) -> None:
         t0 = time.time()
         out[name] = ALL[name](verbose=True)
         print(f"  ({time.time() - t0:.1f}s)\n")
-    if args.json:
-        with open(args.json, "w") as f:
+    if args.raw_json:
+        with open(args.raw_json, "w") as f:
             json.dump(out, f, indent=2, default=str)
+    if args.json:
+        from repro.obs.bench import records_from_result, write_ledger
+        records = []
+        for name, result in out.items():
+            records += records_from_result(name, result)
+        payload = write_ledger(args.json, records,
+                               meta={"source": "benchmarks.run",
+                                     "benchmarks": names})
+        print(f"ledger: {len(payload['records'])} records "
+              f"-> {args.json}")
     print(f"ran {len(names)} benchmarks")
 
 

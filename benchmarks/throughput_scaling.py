@@ -9,9 +9,16 @@ the paper's headline claims:
   * uncompressed Adam's throughput PEAKS and then falls on Ethernet while
     1-bit Adam keeps scaling (Fig. 5b);
   * end-to-end speedup (incl. warmup) lands near the paper's 3.3x.
+
+``--ledger PATH`` writes the swept cells as a canonical
+``BENCH_throughput_scaling.json`` perf ledger (:mod:`repro.obs.bench`),
+one record per (gpus, variant) point — the same format
+``launch.train --profile`` emits, so ``results/bench_compare.py`` can
+diff an analytic sweep against any later re-run.
 """
 from __future__ import annotations
 
+import argparse
 from typing import Dict, List
 
 from benchmarks.comm_fraction import (BERT_LARGE_PARAMS, FP16, FP32,
@@ -31,7 +38,7 @@ def throughput(n: int, bw_bits: float, compressed: bool) -> float:
     return n * SAMPLES_PER_STEP_PER_GPU / (t_step / 1e3)
 
 
-def run(verbose: bool = True) -> Dict:
+def run(verbose: bool = True, ledger: str = None) -> Dict:
     eth = 4.1e9
     ns = [8, 16, 32, 64, 128, 256]
     tp_adam = [throughput(n, eth, False) for n in ns]
@@ -67,8 +74,29 @@ def run(verbose: bool = True) -> Dict:
             bw_speedup["50Mbps"] > bw_speedup["4100Mbps"]
         print(f"  [{'PASS' if ok else 'FAIL'}] matches paper's claims "
               f"(3.3x e2e, 5.5x stage, larger at lower bandwidth)")
+    if ledger:
+        from repro.obs.bench import write_ledger
+        recs = [
+            *({"bench": "throughput_scaling",
+               "config": f"eth/{n}gpu", "mesh": [n], "pipeline": 1,
+               "kernels": False,
+               "metrics": {"samples_s_adam": a, "samples_s_1bit": b,
+                           "stage_speedup": s}}
+              for n, a, b, s in zip(ns, tp_adam, tp_1bit, speedups)),
+            {"bench": "throughput_scaling", "config": "e2e/64gpu",
+             "mesh": [64], "pipeline": 1, "kernels": False,
+             "metrics": {"endtoend_speedup": e2e}},
+        ]
+        payload = write_ledger(ledger, recs, meta={"source": "analytic"})
+        if verbose:
+            print(f"  ledger: {len(payload['records'])} records "
+                  f"-> {ledger}")
     return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write the swept cells as a BENCH perf ledger "
+                         "(compare with results/bench_compare.py)")
+    run(ledger=ap.parse_args().ledger)

@@ -1,0 +1,133 @@
+"""Diff two BENCH perf ledgers cell-by-cell — the CI perf gate.
+
+Usage::
+
+    PYTHONPATH=src python results/bench_compare.py BASELINE CURRENT \
+        [--rtol 0.5] [--min-attributed 0.02] [--min-overlap 0.0]
+
+Both files are canonical ledgers (``repro.obs.bench`` schema, as
+written by ``launch.train --profile``, the benchmark ``--ledger``
+flags, or ``benchmarks/run.py --json``).  Records pair up on their
+``(bench, config, mesh, pipeline, kernels)`` key.
+
+Two failure classes, deliberately separated:
+
+  * **structural** (exit 1) — a baseline cell or metric missing from
+    the current ledger, an unreadable/invalid ledger, or an
+    observability collapse: ``attributed_fraction`` below
+    ``--min-attributed`` or ``overlap_efficiency`` below
+    ``--min-overlap`` when the baseline had them healthy.  These mean
+    the measurement machinery broke, not that the machine was slow.
+  * **timing drift** (WARN, exit 0) — a shared numeric metric outside
+    the generous ``--rtol`` relative band.  CI machines are noisy;
+    wall-clock regressions are reported, never gating.
+
+New cells/metrics in the current ledger are informational only.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.obs.bench import load_ledger  # noqa: E402
+from repro.obs.events import bench_key  # noqa: E402
+
+# metrics where "bigger is slower" vs "bigger is better" — only used to
+# phrase the WARN line, never to gate
+_LOWER_IS_BETTER = {"s_per_step", "t_window", "t_residual", "t_comm",
+                    "allreduce_ms", "onebit_ms"}
+
+
+def _by_key(payload: dict) -> dict:
+    return {bench_key(r): r for r in payload.get("records", [])}
+
+
+def compare(baseline: dict, current: dict, rtol: float = 0.5,
+            min_attributed: float = 0.02, min_overlap: float = 0.0
+            ) -> dict:
+    """Pure comparison; returns ``{failures, warnings, notes}`` lists of
+    strings (the CLI prints them and exits 1 on failures)."""
+    failures, warnings, notes = [], [], []
+    base, cur = _by_key(baseline), _by_key(current)
+    for key in sorted(base, key=str):
+        label = "/".join(str(p) for p in key)
+        if key not in cur:
+            failures.append(f"cell missing from current ledger: {label}")
+            continue
+        bm, cm = base[key]["metrics"], cur[key]["metrics"]
+        for name in sorted(bm):
+            if name not in cm:
+                failures.append(f"{label}: metric {name!r} missing")
+                continue
+            b, c = float(bm[name]), float(cm[name])
+            # observability collapse: gate only when the baseline was
+            # itself healthy, so a degenerate baseline can't brick CI
+            if name == "attributed_fraction" and b >= min_attributed \
+                    and c < min_attributed:
+                failures.append(
+                    f"{label}: attributed_fraction collapsed "
+                    f"{b:.3f} -> {c:.3f} (< {min_attributed})")
+                continue
+            if name == "overlap_efficiency" and b > min_overlap \
+                    and c <= min_overlap:
+                failures.append(
+                    f"{label}: overlap_efficiency collapsed "
+                    f"{b:.3f} -> {c:.3f} (<= {min_overlap})")
+                continue
+            denom = max(abs(b), 1e-12)
+            rel = (c - b) / denom
+            if abs(rel) > rtol:
+                direction = ("slower" if (rel > 0) ==
+                             (name in _LOWER_IS_BETTER) else "faster")
+                warnings.append(
+                    f"{label}: {name} {b:.6g} -> {c:.6g} "
+                    f"({rel:+.0%}, {direction}; rtol {rtol:.0%})")
+        for name in sorted(set(cm) - set(bm)):
+            notes.append(f"{label}: new metric {name!r}")
+    for key in sorted(set(cur) - set(base), key=str):
+        notes.append("new cell: " + "/".join(str(p) for p in key))
+    return {"failures": failures, "warnings": warnings, "notes": notes}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--rtol", type=float, default=0.5,
+                    help="relative timing band before a WARN "
+                         "(default 0.5 = ±50%%, generous for CI noise)")
+    ap.add_argument("--min-attributed", type=float, default=0.02,
+                    help="attributed_fraction below this (when the "
+                         "baseline was above) is a structural FAIL")
+    ap.add_argument("--min-overlap", type=float, default=0.0,
+                    help="overlap_efficiency at/below this (when the "
+                         "baseline was above) is a structural FAIL")
+    args = ap.parse_args(argv)
+    try:
+        baseline = load_ledger(args.baseline)
+        current = load_ledger(args.current)
+    except (OSError, ValueError) as e:
+        print(f"FAIL: {e}")
+        return 1
+    out = compare(baseline, current, rtol=args.rtol,
+                  min_attributed=args.min_attributed,
+                  min_overlap=args.min_overlap)
+    for line in out["failures"]:
+        print(f"FAIL: {line}")
+    for line in out["warnings"]:
+        print(f"WARN: {line}")
+    for line in out["notes"]:
+        print(f"note: {line}")
+    nb = len(_by_key(baseline))
+    print(f"compared {nb} baseline cells: {len(out['failures'])} "
+          f"failures, {len(out['warnings'])} timing warnings, "
+          f"{len(out['notes'])} notes")
+    return 1 if out["failures"] else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,6 +22,15 @@ spans, and — with ``--drift-probe`` — the predicted-vs-measured
 cost-model drift monitor.  Fold the log with
 ``python -m repro.obs.report DIR/telemetry.jsonl``.  The layer is
 zero-cost when off (NullSink + disabled tracing + async metric parking).
+
+``--profile DIR`` captures a ``jax.profiler`` trace of the last
+``--profile-steps`` steady-state steps and folds it back onto the plan
+grid (:mod:`repro.obs.profile`): every executor collective attributed
+to its (plan, bucket, stage, kind, tier) cell via the ``op_scope`` name
+grammar, a measured-vs-predicted overlap audit against
+``pipeline_breakdown``'s intervals, a ``profile`` telemetry event, and
+a ``BENCH_<name>.json`` perf-ledger record (``--bench`` names it) the
+CI ``perf-ledger`` job gates on via ``results/bench_compare.py``.
 """
 from __future__ import annotations
 
@@ -240,6 +249,84 @@ def emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology: str,
                  if recal_path else ""))
 
 
+def fold_profile_window(profile_dir: str, hlo_texts, n_steps: int,
+                        optim, cfg, mesh, topology: str, n_buckets: int,
+                        block_size: int, cluster: str, device: str,
+                        stage: str = "compressed"):
+    """Fold the captured profiler trace onto the plan grid and build
+    the ``profile`` event fields (:func:`repro.obs.profile.attribution`)
+    — measured cells joined via the compiled-HLO op_name bridge, the
+    overlap audit diffed against the predicted ``pipeline_breakdown``
+    intervals of THIS run's lowered exchange, and bytes/step from the
+    executed plan's HLO accounting."""
+    from repro.obs import profile as prof
+    from repro.pipeline import Bucketer, lower_to_pipelined
+    from repro.plan import get_cluster, pipeline_breakdown
+    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
+    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
+                       device=device)
+    warm, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
+    plan = comp_plan if stage == "compressed" else warm
+    comp = optim.compressor if stage == "compressed" else None
+    bucketer = Bucketer.for_exchange(plan.d, max(n_inner * n_outer, 1),
+                                     block_size,
+                                     n_buckets if stage == "compressed"
+                                     else 1)
+    predicted = pipeline_breakdown(
+        lower_to_pipelined(plan, comp, bucketer), spec)
+    fold = prof.fold_profile(profile_dir, hlo_texts)
+    return prof.attribution(fold, n_steps=n_steps, predicted=predicted,
+                            bytes_per_step=float(plan.hlo_bytes()),
+                            source="launch.train")
+
+
+def emit_profile_ledger(profile_dir: str, steps_fns, sample_args, sink,
+                        optim, cfg, mesh, topology: str, n_buckets: int,
+                        block_size: int, cluster: str, device: str,
+                        n_steps: int, stage: str, bench: Optional[str],
+                        arch: str, mesh_shape, use_kernel: bool) -> dict:
+    """Post-run profile pipeline: compiled-HLO texts of every executed
+    step (the op_name bridge the trace join needs), the grid fold +
+    attribution (``fold_profile_window``), a ``profile`` telemetry
+    event, and the ``BENCH_<name>.json`` perf-ledger record."""
+    from repro.obs.bench import bench_record, write_ledger
+    params, opt, batch_data, lr = sample_args
+    hlo_texts = []
+    for fn in steps_fns.values():
+        hlo_texts.append(fn.build(batch_data)
+                         .lower(params, opt, batch_data, lr)
+                         .compile().as_text())
+    fields = fold_profile_window(profile_dir, hlo_texts, n_steps, optim,
+                                 cfg, mesh, topology, n_buckets,
+                                 block_size, cluster, device,
+                                 stage=stage)
+    sink.emit("profile", **fields)
+    metrics = {k: float(fields[k]) for k in
+               ("s_per_step", "comm_fraction", "overlap_efficiency",
+                "roofline_fraction", "t_window", "t_attributed",
+                "t_residual", "bytes_per_step") if k in fields}
+    metrics["n_cells"] = int(fields["n_cells"])
+    if fields.get("t_window"):
+        metrics["attributed_fraction"] = (fields["t_attributed"]
+                                          / fields["t_window"])
+    name = bench or "train"
+    rec = bench_record(name, config=arch,
+                       mesh=[int(s) for s in mesh_shape],
+                       pipeline=int(n_buckets), kernels=bool(use_kernel),
+                       metrics=metrics)
+    ledger_path = os.path.join(profile_dir, f"BENCH_{name}.json")
+    write_ledger(ledger_path, [rec],
+                 meta={"source": "launch.train", "cluster": cluster,
+                       "device": device, "arch": arch, "stage": stage})
+    print(f"profile: {fields['n_cells']} grid cells, "
+          f"{fields['t_attributed']:.3f}s attributed + "
+          f"{fields['t_residual']:.3f}s residual of "
+          f"{fields['t_window']:.3f}s window "
+          f"({n_steps} steps); ledger -> {ledger_path}")
+    return fields
+
+
 def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         base_lr: float = 1e-3, lr_warmup: int = 100,
         warmup_steps: Optional[int] = None, block_size: int = 4096,
@@ -250,7 +337,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         compressor: Optional[str] = None, topology: Optional[str] = None,
         cluster: str = "ethernet-10g", pipeline=None, kernels=None,
         device: str = "tpu-v5e", telemetry: Optional[str] = None,
-        drift_probe: bool = False):
+        drift_probe: bool = False, profile: Optional[str] = None,
+        profile_steps: int = 4, bench: Optional[str] = None):
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -353,7 +441,9 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
     # metric buffer only ever parks async device arrays) ------------------
     sink = as_sink(telemetry)
     tracer = Tracer(sink)
-    set_tracing(sink.enabled)
+    # --profile needs the op_scope names in the compiled HLO even when
+    # --telemetry is off (scopes are metadata-only; neutrality is pinned)
+    set_tracing(sink.enabled or profile is not None)
     if sink.enabled:
         sink.emit("run_meta", optimizer=spec.optimizer,
                   compressor=spec.compressor, topology=topology,
@@ -392,8 +482,25 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
 
     t_start = time.time()
     win_t0, win_step0 = t_start, start_step
+    # --profile: trace the LAST profile_steps steps (steady state —
+    # warmup compiles and stage switches are behind us by then)
+    prof_start = max(start_step, steps - max(profile_steps, 1)) \
+        if profile else None
+    prof_span = None
     try:
         for step in range(start_step, steps):
+            if prof_start is not None and step == prof_start \
+                    and prof_span is None:
+                # drain outstanding async work so the traced window
+                # holds exactly the profiled steps, then open the
+                # host-span bracket the fold uses as its wall clock
+                jax.block_until_ready(jax.tree_util.tree_leaves(params))
+                os.makedirs(profile, exist_ok=True)
+                jax.profiler.start_trace(profile,
+                                         create_perfetto_trace=True)
+                prof_span = tracer.span("profile.window",
+                                        n=steps - prof_start, step=step)
+                prof_span.__enter__()
             if stage_override:
                 stage, sync = stage_override, True
             else:
@@ -460,12 +567,36 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                                      n_buckets=n_buckets,
                                      block=spec.block_size)
         drain()
+        if prof_span is not None:
+            # the drain above materialised the window's metrics — a real
+            # host sync — so the span's wall clock is honest
+            prof_span.__exit__(None, None, None)
+            prof_span = None
+            jax.profiler.stop_trace()
+            try:
+                emit_profile_ledger(
+                    profile, steps_fns, (params, opt, batch_data, lr),
+                    sink, optim, cfg, mesh, topology, n_buckets,
+                    spec.block_size, cluster, device,
+                    n_steps=steps - prof_start, stage=stage,
+                    bench=bench, arch=arch, mesh_shape=mesh_shape,
+                    use_kernel=bool(use_kernel))
+            except Exception as e:   # a failed fold must not lose the run
+                sink.emit("warning", what="profile.fold",
+                          detail=str(e)[:400])
+                print(f"[warn] profile fold failed: {e}")
         if ckpt:
             with tracer.span("checkpoint.save", step=steps):
                 save_train_state(ckpt, params, opt, steps, slots=slots,
                                  ctx=state_ctx, n_buckets=n_buckets,
                                  block=spec.block_size)
     finally:
+        if prof_span is not None:    # abnormal exit mid-window
+            prof_span.__exit__(None, None, None)
+            try:
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
         set_tracing(False)
         sink.close()
     if sink.enabled:
@@ -542,6 +673,17 @@ def main(argv=None):
                          "exchange collective on the real mesh before "
                          "training and run the cost-model drift monitor "
                          "(writes recalibration.json on drift)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the last "
+                         "--profile-steps steps into DIR, fold it onto "
+                         "the plan grid (repro.obs.profile: measured "
+                         "per-(plan,bucket,stage,tier) cells + overlap "
+                         "audit) and write DIR/BENCH_<name>.json")
+    ap.add_argument("--profile-steps", type=int, default=4,
+                    help="steady-state steps the --profile trace covers")
+    ap.add_argument("--bench", default=None, metavar="NAME",
+                    help="perf-ledger name for --profile "
+                         "(BENCH_<NAME>.json; default: train)")
     args = ap.parse_args(argv)
     mesh_shape = tuple(int(x) for x in args.mesh.split("x"))
     run(args.arch, args.steps, args.batch, args.seq, mesh_shape,
@@ -554,7 +696,9 @@ def main(argv=None):
         topology=args.topology, cluster=args.cluster,
         pipeline=args.pipeline, kernels=args.kernels,
         device=args.device, telemetry=args.telemetry,
-        drift_probe=args.drift_probe, log_every=args.log_every)
+        drift_probe=args.drift_probe, log_every=args.log_every,
+        profile=args.profile, profile_steps=args.profile_steps,
+        bench=args.bench)
 
 
 if __name__ == "__main__":

@@ -14,7 +14,17 @@ Four modules, one loop:
   * :mod:`repro.obs.drift` — :class:`DriftMonitor`, predicted-vs-
     measured α-β residuals against :mod:`repro.plan.cost`, emitting
     ``ClusterSpec.from_measured`` recalibrations; and
-    :mod:`repro.obs.report`, which folds any obs log into tables.
+    :mod:`repro.obs.report`, which folds any obs log into tables;
+  * :mod:`repro.obs.profile` — fold a captured ``jax.profiler`` trace
+    back onto the plan grid via the ``op_scope`` name grammar: measured
+    per-(plan, bucket, stage, kind, tier) cells, the per-stream
+    hidden/exposed overlap audit against ``pipeline_breakdown``'s
+    predicted intervals, and the attribution report with an explicit
+    unattributed residual;
+  * :mod:`repro.obs.bench` — the ``BENCH_<name>.json`` perf-ledger
+    writer/reader (schema in :mod:`repro.obs.events`), the record
+    stream ``results/bench_compare.py`` and the CI ``perf-ledger`` job
+    gate on.
 
 Submodule attributes resolve lazily (PEP 562): ``repro.obs.trace`` is
 imported by the executors on their hot path, and eagerly importing
@@ -45,16 +55,29 @@ _EXPORTS = {
     "DriftSample": "repro.obs.drift",
     "fit_linkspecs": "repro.obs.drift",
     "probe_plan": "repro.obs.drift",
+    "attribution": "repro.obs.profile",
+    "fold_profile": "repro.obs.profile",
+    "fold_trace": "repro.obs.profile",
+    "hlo_scope_map": "repro.obs.profile",
+    "overlap_audit": "repro.obs.profile",
+    "parse_scope": "repro.obs.profile",
+    "bench_record": "repro.obs.bench",
+    "load_ledger": "repro.obs.bench",
+    "records_from_result": "repro.obs.bench",
+    "validate_bench_record": "repro.obs.events",
+    "write_ledger": "repro.obs.bench",
 }
 
-__all__ = sorted(_EXPORTS) + ["events", "metrics", "trace", "drift",
-                              "report"]
+_SUBMODULES = ("events", "metrics", "trace", "drift", "report",
+               "profile", "bench")
+
+__all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 
 
 def __getattr__(name):
     import importlib
     if name in _EXPORTS:
         return getattr(importlib.import_module(_EXPORTS[name]), name)
-    if name in ("events", "metrics", "trace", "drift", "report"):
+    if name in _SUBMODULES:
         return importlib.import_module(f"repro.obs.{name}")
     raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

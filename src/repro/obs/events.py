@@ -38,6 +38,17 @@ Event kinds
                  drift monitor, per (op kind, tier).
 ``recalibration``pointer to an emitted ``ClusterSpec.from_measured``
                  JSON when drift exceeded the threshold.
+``profile``      one folded ``jax.profiler`` window
+                 (:mod:`repro.obs.profile`): measured wall clock,
+                 attributed + residual split, per-stream overlap audit,
+                 and the per-(plan, bucket, stage, kind, tier) cells.
+
+Besides the JSONL event stream, this module also owns the **perf-ledger
+record schema** (``BENCH_*.json`` files — :mod:`repro.obs.bench` reads
+and writes them): one record per measured (bench, config, mesh,
+pipeline, kernels) cell, identity fields required, every metric a
+plain number.  ``results/bench_compare.py`` and the CI ``perf-ledger``
+job gate on these records against a committed baseline.
 
 Validation policy: the per-kind REQUIRED fields must be present with
 the right JSON types; OPTIONAL fields are type-checked when present;
@@ -113,7 +124,17 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
         {"name": "str", "dur": "num"},
         {"stream": "str", "t_start": "num", "step": "int", "n": "int",
          "bucket": "int", "stage": "int", "op_kind": "str",
-         "tier": "str", "payload_bytes": "num", "group": "int"},
+         "tier": "str", "payload_bytes": "num", "group": "int",
+         "ok": "bool", "depth": "int"},
+    ),
+    "profile": (
+        {"n_steps": "int", "t_window": "num", "t_attributed": "num",
+         "t_residual": "num"},
+        {"s_per_step": "num", "comm_fraction": "num",
+         "overlap_efficiency": "num", "roofline_fraction": "num",
+         "bytes_per_step": "num", "n_cells": "int",
+         "n_unattributed": "int", "cells": "list", "streams": "dict",
+         "audit_vs_predicted": "list", "source": "str"},
     ),
     "drift": (
         {"op_kind": "str", "tier": "str", "n_samples": "int",
@@ -184,3 +205,54 @@ def validate_records(records: Iterable[dict]) -> int:
             raise ValueError(f"record {i}: {e}") from None
         n += 1
     return n
+
+
+# --------------------------------------------------------------------------
+# BENCH perf-ledger record schema (repro.obs.bench reads/writes it)
+# --------------------------------------------------------------------------
+
+# the ledger file's schema tag; bump on incompatible record changes
+BENCH_SCHEMA = "repro.obs.bench/v1"
+
+# the identity of one measured cell: which benchmark, on which config,
+# on what mesh, with which pipeline bucket count and kernel choice —
+# results/bench_compare.py matches baseline vs candidate on this key
+BENCH_KEY_FIELDS: Dict[str, str] = {
+    "bench": "str", "config": "str", "mesh": "list",
+    "pipeline": "int", "kernels": "bool",
+}
+
+
+def bench_key(rec: dict) -> tuple:
+    """The comparable identity tuple of one ledger record."""
+    return (rec["bench"], rec["config"], tuple(rec["mesh"]),
+            rec["pipeline"], rec["kernels"])
+
+
+def validate_bench_record(rec: dict) -> dict:
+    """One perf-ledger record: the identity fields above (required,
+    typed) plus a ``metrics`` dict of plain numbers — nothing else, so
+    every ledger cell diffs field-by-field."""
+    if not isinstance(rec, dict):
+        raise ValueError(
+            f"bench record must be an object, got {type(rec).__name__}")
+    for field, tname in BENCH_KEY_FIELDS.items():
+        if field not in rec:
+            raise ValueError(f"bench record: missing key field {field!r}")
+        if not _CHECKS[tname](rec[field]):
+            raise ValueError(f"bench.{field}: expected {tname}, "
+                             f"got {rec[field]!r}")
+    if not all(isinstance(m, (int, str)) for m in rec["mesh"]):
+        raise ValueError(f"bench.mesh: expected axis sizes, "
+                         f"got {rec['mesh']!r}")
+    metrics = rec.get("metrics")
+    if not isinstance(metrics, dict):
+        raise ValueError("bench record: 'metrics' dict is required")
+    for name, value in metrics.items():
+        if not _is_num(value):
+            raise ValueError(f"bench.metrics[{name!r}]: expected a "
+                             f"number, got {value!r}")
+    extra = set(rec) - set(BENCH_KEY_FIELDS) - {"metrics", "t"}
+    if extra:
+        raise ValueError(f"bench record: unknown fields {sorted(extra)}")
+    return rec

@@ -18,12 +18,22 @@ folds through here.  Sections (each skipped when its events are absent):
     honest);
   * **drift** — the drift monitor's predicted-vs-measured verdicts and
     any emitted recalibration;
+  * **profile** — the folded ``jax.profiler`` window
+    (:mod:`repro.obs.profile` via ``launch.train --profile``): measured
+    s/step, comm fraction, overlap efficiency, the attributed-vs-
+    residual wall-clock split, per-stream hidden/exposed time against
+    the predicted schedule, and the per-grid-cell measured times;
   * **warnings** — host-side anomalies (e.g. non-finite variance).
 
 CLI (the CI smoke job runs this over a real training log)::
 
     python -m repro.obs.report runs/telemetry.jsonl --validate
     python -m repro.obs.report runs/telemetry.jsonl --json summary.json
+    python -m repro.obs.report run_a.jsonl --diff run_b.jsonl
+
+``--diff`` prints the two runs side by side — steps/s, per-tier plan
+bytes, drift verdicts — the manual counterpart of the CI perf-ledger
+gate (``results/bench_compare.py``).
 """
 from __future__ import annotations
 
@@ -135,6 +145,25 @@ def summarize(records: List[dict]) -> Dict[str, object]:
             sec[name] = row
         out["spans"] = sec
 
+    profiles = by.get("profile", [])
+    if profiles:
+        p = profiles[-1]           # the run's (last) folded window
+        sec = {k: p[k] for k in
+               ("n_steps", "t_window", "t_attributed", "t_residual",
+                "s_per_step", "comm_fraction", "overlap_efficiency",
+                "roofline_fraction", "bytes_per_step", "n_cells",
+                "n_unattributed") if k in p}
+        if p.get("t_window"):
+            sec["attributed_fraction"] = p["t_attributed"] / p["t_window"]
+        if p.get("streams"):
+            sec["streams"] = [{"stream": s, **row}
+                              for s, row in sorted(p["streams"].items())]
+        if p.get("audit_vs_predicted"):
+            sec["audit_vs_predicted"] = p["audit_vs_predicted"]
+        if p.get("cells"):
+            sec["cells"] = p["cells"]
+        out["profile"] = sec
+
     drift = by.get("drift", [])
     if drift:
         out["drift"] = [{k: r[k] for k in
@@ -213,6 +242,27 @@ def format_report(summary: Dict[str, object]) -> str:
         rows = [{"name": n, **row} for n, row in summary["spans"].items()]
         lines += ["  " + ln for ln in _table(
             rows, ["name", "count", "mean", "total", "per_step"])]
+    if "profile" in summary:
+        head("profile (measured trace fold)")
+        p = summary["profile"]
+        lines += [f"  {k}: {_fmt(v)}" for k, v in p.items()
+                  if k not in ("streams", "cells", "audit_vs_predicted")]
+        if "streams" in p:
+            lines.append("  per-stream overlap audit:")
+            lines += ["    " + ln for ln in _table(
+                p["streams"], ["stream", "busy", "hidden", "exposed"])]
+        if "audit_vs_predicted" in p:
+            lines.append("  measured vs predicted (per step vs window):")
+            lines += ["    " + ln for ln in _table(
+                p["audit_vs_predicted"],
+                ["stream", "busy_measured", "busy_predicted",
+                 "hidden_measured", "hidden_predicted",
+                 "exposed_measured", "exposed_predicted"])]
+        if "cells" in p:
+            lines.append("  grid cells:")
+            lines += ["    " + ln for ln in _table(
+                p["cells"], ["plan", "bucket", "stage", "kind", "tier",
+                             "n", "t_wire", "t_compute"])]
     if "drift" in summary:
         head("cost-model drift")
         lines += ["  " + ln for ln in _table(
@@ -232,6 +282,59 @@ def format_report(summary: Dict[str, object]) -> str:
     return "\n".join(lines)
 
 
+# --------------------------------------------------------------------------
+# two-run diff (--diff): the manual counterpart of the CI ledger gate
+# --------------------------------------------------------------------------
+
+def _diff_rows(a: Dict[str, object], b: Dict[str, object]) -> List[dict]:
+    """Comparable headline quantities of two summaries as (metric, a, b)
+    rows: steps/s, per-tier plan bytes, drift verdicts."""
+    rows: List[dict] = []
+
+    def row(metric, va, vb):
+        rows.append({"metric": metric,
+                     "a": va if va is not None else "-",
+                     "b": vb if vb is not None else "-"})
+
+    def steps_per_s(s):
+        win = (s.get("spans") or {}).get("train.window", {})
+        per = win.get("per_step") or (s.get("profile") or {}).get(
+            "s_per_step")
+        return 1.0 / per if per else None
+
+    row("steps/s", steps_per_s(a), steps_per_s(b))
+    for field in ("s_per_step", "comm_fraction", "overlap_efficiency",
+                  "t_residual"):
+        va = (a.get("profile") or {}).get(field)
+        vb = (b.get("profile") or {}).get(field)
+        if va is not None or vb is not None:
+            row(f"profile.{field}", va, vb)
+    plans_a = {(p["name"], p["stage"]): p for p in a.get("plans", [])}
+    plans_b = {(p["name"], p["stage"]): p for p in b.get("plans", [])}
+    for key in sorted(set(plans_a) | set(plans_b), key=str):
+        for tier in ("intra", "cross"):
+            va = (plans_a.get(key) or {}).get(f"{tier}_hlo_bytes")
+            vb = (plans_b.get(key) or {}).get(f"{tier}_hlo_bytes")
+            if va or vb:
+                row(f"{key[0]}[{key[1]}] {tier} B", va, vb)
+    da = a.get("drifting", [])
+    db = b.get("drifting", [])
+    if "drift" in a or "drift" in b:
+        row("drifting", ",".join(da) or "none", ",".join(db) or "none")
+    return rows
+
+
+def format_diff(a: Dict[str, object], b: Dict[str, object],
+                label_a: str = "a", label_b: str = "b") -> str:
+    rows = _diff_rows(a, b)
+    renamed = [{"metric": r["metric"], label_a: r["a"], label_b: r["b"]}
+               for r in rows]
+    lines = [f"== diff: {label_a} vs {label_b} =="]
+    lines += ["  " + ln for ln in _table(renamed,
+                                         ["metric", label_a, label_b])]
+    return "\n".join(lines)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         description="Summarize a repro.obs telemetry JSONL log.")
@@ -240,11 +343,20 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="schema-check every record before summarizing")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the summary dict as JSON")
+    ap.add_argument("--diff", metavar="OTHER", default=None,
+                    help="second telemetry log: print the two runs side "
+                         "by side (steps/s, per-tier bytes, drift "
+                         "verdicts) instead of one full report")
     args = ap.parse_args(argv)
     records = load(args.log, validate=args.validate)
     if args.validate:
         print(f"validated {len(records)} records OK")
     summary = summarize(records)
+    if args.diff:
+        other = summarize(load(args.diff, validate=args.validate))
+        print(format_diff(summary, other, label_a=args.log,
+                          label_b=args.diff))
+        return 0
     print(format_report(summary))
     if args.json:
         with open(args.json, "w") as f:

@@ -26,11 +26,17 @@ Two kinds of span, because JAX separates trace time from run time:
 
 Span naming convention (documented in README "Observability")::
 
-    obs::<plan>::s<stage>::<Kind>@<tier>          serial executor
-    obs::<plan>::b<bucket>.s<stage>::<Kind>@<tier> pipelined executor
+    obs::<plan>::s<stage>::<Kind>~<tier>          serial executor
+    obs::<plan>::b<bucket>.s<stage>::<Kind>~<tier> pipelined executor
 
-e.g. ``obs::hier_onebit::b2.s1::AllToAll@cross`` = bucket 2's cross-pod
-all_to_all leg.
+e.g. ``obs::hier_onebit::b2.s1::AllToAll~cross`` = bucket 2's cross-pod
+all_to_all leg.  The tier separator is ``~`` because ``@`` is reserved
+by JAX's name stack (it marks transform annotations like ``vmap@...``)
+and everything from ``@`` on is SILENTLY DROPPED when the scope is
+lowered to HLO ``op_name`` metadata — the one place the name must
+survive for :mod:`repro.obs.profile` to join a device trace back onto
+the grid.  ``repro.obs.profile.SCOPE_RE`` accepts both separators so
+pre-rename logs still parse.
 """
 from __future__ import annotations
 
@@ -69,7 +75,7 @@ def tracing(on: bool = True):
 def span_name(plan_name: str, stage: int, kind: str, tier: str,
               bucket: Optional[int] = None) -> str:
     b = f"b{bucket}." if bucket is not None else ""
-    return f"obs::{plan_name}::{b}s{stage}::{kind}@{tier}"
+    return f"obs::{plan_name}::{b}s{stage}::{kind}~{tier}"
 
 
 def op_scope(plan_name: str, stage: int, op, bucket: Optional[int] = None):
@@ -85,11 +91,20 @@ def op_scope(plan_name: str, stage: int, op, bucket: Optional[int] = None):
 
 class Tracer:
     """Host-side wall-clock spans, recorded and (optionally) emitted as
-    ``span`` events to a telemetry sink."""
+    ``span`` events to a telemetry sink.
+
+    Spans nest (the tracer keeps a depth stack, recorded as ``depth``
+    on each span, with monotonic ``t_mono0``/``t_mono1`` endpoints —
+    so sibling spans provably never overlap and nesting is well-formed,
+    pinned by tests/test_properties.py).  A body that RAISES still ends
+    its span: the record carries ``ok: false`` and a ``warning`` event
+    marks the abnormal close — an exception mid-window must not lose
+    the span or silently skew dur/n."""
 
     def __init__(self, sink=None):
         self.sink = sink
         self.spans: List[dict] = []
+        self._depth = 0
 
     @contextlib.contextmanager
     def span(self, name: str, stream: str = "host", **attrs):
@@ -98,16 +113,28 @@ class Tracer:
         import jax
         t0 = time.perf_counter()
         wall0 = time.time()
+        depth = self._depth
+        self._depth = depth + 1
+        exc: Optional[BaseException] = None
         try:
             with jax.profiler.TraceAnnotation(name):
                 yield
+        except BaseException as e:
+            exc = e
+            raise
         finally:
-            dur = time.perf_counter() - t0
+            self._depth = depth
+            t1 = time.perf_counter()
             rec = {"name": name, "stream": stream, "t_start": wall0,
-                   "dur": dur, **attrs}
+                   "dur": t1 - t0, "ok": exc is None, "depth": depth,
+                   "t_mono0": t0, "t_mono1": t1, **attrs}
             self.spans.append(rec)
             if self.sink is not None:
                 self.sink.emit("span", **rec)
+                if exc is not None:
+                    self.sink.emit("warning", what="span.abort",
+                                   detail=f"span {name!r} closed by "
+                                          f"{type(exc).__name__}")
 
 
 # --------------------------------------------------------------------------

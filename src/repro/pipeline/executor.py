@@ -65,6 +65,19 @@ from repro.plan.executor import Errs, execute_op
 from repro.pipeline.ir import PipelinedPlan
 
 
+def scoped_op_names(pplan: PipelinedPlan) -> Tuple[str, ...]:
+    """The span names one ``execute_pipelined`` run emits (tracing on),
+    in wavefront issue order — one ``obs::<plan>::b<bucket>.s<stage>::
+    <Kind>~<tier>`` per grid point, the expected coverage set a
+    measured-profile fold (:mod:`repro.obs.profile`) is held against."""
+    from repro.obs.trace import span_name
+    return tuple(
+        span_name(pplan.name, s,
+                  pplan.buckets[b].plan.ops[s].kind,
+                  pplan.buckets[b].plan.ops[s].tier, bucket=b)
+        for b, s in pplan.issue_order())
+
+
 def execute_pipelined(pplan: PipelinedPlan, comp, value: jax.Array,
                       errs: Optional[Errs] = None
                       ) -> Tuple[jax.Array, Errs]:

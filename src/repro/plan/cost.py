@@ -353,10 +353,18 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
     carries the bucketing's extra per-op launches; compare against
     ``plan_time`` of the unlowered plan for the end-to-end win),
     ``saved``, per-stream ``busy`` seconds (``compute`` included), the
-    ``bottleneck`` stream, and its ``fill_drain`` slack.
+    ``bottleneck`` stream, its ``fill_drain`` slack, and ``intervals`` —
+    one record per scheduled nonzero-duration unit::
+
+        {"bucket", "stage", "phase" ("pre"|"wire"|"post"), "stream",
+         "kind", "tier", "t_start", "t_end"}
+
+    the predicted timeline :mod:`repro.obs.profile` diffs a measured
+    ``jax.profiler`` trace against (per-stream hidden/exposed time).
     """
     free: Dict[str, float] = {}
     busy: Dict[str, float] = {}
+    intervals: list = []
     dev = spec.device
 
     def on_stream(stream: str, dep: float, t: float) -> float:
@@ -392,13 +400,22 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
             dep = finish[b][sigma - 1] if sigma > 0 else 0.0
             if phase == 0:
                 t = pre.time(dev) if pre is not None else 0.0
-                end = on_stream("compute", dep, t)
+                stream = "compute"
+                end = on_stream(stream, dep, t)
             elif phase == 1:
                 t = op_time(op, spec)
-                end = on_stream(op.tier, dep, t)
+                stream = op.tier
+                end = on_stream(stream, dep, t)
             else:
                 t = post.time(dev) if post is not None else 0.0
-                end = on_stream("compute", dep, t)
+                stream = "compute"
+                end = on_stream(stream, dep, t)
+            if t > 0.0:
+                intervals.append({
+                    "bucket": b, "stage": s,
+                    "phase": ("pre", "wire", "post")[phase],
+                    "stream": stream, "kind": op.kind, "tier": op.tier,
+                    "t_start": end - t, "t_end": end})
             finish[b][sigma] = end
             t_serial += t
             t_total = max(t_total, end)
@@ -406,7 +423,8 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
     return {"t_total": t_total, "t_serial": t_serial,
             "saved": t_serial - t_total, "busy": busy,
             "bottleneck": bottleneck,
-            "fill_drain": t_total - busy.get(bottleneck, 0.0)}
+            "fill_drain": t_total - busy.get(bottleneck, 0.0),
+            "intervals": intervals}
 
 
 def pipelined_plan_time(pplan, spec: ClusterSpec,

@@ -26,7 +26,7 @@ leaf + decompress (see tests/test_distributed.py parity tests).
 
 When trace spans are enabled (``repro.obs.trace.set_tracing``), every
 op lowers inside a ``jax.named_scope`` carrying its
-``obs::<plan>::[b<bucket>.]s<stage>::<Kind>@<tier>`` span name, so a
+``obs::<plan>::[b<bucket>.]s<stage>::<Kind>~<tier>`` span name, so a
 profiler trace attributes device time to the same (bucket, stage,
 stream) grid the cost model prices.  Scopes are HLO *metadata* only —
 the compiled collectives are identical on and off (pinned by
@@ -126,6 +126,20 @@ _EXEC = {
     ReduceScatter: _exec_reduce_scatter,
     Broadcast: _exec_broadcast,
 }
+
+# every op kind this executor can lower — each one is wrapped in an
+# op_scope whose span name the profile joiner (repro.obs.profile) must
+# parse back to its grid cell; tests/test_profile.py pins the coverage
+# so no collective can become silently unattributable
+SCOPED_KINDS = tuple(sorted(cls.__name__ for cls in _EXEC))
+
+
+def scoped_op_names(plan: CommPlan) -> Tuple[str, ...]:
+    """The span names one serial ``execute_plan`` run emits (tracing
+    on) — the expected coverage set for a measured-profile fold."""
+    from repro.obs.trace import span_name
+    return tuple(span_name(plan.name, s, op.kind, op.tier)
+                 for s, op in enumerate(plan.ops))
 
 
 def execute_op(op: CollectiveOp, comp, value: jax.Array, errs: Errs,

@@ -67,6 +67,8 @@ class TestEventSchema:
                           t_measured=1e-3, t_predicted=2e-3, ratio=0.5,
                           drifting=True),
             "recalibration": dict(op_overhead=5e-6),
+            "profile": dict(n_steps=4, t_window=1.0, t_attributed=0.8,
+                            t_residual=0.2),
         }
         assert sorted(minimal) == sorted(E.EVENT_SCHEMA)
         for etype, fields in minimal.items():
@@ -235,11 +237,14 @@ class TestNaNGuard:
 
 class TestTrace:
     def test_span_name_grammar(self):
+        # tier separator is "~", NOT "@": JAX's name stack reserves "@"
+        # for transform annotations and drops it (and the tier) from the
+        # HLO op_name metadata the profile fold joins on
         assert (TR.span_name("hier_onebit", 1, "AllToAll", "cross",
                              bucket=2)
-                == "obs::hier_onebit::b2.s1::AllToAll@cross")
+                == "obs::hier_onebit::b2.s1::AllToAll~cross")
         assert (TR.span_name("flat_onebit", 0, "AllGather", "intra")
-                == "obs::flat_onebit::s0::AllGather@intra")
+                == "obs::flat_onebit::s0::AllGather~intra")
 
     def test_op_scope_disabled_is_shared_nullcontext(self):
         class Op:

@@ -138,3 +138,45 @@ class TestLossInvariances:
         v_pad = cfg.padded_vocab(1)
         assert logits.shape[-1] == v_pad
         assert v_pad > cfg.vocab
+
+
+class TestTracerSpanProperties:
+    @given(prog=st.lists(st.integers(0, 3), min_size=1, max_size=30))
+    @settings(max_examples=25, deadline=None)
+    def test_sibling_spans_never_overlap_nesting_well_formed(self, prog):
+        """Drive the Tracer through a random open/close program: the
+        recorded [t_mono0, t_mono1] intervals must form a well-bracketed
+        forest — any two spans are either disjoint in time (siblings at
+        any level: they NEVER overlap) or properly nested, with the
+        contained span strictly deeper; and every close restores depth."""
+        from repro.obs.trace import Tracer
+
+        tr = Tracer()
+        stack = []
+        for i, action in enumerate(prog):
+            # 0 => close the innermost open span; 1-3 => open (bounded)
+            if action == 0 and stack:
+                stack.pop().__exit__(None, None, None)
+            elif len(stack) < 6:
+                cm = tr.span(f"s{i}")
+                cm.__enter__()
+                stack.append(cm)
+        while stack:
+            stack.pop().__exit__(None, None, None)
+        assert tr._depth == 0
+        spans = tr.spans
+        assert all(s["ok"] for s in spans)
+        for i, a in enumerate(spans):
+            assert a["t_mono1"] >= a["t_mono0"]
+            for b in spans[i + 1:]:
+                disjoint = (a["t_mono1"] <= b["t_mono0"]
+                            or b["t_mono1"] <= a["t_mono0"])
+                a_in_b = (b["t_mono0"] <= a["t_mono0"]
+                          and a["t_mono1"] <= b["t_mono1"]
+                          and a["depth"] > b["depth"])
+                b_in_a = (a["t_mono0"] <= b["t_mono0"]
+                          and b["t_mono1"] <= a["t_mono1"]
+                          and b["depth"] > a["depth"])
+                assert disjoint or a_in_b or b_in_a, (a, b)
+                if a["depth"] == b["depth"]:
+                    assert disjoint, (a, b)
