@@ -21,6 +21,15 @@ schema — per-step ``step`` events carrying ``v_l1`` (and the running
 variance ratio) plus a ``transition`` event where the rule fires — so
 this benchmark's Fig. 2 curve and a live ``launch.train --telemetry``
 run fold through the SAME ``repro.obs.report`` path.
+
+``--segments N`` additionally splits the quadratic's ``v`` into N
+contiguous segments and emits per-step ``fidelity`` events (per-segment
+``v_l1_seg`` and the Delta-lagged ``v_drift`` ratios) — the Fig. 2
+curve at segment granularity, through the same event kind the
+``launch.train --audit`` probe uses, so ``repro.obs.report`` renders
+both identically.  ``--ledger PATH`` writes the result (including the
+late per-segment drift extrema as ``fidelity_*`` metrics) as a
+``BENCH_`` perf-ledger record for ``results/bench_compare.py``.
 """
 from __future__ import annotations
 
@@ -63,7 +72,7 @@ def _observe(sink, mon: VarianceMonitor, t: int, v: float,
 
 
 def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30,
-                     sink=NullSink()):
+                     sink=NullSink(), segments=0):
     rng = np.random.default_rng(0)
     a = jnp.asarray(rng.uniform(0.5, 5.0, (d,)).astype(np.float32))
     t_star = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
@@ -73,22 +82,52 @@ def _quadratic_phase(steps=400, d=1024, b2=0.97, lr_warmup=30,
     mon = VarianceMonitor(b2=b2, threshold=0.96, lr_warmup_steps=lr_warmup)
     key = jax.random.PRNGKey(0)
     v_hist, freeze_at = [], None
+    # --segments: contiguous splits of v (stand-ins for param leaves)
+    seg_off = (np.cumsum([0] + [s.size for s in
+                                np.array_split(np.arange(d), segments)])
+               if segments > 0 else None)
+    v_seg_hist = []
+    delta = mon.delta
     for t in range(steps):
         key, k = jax.random.split(key)
         g = a * (x - t_star) + 0.3 * jax.random.normal(k, (d,))
         lr = 5e-2 * min((t + 1) / lr_warmup, 1.0)
         x, st = adam_update(g, st, x, cfg, lr)
-        v = float(jnp.sum(jnp.abs(st.v)))
+        v_abs = jnp.abs(st.v)
+        v = float(jnp.sum(v_abs))
         v_hist.append(v)
+        if segments > 0:
+            va = np.asarray(v_abs)
+            v_seg = [float(va[seg_off[i]:seg_off[i + 1]].sum())
+                     for i in range(segments)]
+            v_seg_hist.append(v_seg)
+            fields = {"v_l1_seg": v_seg, "stage": "quadratic",
+                      "source": "benchmarks/variance_stability"}
+            if t >= delta:
+                prev = v_seg_hist[t - delta]
+                fields["v_drift"] = [s / p if p > 0 else 1.0
+                                     for s, p in zip(v_seg, prev)]
+                if v_hist[t - delta] > 0:
+                    fields["v_ratio"] = v / v_hist[t - delta]
+            sink.emit("fidelity", step=t, n_segments=segments, **fields)
         if _observe(sink, mon, t, v, "quadratic") and freeze_at is None:
             freeze_at = t
-    delta = mon.delta
-    return {
+    out = {
         "freeze_step": freeze_at,
         "ratio_early": v_hist[lr_warmup + delta] / v_hist[lr_warmup],
         "ratio_late": v_hist[-1] / v_hist[-1 - delta],
         "delta": delta, "lr_warmup": lr_warmup,
     }
+    if segments > 0:
+        late = [s / p if p > 0 else 1.0 for s, p in
+                zip(v_seg_hist[-1], v_seg_hist[-1 - delta])]
+        out["n_segments"] = segments
+        # per-segment version of ratio_late: EVERY segment's variance
+        # must have stabilised, not just the fused sum (a drifting small
+        # layer can hide inside a stable total)
+        out["seg_drift_late_max"] = max(late)
+        out["seg_drift_late_min"] = min(late)
+    return out
 
 
 def _system_phase(steps=80, b2=0.97, lr_warmup=15, sink=NullSink()):
@@ -114,12 +153,13 @@ def _system_phase(steps=80, b2=0.97, lr_warmup=15, sink=NullSink()):
     return {"freeze_step": freeze_at, "lr_warmup": lr_warmup}
 
 
-def run(verbose: bool = True, telemetry=None):
+def run(verbose: bool = True, telemetry=None, segments: int = 0,
+        ledger=None):
     with as_sink(telemetry, filename="variance_stability.jsonl") as sink:
         sink.emit("run_meta", optimizer="adam", compressor="none",
                   topology="flat", n_buckets=1,
                   source="benchmarks/variance_stability")
-        quad = _quadratic_phase(sink=sink)
+        quad = _quadratic_phase(sink=sink, segments=segments)
         sys_ = _system_phase(sink=sink)
     if telemetry and verbose:
         print(f"telemetry: {sink.n_events} events -> {sink.path}")
@@ -133,6 +173,34 @@ def run(verbose: bool = True, telemetry=None):
               and sys_["freeze_step"] >= sys_["lr_warmup"])
     results["mechanism_ok"] = ok_mech
     results["system_wiring_ok"] = ok_sys
+    if ledger:
+        from repro.obs.bench import bench_record, write_ledger
+        metrics = {
+            "freeze_step": float(quad["freeze_step"]
+                                 if quad["freeze_step"] is not None
+                                 else -1),
+            "ratio_early": float(quad["ratio_early"]),
+            "ratio_late": float(quad["ratio_late"]),
+            "system_freeze_step": float(sys_["freeze_step"]
+                                        if sys_["freeze_step"] is not None
+                                        else -1),
+        }
+        if segments > 0:
+            # fidelity_* prefix: bench_compare treats drift in these as
+            # STRUCTURAL (seeded deterministic math, not timing noise)
+            metrics["fidelity_n_segments"] = float(segments)
+            metrics["fidelity_seg_drift_late_max"] = \
+                float(quad["seg_drift_late_max"])
+            metrics["fidelity_seg_drift_late_min"] = \
+                float(quad["seg_drift_late_min"])
+        rec = bench_record("variance_stability", config="quadratic",
+                           mesh=[1], pipeline=1, kernels=False,
+                           metrics=metrics)
+        write_ledger(ledger, [rec],
+                     meta={"source": "benchmarks/variance_stability",
+                           "segments": segments})
+        if verbose:
+            print(f"ledger -> {ledger}")
     if verbose:
         print("== variance_stability (Fig. 2 / auto-warmup rule) ==")
         for k, v in results.items():
@@ -150,4 +218,12 @@ if __name__ == "__main__":
                     help="emit the repro.obs event schema to "
                          "DIR/variance_stability.jsonl (fold with "
                          "python -m repro.obs.report)")
-    run(telemetry=ap.parse_args().telemetry)
+    ap.add_argument("--segments", type=int, default=0,
+                    help="also emit per-segment Fig. 2 curves as "
+                         "fidelity events (N contiguous splits of v)")
+    ap.add_argument("--ledger", default=None, metavar="PATH",
+                    help="write a BENCH perf-ledger record of the "
+                         "result (results/bench_compare.py gates on it)")
+    _args = ap.parse_args()
+    run(telemetry=_args.telemetry, segments=_args.segments,
+        ledger=_args.ledger)

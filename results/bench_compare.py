@@ -13,14 +13,19 @@ flags, or ``benchmarks/run.py --json``).  Records pair up on their
 Two failure classes, deliberately separated:
 
   * **structural** (exit 1) — a baseline cell or metric missing from
-    the current ledger, an unreadable/invalid ledger, or an
-    observability collapse: ``attributed_fraction`` below
+    the current ledger (this covers a ``fidelity_*`` metric vanishing:
+    the audit machinery broke), an unreadable/invalid ledger, an
+    observability collapse (``attributed_fraction`` below
     ``--min-attributed`` or ``overlap_efficiency`` below
-    ``--min-overlap`` when the baseline had them healthy.  These mean
-    the measurement machinery broke, not that the machine was slow.
-  * **timing drift** (WARN, exit 0) — a shared numeric metric outside
-    the generous ``--rtol`` relative band.  CI machines are noisy;
-    wall-clock regressions are reported, never gating.
+    ``--min-overlap`` when the baseline had them healthy), or a
+    ``fidelity_``-prefixed metric outside the ``--rtol`` band —
+    fidelity metrics come from seeded deterministic math
+    (``benchmarks/variance_stability.py --segments``), so drift there
+    is a semantic change, never CI noise.  These mean the measurement
+    machinery broke, not that the machine was slow.
+  * **timing drift** (WARN, exit 0) — any other shared numeric metric
+    outside the generous ``--rtol`` relative band.  CI machines are
+    noisy; wall-clock regressions are reported, never gating.
 
 New cells/metrics in the current ledger are informational only.
 """
@@ -38,6 +43,10 @@ from repro.obs.events import bench_key  # noqa: E402
 # phrase the WARN line, never to gate
 _LOWER_IS_BETTER = {"s_per_step", "t_window", "t_residual", "t_comm",
                     "allreduce_ms", "onebit_ms"}
+
+# deterministic (seeded-math) metric prefixes: out-of-band drift is a
+# STRUCTURAL failure, not a timing warning
+_STRUCTURAL_PREFIXES = ("fidelity_",)
 
 
 def _by_key(payload: dict) -> dict:
@@ -79,6 +88,12 @@ def compare(baseline: dict, current: dict, rtol: float = 0.5,
             denom = max(abs(b), 1e-12)
             rel = (c - b) / denom
             if abs(rel) > rtol:
+                if name.startswith(_STRUCTURAL_PREFIXES):
+                    failures.append(
+                        f"{label}: {name} {b:.6g} -> {c:.6g} "
+                        f"({rel:+.0%}): fidelity metrics are seeded "
+                        "deterministic math — drift is structural")
+                    continue
                 direction = ("slower" if (rel > 0) ==
                              (name in _LOWER_IS_BETTER) else "faster")
                 warnings.append(

@@ -23,6 +23,17 @@ cost-model drift monitor.  Fold the log with
 ``python -m repro.obs.report DIR/telemetry.jsonl``.  The layer is
 zero-cost when off (NullSink + disabled tracing + async metric parking).
 
+``--audit on`` (with ``--telemetry``) turns on the per-segment
+compression-fidelity & frozen-variance audit (:mod:`repro.obs.audit`):
+every ``--audit-every``-th compression-stage step additionally runs a
+SEPARATE jitted probe on the same batch — shadow variance EMA vs the
+frozen ``v`` per segment, cosine/sign fidelity of the compressed
+momentum, EF-residual mass — emitting ``fidelity`` events plus host
+``health`` verdicts (variance drift, EF blow-up, non-finite stats,
+loss spikes).  The probe never touches the train step's compiled
+program: audit on vs off is telemetry-neutral (same collective
+signature, bitwise losses; pinned in tests/test_audit.py).
+
 ``--profile DIR`` captures a ``jax.profiler`` trace of the last
 ``--profile-steps`` steady-state steps and folds it back onto the plan
 grid (:mod:`repro.obs.profile`): every executor collective attributed
@@ -37,6 +48,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import os
 import time
 from typing import Optional
@@ -50,7 +62,9 @@ from repro.configs.base import InputShape
 from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
-from repro.obs import MetricBuffer, Tracer, as_sink, set_tracing
+from repro.obs import (AUDIT_MODES, FiniteGuard, HealthMonitor,
+                       MetricBuffer, Tracer, as_sink, make_audit_probe,
+                       set_tracing)
 from repro.optim import WarmupSwitch, list_compressors, list_optimizers
 from repro.state import load_train_state, save_train_state
 from repro.train.step import (TrainStepConfig, _flat_dim, init_train_state,
@@ -338,7 +352,9 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         cluster: str = "ethernet-10g", pipeline=None, kernels=None,
         device: str = "tpu-v5e", telemetry: Optional[str] = None,
         drift_probe: bool = False, profile: Optional[str] = None,
-        profile_steps: int = 4, bench: Optional[str] = None):
+        profile_steps: int = 4, bench: Optional[str] = None,
+        audit: str = "off", audit_every: int = 10):
+    assert audit in AUDIT_MODES, audit
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -452,6 +468,7 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                   mesh=[int(s) for s in mesh_shape], steps=steps,
                   block_size=spec.block_size, cluster=cluster,
                   device=device, seed=seed, recipe=recipe,
+                  audit=audit, audit_every=int(audit_every),
                   source="launch.train")
         emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology,
                             n_buckets, spec.block_size, cluster, device,
@@ -463,6 +480,12 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         sink.emit("warning", what="non-finite v_l1", step=wstep,
                   detail=detail)
 
+    def on_bad_stat(wstep: int, key: str, value: float) -> None:
+        print(f"[warn] step {wstep}: non-finite {key} ({value}) dropped "
+              f"from the step record")
+        sink.emit("warning", what=f"non-finite {key}", step=wstep,
+                  detail=f"{key}={value} rejected by FiniteGuard")
+
     was_compressed = False
     prev_sync = True
     comp_step = 0  # compression-stage step index (drives sync_due)
@@ -470,15 +493,58 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
     mbuf = MetricBuffer()
     pending = {}   # step -> (stage, sync), until the batched drain
 
+    # --- per-segment fidelity audit (repro.obs.audit) --------------------
+    audit_on = audit == "on"
+    guard = FiniteGuard()          # non-finite stats: drop, count, warn
+    health = HealthMonitor()
+    abuf = MetricBuffer() if audit_on else None
+    audit_probe = None             # built lazily at the first audited step
+    shadow_v = None                # shadow variance EMA, seeded from live v
+    audit_idx = 0                  # compression-stage steps seen
+
+    def _emit_audit(s: int, fid: dict) -> None:
+        """One audited step: host extrema + the fidelity event, then the
+        HealthMonitor's verdicts."""
+        def finite(xs):
+            return [x for x in xs if math.isfinite(x)] \
+                if isinstance(xs, list) else []
+        drift, cos, sign = (finite(fid.get(k)) for k in
+                            ("v_drift", "cos_sim", "sign_agree"))
+        extra = {}
+        if drift:
+            extra["v_drift_max"] = max(drift)
+            extra["v_drift_min"] = min(drift)
+        if cos:
+            extra["cos_sim_min"] = min(cos)
+        if sign:
+            extra["sign_agree_min"] = min(sign)
+        n_seg = fid.get("cos_sim")
+        n_seg = len(n_seg) if isinstance(n_seg, list) else 1
+        sink.emit("fidelity", step=s, n_segments=n_seg,
+                  stage="compressed", source="launch.train",
+                  **fid, **extra)
+        hfields, warns = health.observe(s, fid)
+        sink.emit("health", **hfields)
+        for w in warns:
+            print(f"[health] step {s}: {w['what']} — {w['detail']}")
+            sink.emit("warning", **w)
+
     def drain():
         """Materialise every parked step's metrics in ONE device_get and
-        fold them into history + step events, in step order."""
+        fold them into history + step events, in step order (non-finite
+        optimizer stats are dropped + warned, not recorded); then fold
+        the audited steps' fidelity stats into fidelity/health events."""
         for s, m in mbuf.drain():
             st_stage, st_sync = pending.pop(s)
+            m = guard.filter(s, m, on_reject=on_bad_stat)
             rec = {"step": s, "stage": st_stage, "sync": st_sync,
                    "optimizer": optim.name, **m}
             history.append(rec)
             sink.emit("step", **rec)
+            health.observe_loss(s, m.get("loss"))
+        if abuf is not None:
+            for s, fid in abuf.drain():
+                _emit_audit(s, fid)
 
     t_start = time.time()
     win_t0, win_step0 = t_start, start_step
@@ -525,6 +591,22 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                     comp_step += 1
             batch_data = stream.batch_at(step)
             lr = jnp.float32(lr_schedule(step, base_lr, lr_warmup))
+            if audit_on and stage == "compressed":
+                if audit_idx % max(audit_every, 1) == 0:
+                    if audit_probe is None:
+                        # its OWN jitted program — the train step's
+                        # compiled HLO is untouched (neutrality pinned
+                        # in tests/test_audit.py)
+                        audit_probe = make_audit_probe(
+                            cfg, mesh, dataclasses.replace(
+                                base_tsc, stage="compressed"))
+                        shadow_v = opt["v"]   # seed the shadow EMA
+                    # probe BEFORE the step: audits exactly the
+                    # (params, state, batch) this step consumes
+                    shadow_v, astats = audit_probe(params, opt,
+                                                   shadow_v, batch_data)
+                    abuf.push(step, astats)
+                audit_idx += 1
             params, opt, metrics = get_step(stage, sync)(params, opt,
                                                          batch_data, lr)
             # park the device metrics — async dispatch, no host sync;
@@ -601,6 +683,11 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         sink.close()
     if sink.enabled:
         print(f"telemetry: {sink.n_events} events -> {sink.path}")
+    if audit_on and health.n_checked:
+        print(f"audit: {health.n_checked} health check(s), "
+              f"{health.n_failed} failed"
+              + (f"; {guard.n_rejected} non-finite stat(s) dropped"
+                 if guard.n_rejected else ""))
     if log_file:
         with open(log_file, "w") as f:
             json.dump(history, f)
@@ -668,6 +755,15 @@ def main(argv=None):
                          "summarize with python -m repro.obs.report")
     ap.add_argument("--log-every", type=int, default=10,
                     help="print + drain buffered metrics every N steps")
+    ap.add_argument("--audit", default="off", choices=["off", "on"],
+                    help="per-segment compression-fidelity & frozen-"
+                         "variance audit (repro.obs.audit): a separate "
+                         "jitted probe every --audit-every compression-"
+                         "stage steps emits fidelity events + host "
+                         "health verdicts; telemetry-neutral for the "
+                         "train step itself")
+    ap.add_argument("--audit-every", type=int, default=10,
+                    help="audit every N-th compression-stage step")
     ap.add_argument("--drift-probe", action="store_true",
                     help="with --telemetry: time each compressed-"
                          "exchange collective on the real mesh before "
@@ -698,7 +794,8 @@ def main(argv=None):
         device=args.device, telemetry=args.telemetry,
         drift_probe=args.drift_probe, log_every=args.log_every,
         profile=args.profile, profile_steps=args.profile_steps,
-        bench=args.bench)
+        bench=args.bench, audit=args.audit,
+        audit_every=args.audit_every)
 
 
 if __name__ == "__main__":

@@ -24,7 +24,13 @@ Four modules, one loop:
   * :mod:`repro.obs.bench` — the ``BENCH_<name>.json`` perf-ledger
     writer/reader (schema in :mod:`repro.obs.events`), the record
     stream ``results/bench_compare.py`` and the CI ``perf-ledger`` job
-    gate on.
+    gate on;
+  * :mod:`repro.obs.audit` — the per-segment compression-fidelity &
+    frozen-variance audit: :func:`make_audit_probe` (a separate jitted
+    probe emitting ``fidelity`` stats through the MetricBuffer path),
+    :class:`HealthMonitor` (host-side ``health`` verdicts), and
+    :class:`FiniteGuard` (non-finite stat rejection across every
+    ``STAT_KEYS`` entry).
 
 Submodule attributes resolve lazily (PEP 562): ``repro.obs.trace`` is
 imported by the executors on their hot path, and eagerly importing
@@ -61,6 +67,11 @@ _EXPORTS = {
     "hlo_scope_map": "repro.obs.profile",
     "overlap_audit": "repro.obs.profile",
     "parse_scope": "repro.obs.profile",
+    "AUDIT_MODES": "repro.obs.audit",
+    "FiniteGuard": "repro.obs.audit",
+    "HealthMonitor": "repro.obs.audit",
+    "make_audit_probe": "repro.obs.audit",
+    "HEALTH_VERDICTS": "repro.obs.events",
     "bench_record": "repro.obs.bench",
     "load_ledger": "repro.obs.bench",
     "records_from_result": "repro.obs.bench",
@@ -69,7 +80,7 @@ _EXPORTS = {
 }
 
 _SUBMODULES = ("events", "metrics", "trace", "drift", "report",
-               "profile", "bench")
+               "profile", "bench", "audit")
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 

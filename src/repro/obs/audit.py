@@ -1,0 +1,312 @@
+"""Per-segment compression-fidelity & frozen-variance health audit.
+
+1-bit Adam's correctness rests on one empirical claim: Adam's second
+moment stabilises after warmup and can be frozen as a fixed
+preconditioner (paper Sec. 7.1, Fig. 2).  The training loop checks that
+claim exactly once — at the stage switch, via a whole-model ``v_l1``
+ratio — and compression health is otherwise reduced to two scalar
+EF-residual norms.  This module makes the *training signal* observable
+per layer group, for the rest of the run:
+
+  * :func:`make_audit_probe` — a SEPARATE jitted shard_map fn (never
+    fused into the train step, so ``--audit on`` is telemetry-neutral
+    by construction) that recomputes the step's gradient on the same
+    batch and calls :meth:`TwoStageOptimizer.audit_stats`:
+
+      - **frozen-variance validity**: a shadow variance EMA advanced on
+        the dp-mean gradient every audited step, compared per segment
+        against the frozen ``v`` (L1 ratio; the paper's Fig. 2 quantity
+        at layer granularity);
+      - **compression fidelity**: per-segment cosine similarity and
+        sign agreement of the EF-compensated momentum vs its
+        decompressed wire image, plus per-segment worker/server
+        EF-residual mass.
+
+    Stats are produced on device and fetched through the existing
+    batched :class:`repro.obs.metrics.MetricBuffer` path.
+
+  * :class:`HealthMonitor` — host-side: folds each audited step's
+    fidelity stats plus the trailing loss window into a ``health``
+    verdict event (``variance_drift``, ``ef_blowup``, ``non_finite``,
+    ``loss_spike`` — see :data:`repro.obs.events.HEALTH_VERDICTS`).
+
+  * :class:`FiniteGuard` — the generalisation of the auto-switch's
+    non-finite ``v_l1`` guard to every :data:`repro.optim.STAT_KEYS`
+    entry: a NaN gradient norm is dropped from the step record, counted,
+    and surfaced as a ``warning`` event instead of flowing silently into
+    telemetry and the health verdicts.
+
+Wired as ``launch.train --audit {off,on} --audit-every N`` (off by
+default); ``repro.obs.report`` renders the audit section (per-segment
+table, worst-drift ranking, health timeline).  This is the measurement
+layer the adaptive per-segment compression follow-up (BytePS-Compress,
+arXiv:2105.07829) needs: per-segment fidelity is exactly the signal an
+adaptive compressor would gate on.
+"""
+from __future__ import annotations
+
+import math
+import statistics
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+AUDIT_MODES = ("off", "on")
+
+# HealthMonitor defaults: the variance-drift acceptance band (the
+# shadow/frozen per-segment L1 ratio must stay within [1/band, band]),
+# the per-audit EF-residual growth ceiling, and the loss-spike factor
+# over the trailing median
+DRIFT_BAND = 2.0
+ERR_GROWTH_MAX = 10.0
+LOSS_SPIKE_FACTOR = 3.0
+
+
+def make_audit_probe(cfg, mesh, tsc):
+    """Build the jitted per-segment audit probe for one training setup.
+
+    Returns ``probe(params, opt_state, shadow_v, batch) ->
+    (new_shadow_v, stats)`` mirroring :func:`make_train_step`'s
+    sharding exactly (same param/state/batch specs, same pod split),
+    but as its OWN jit: the train step's compiled program is untouched,
+    params and state are read-only, and the only state the probe
+    carries forward is the shadow variance EMA (seed it from the live
+    ``v`` at the first audited step).
+
+    ``stats`` values are replicated scalars / per-segment vectors
+    (``probe.stat_keys`` names them, in out-spec order) ready for
+    :class:`repro.obs.metrics.MetricBuffer`.
+    """
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.models import transformer as T
+    from repro.optim.base import AUDIT_SCALAR_KEYS, AUDIT_SEG_KEYS
+    from repro.state import StateTree
+    from repro.train.step import (_ctx, _flat_dim, _select, batch_specs,
+                                  flat_grads, mesh_axes, pod_split,
+                                  train_state_specs)
+
+    tsc = tsc.normalized()
+    assert tsc.layout in ("replicated", "local"), (
+        f"audit probe needs the full 'v' slot; layout {tsc.layout!r} "
+        "shards it (launch.train never selects zero1)")
+    optimizer = tsc.build_optimizer()
+    dp_axes, dp_sizes, tp = mesh_axes(mesh, tsc.model_axis)
+    n_dp = 1
+    for s in dp_sizes:
+        n_dp *= s
+    ctx = _ctx(mesh, tsc.model_axis)
+    tp_axes = (tsc.model_axis,) if tp > 1 else ()
+    pspecs = T.param_specs(cfg, tsc.model_axis, tp)
+    osp = train_state_specs(mesh, tsc.model_axis, tsc.layout, optimizer)
+    if tsc.topology == "hier" and len(dp_axes) > 1:
+        inner_axes, outer_axes, _, _ = pod_split(dp_axes, dp_sizes)
+    else:
+        inner_axes, outer_axes = dp_axes, ()
+    d_pad = _flat_dim(cfg, tp, n_dp, tsc.opt_block_size)
+    sv_spec = osp["v"]    # the shadow EMA lives in v's exact layout
+    stat_keys = tuple(AUDIT_SEG_KEYS) + tuple(AUDIT_SCALAR_KEYS) \
+        + tuple(optimizer.audit_extra_keys)
+
+    def probe(params, opt, shadow_v, batch):
+        g_flat, segs, _, _ = flat_grads(params, batch, cfg, ctx,
+                                        tsc.aux_weight, tsc.accum_steps,
+                                        d_pad)
+        st = StateTree({k: (v.reshape(-1) if v.ndim else v)
+                        for k, v in opt.items()})
+        new_sv, stats = optimizer.audit_stats(
+            g_flat, st, shadow_v.reshape(-1), dp_axes=inner_axes,
+            pod_axes=outer_axes, tp_axes=tp_axes, segs=segs)
+        return new_sv.reshape(shadow_v.shape), stats
+
+    _cache: Dict[frozenset, object] = {}
+
+    def build(batch_tree):
+        key = frozenset(batch_tree)
+        if key not in _cache:
+            bspec = _select(batch_specs(cfg, "train", dp_axes),
+                            batch_tree)
+            sspec = {k: P() for k in stat_keys}
+            mapped = shard_map(probe, mesh=mesh,
+                               in_specs=(pspecs, osp, sv_spec, bspec),
+                               out_specs=(sv_spec, sspec),
+                               check_vma=False)
+            _cache[key] = jax.jit(mapped)
+        return _cache[key]
+
+    def audit_probe(params, opt_state, shadow_v, batch):
+        return build(batch)(params, opt_state, shadow_v, batch)
+
+    audit_probe.build = build
+    audit_probe.stat_keys = stat_keys
+    audit_probe.optimizer = optimizer
+    return audit_probe
+
+
+# --------------------------------------------------------------------------
+# host-side folding
+# --------------------------------------------------------------------------
+
+def _finite(v) -> bool:
+    vals = v if isinstance(v, list) else [v]
+    return all(isinstance(x, (int, float)) and not isinstance(x, bool)
+               and math.isfinite(x) for x in vals)
+
+
+class HealthMonitor:
+    """Fold audited fidelity stats + the per-step loss stream into
+    ``health`` verdicts.
+
+    Feed every drained step's loss through :meth:`observe_loss`; feed
+    each audited step's host fidelity dict through :meth:`observe`,
+    which returns ``(health_event_fields, warning_event_fields_list)``.
+    Verdicts (:data:`repro.obs.events.HEALTH_VERDICTS`):
+
+      * ``non_finite``     — any fidelity stat is NaN/inf;
+      * ``variance_drift`` — a per-segment shadow/frozen L1 ratio left
+        ``[1/drift_band, drift_band]`` while the family reports the
+        variance as frozen (``v_live`` = 0; 0/1 Adam's live-refresh
+        phase is exempt);
+      * ``ef_blowup``      — worker/server EF-residual norm grew more
+        than ``err_growth_max`` x since the previous audit;
+      * ``loss_spike``     — the latest loss exceeds ``loss_spike`` x
+        the trailing-window median.
+    """
+
+    def __init__(self, drift_band: float = DRIFT_BAND,
+                 err_growth_max: float = ERR_GROWTH_MAX,
+                 loss_spike: float = LOSS_SPIKE_FACTOR,
+                 loss_window: int = 16):
+        assert drift_band > 1.0, drift_band
+        self.drift_band = float(drift_band)
+        self.err_growth_max = float(err_growth_max)
+        self.loss_spike = float(loss_spike)
+        self._losses: deque = deque(maxlen=max(int(loss_window), 4))
+        self._last_loss: Optional[Tuple[int, float]] = None
+        self._prev_err: Optional[Tuple[float, float]] = None
+        self.n_checked = 0
+        self.n_failed = 0
+
+    def observe_loss(self, step: int, loss) -> None:
+        """Record one step's loss (non-finite values are ignored — the
+        FiniteGuard/warning path owns those)."""
+        if isinstance(loss, (int, float)) and math.isfinite(loss):
+            self._losses.append(float(loss))
+            self._last_loss = (int(step), float(loss))
+
+    def observe(self, step: int, fid: Dict[str, object]
+                ) -> Tuple[dict, List[dict]]:
+        """One audited step's host fidelity stats -> the ``health``
+        event fields plus one ``warning`` event's fields per verdict."""
+        verdicts: List[str] = []
+        details: List[str] = []
+
+        bad = sorted(k for k, v in fid.items()
+                     if isinstance(v, (int, float, list))
+                     and not isinstance(v, bool) and not _finite(v))
+        if bad:
+            verdicts.append("non_finite")
+            details.append("non-finite stats: " + ", ".join(bad))
+
+        drift = fid.get("v_drift")
+        drift = drift if isinstance(drift, list) else []
+        finite_drift = [x for x in drift if math.isfinite(x)]
+        v_drift_max = max(finite_drift) if finite_drift else None
+        live = isinstance(fid.get("v_live"), (int, float)) \
+            and fid["v_live"] >= 0.5
+        if finite_drift and not live:
+            lo, hi = 1.0 / self.drift_band, self.drift_band
+            out = [i for i, x in enumerate(drift)
+                   if math.isfinite(x) and not lo <= x <= hi]
+            if out:
+                verdicts.append("variance_drift")
+                worst = sorted(
+                    out, reverse=True,
+                    key=lambda i: abs(math.log(max(drift[i], 1e-30))))
+                details.append(
+                    f"frozen-v drift outside [{lo:.3g}, {hi:.3g}] in "
+                    f"{len(out)} segment(s); worst " + " ".join(
+                        f"{i}:{drift[i]:.3g}" for i in worst[:3]))
+
+        err_growth = None
+        wn, sn = fid.get("worker_err_norm"), fid.get("server_err_norm")
+        if self._prev_err is not None:
+            ratios = [c / p for c, p in zip((wn, sn), self._prev_err)
+                      if isinstance(c, (int, float)) and math.isfinite(c)
+                      and p and p > 0.0]
+            if ratios:
+                err_growth = max(ratios)
+                if err_growth > self.err_growth_max:
+                    verdicts.append("ef_blowup")
+                    details.append(
+                        f"EF residual grew {err_growth:.3g}x since the "
+                        f"last audit (> {self.err_growth_max:g}x)")
+        if isinstance(wn, (int, float)) and math.isfinite(wn):
+            self._prev_err = (float(wn),
+                              float(sn) if isinstance(sn, (int, float))
+                              and math.isfinite(sn) else 0.0)
+
+        loss = loss_median = None
+        if self._last_loss is not None and len(self._losses) >= 4:
+            loss = self._last_loss[1]
+            trailing = list(self._losses)[:-1]   # median EXCLUDES the
+            loss_median = statistics.median(trailing)  # loss it judges
+            if loss_median > 0.0 and loss > self.loss_spike * loss_median:
+                verdicts.append("loss_spike")
+                details.append(
+                    f"loss {loss:.4g} > {self.loss_spike:g}x trailing "
+                    f"median {loss_median:.4g}")
+
+        ok = not verdicts
+        self.n_checked += 1
+        self.n_failed += 0 if ok else 1
+        fields: Dict[str, object] = {
+            "step": int(step), "ok": ok, "verdicts": verdicts,
+            "source": "repro.obs.audit"}
+        for k, v in (("v_ratio", fid.get("v_ratio")),
+                     ("v_drift_max", v_drift_max),
+                     ("err_growth", err_growth),
+                     ("loss", loss), ("loss_median", loss_median)):
+            if isinstance(v, (int, float)) and not isinstance(v, bool):
+                fields[k] = float(v)
+        if details:
+            fields["detail"] = "; ".join(details)
+        warns = [{"what": f"audit.{v}", "step": int(step),
+                  "detail": "; ".join(details)} for v in verdicts]
+        return fields, warns
+
+
+class FiniteGuard:
+    """Reject non-finite optimizer stats from host step records.
+
+    The auto-switch already rejects a non-finite ``v_l1``
+    (:class:`repro.core.variance.VarianceMonitor`); everything else in
+    :data:`repro.optim.STAT_KEYS` used to flow silently into telemetry.
+    :meth:`filter` returns the record with offending keys DROPPED (an
+    absent metric is honest; a recorded NaN poisons every downstream
+    fold), counts rejections per key, and calls ``on_reject(step, key,
+    value)`` so the driver can emit the ``warning`` event."""
+
+    def __init__(self, keys: Optional[Tuple[str, ...]] = None):
+        if keys is None:
+            from repro.optim.base import STAT_KEYS
+            keys = STAT_KEYS
+        self.keys = tuple(keys)
+        self.n_rejected = 0
+        self.rejected: Dict[str, int] = {}
+
+    def filter(self, step: int, rec: Dict[str, object],
+               on_reject: Optional[Callable[[int, str, float], None]]
+               = None) -> Dict[str, object]:
+        clean = dict(rec)
+        for k in self.keys:
+            v = clean.get(k)
+            if isinstance(v, (int, float)) and not isinstance(v, bool) \
+                    and not math.isfinite(v):
+                del clean[k]
+                self.n_rejected += 1
+                self.rejected[k] = self.rejected.get(k, 0) + 1
+                if on_reject is not None:
+                    on_reject(int(step), k, float(v))
+        return clean

@@ -42,6 +42,16 @@ Event kinds
                  (:mod:`repro.obs.profile`): measured wall clock,
                  attributed + residual split, per-stream overlap audit,
                  and the per-(plan, bucket, stage, kind, tier) cells.
+``fidelity``     one audited step of the per-segment training-signal
+                 probe (:mod:`repro.obs.audit`): shadow-vs-frozen
+                 variance drift, compressed-vs-raw cosine similarity
+                 and sign agreement, EF-residual mass — each a
+                 per-segment list plus whole-model scalars.
+``health``       the :class:`repro.obs.audit.HealthMonitor` verdict
+                 folded from one ``fidelity`` record + the trailing
+                 loss window: ``ok`` or a list of named verdicts
+                 (``variance_drift``, ``ef_blowup``, ``non_finite``,
+                 ``loss_spike``).
 
 Besides the JSONL event stream, this module also owns the **perf-ledger
 record schema** (``BENCH_*.json`` files — :mod:`repro.obs.bench` reads
@@ -147,10 +157,34 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
         {"path": "str", "intra": "dict", "cross": "dict",
          "reason": "str", "n_inner": "int", "n_outer": "int"},
     ),
+    "fidelity": (
+        {"step": "int", "n_segments": "int"},
+        # per-segment lists (length n_segments, padding tail included)
+        {"cos_sim": "list", "sign_agree": "list", "v_drift": "list",
+         "v_l1_seg": "list", "worker_err_seg": "list",
+         "server_err_seg": "list", "scale_seg": "list",
+         # whole-model scalars + host-folded extrema of the lists
+         "v_ratio": "num", "v_drift_max": "num", "v_drift_min": "num",
+         "cos_sim_min": "num", "sign_agree_min": "num",
+         "grad_norm": "num", "momentum_norm": "num",
+         "worker_err_norm": "num", "server_err_norm": "num",
+         "v_live": "num", "stage": "str", "source": "str"},
+    ),
+    "health": (
+        {"step": "int", "ok": "bool"},
+        {"verdicts": "list", "v_ratio": "num", "v_drift_max": "num",
+         "err_growth": "num", "loss": "num", "loss_median": "num",
+         "detail": "str", "source": "str"},
+    ),
 }
 
 # transition kinds (the ``kind`` field of a "transition" event)
 TRANSITION_KINDS = ("stage", "sync")
+
+# the verdict names a "health" event's ``verdicts`` list may carry
+# (repro.obs.audit.HealthMonitor emits them)
+HEALTH_VERDICTS = ("variance_drift", "ef_blowup", "non_finite",
+                   "loss_spike")
 
 
 def validate_event(rec: dict) -> dict:

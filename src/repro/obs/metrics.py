@@ -108,7 +108,10 @@ class MetricBuffer:
     ``push`` never blocks (arrays are async futures); ``host(step)``
     materialises one step with a single batched ``jax.device_get``;
     ``drain()`` materialises everything still parked in one call and
-    returns ``(step, {name: float})`` pairs in step order.
+    returns ``(step, {name: float})`` pairs in step order.  Rank-0
+    metrics come back as plain floats; rank>=1 metrics (the per-segment
+    audit vectors of :mod:`repro.obs.audit`) as flat lists of floats, so
+    every drained record is JSON-ready for the event schema.
     """
 
     def __init__(self):
@@ -119,7 +122,13 @@ class MetricBuffer:
         self._pending[int(step)] = dict(metrics)
 
     def _to_floats(self, fetched: dict) -> Dict[str, float]:
-        return {k: float(v) for k, v in fetched.items()}
+        import numpy as np
+        out = {}
+        for k, v in fetched.items():
+            arr = np.asarray(v)
+            out[k] = ([float(x) for x in arr.ravel()] if arr.ndim
+                      else float(arr))
+        return out
 
     def host(self, step: int) -> Dict[str, float]:
         """Host floats for ``step`` — one batched transfer, cached."""

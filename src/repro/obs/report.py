@@ -23,6 +23,13 @@ folds through here.  Sections (each skipped when its events are absent):
     s/step, comm fraction, overlap efficiency, the attributed-vs-
     residual wall-clock split, per-stream hidden/exposed time against
     the predicted schedule, and the per-grid-cell measured times;
+  * **audit** — the per-segment compression-fidelity audit
+    (``launch.train --audit on``, :mod:`repro.obs.audit`): audited-step
+    count, the last audit's headline scalars, the per-segment table
+    (cosine/sign fidelity, shadow-vs-frozen variance drift, EF-residual
+    mass), and the worst-drifting segments ranked by ``|log(drift)|``;
+  * **health** — the HealthMonitor's verdict timeline (ok/failed per
+    audited step, which verdicts fired);
   * **warnings** — host-side anomalies (e.g. non-finite variance).
 
 CLI (the CI smoke job runs this over a real training log)::
@@ -32,13 +39,15 @@ CLI (the CI smoke job runs this over a real training log)::
     python -m repro.obs.report run_a.jsonl --diff run_b.jsonl
 
 ``--diff`` prints the two runs side by side — steps/s, per-tier plan
-bytes, drift verdicts — the manual counterpart of the CI perf-ledger
-gate (``results/bench_compare.py``).
+bytes, drift verdicts, audit fidelity headlines and health failures —
+the manual counterpart of the CI perf-ledger gate
+(``results/bench_compare.py``).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 from typing import Dict, List, Optional
 
 from repro.obs.events import validate_records
@@ -177,6 +186,49 @@ def summarize(records: List[dict]) -> Dict[str, object]:
         out["recalibration"] = [{k: v for k, v in r.items()
                                  if k not in ("type", "t")} for r in recal]
 
+    fidelity = by.get("fidelity", [])
+    if fidelity:
+        fidelity = sorted(fidelity, key=lambda r: r["step"])
+        last = fidelity[-1]
+        sec = {"n_audits": len(fidelity),
+               "first_step": fidelity[0]["step"],
+               "last_step": last["step"]}
+        for k in ("v_ratio", "v_drift_max", "cos_sim_min",
+                  "sign_agree_min"):
+            if k in last:
+                sec[f"{k}_last"] = last[k]
+        n_seg = last.get("n_segments", 0)
+        seg_cols = ("cos_sim", "sign_agree", "v_drift", "v_l1_seg",
+                    "worker_err_seg", "server_err_seg", "scale_seg")
+        present = [k for k in seg_cols
+                   if isinstance(last.get(k), list)
+                   and len(last[k]) == n_seg]
+        if present and n_seg:
+            sec["segments"] = [
+                {"seg": i, **{k: last[k][i] for k in present}}
+                for i in range(n_seg)]
+            drift = last.get("v_drift")
+            if isinstance(drift, list) and len(drift) == n_seg:
+                ranked = sorted(
+                    (i for i in range(n_seg)
+                     if math.isfinite(drift[i])),
+                    key=lambda i: abs(math.log(max(drift[i], 1e-30))),
+                    reverse=True)
+                sec["worst_drift"] = [{"seg": i, "v_drift": drift[i]}
+                                      for i in ranked[:5]]
+        out["audit"] = sec
+
+    healths = by.get("health", [])
+    if healths:
+        healths = sorted(healths, key=lambda r: r["step"])
+        failed = [r for r in healths if not r.get("ok", True)]
+        out["health"] = {
+            "n_checks": len(healths), "n_failed": len(failed),
+            "timeline": [{"step": r["step"], "ok": r.get("ok", True),
+                          "verdicts": ",".join(r.get("verdicts") or [])
+                          or "-"}
+                         for r in healths]}
+
     warnings = by.get("warning", [])
     if warnings:
         out["warnings"] = [{k: v for k, v in r.items()
@@ -276,6 +328,30 @@ def format_report(summary: Dict[str, object]) -> str:
         for r in summary["recalibration"]:
             lines += [f"  {k}: {_fmt(v) if not isinstance(v, dict) else v}"
                       for k, v in r.items()]
+    if "audit" in summary:
+        head("compression-fidelity audit")
+        au = summary["audit"]
+        lines += [f"  {k}: {_fmt(v)}" for k, v in au.items()
+                  if k not in ("segments", "worst_drift")]
+        if "segments" in au:
+            lines.append("  per-segment (last audit):")
+            cols = ["seg"] + [c for c in
+                              ("cos_sim", "sign_agree", "v_drift",
+                               "v_l1_seg", "worker_err_seg",
+                               "server_err_seg", "scale_seg")
+                              if c in au["segments"][0]]
+            lines += ["    " + ln for ln in _table(au["segments"], cols)]
+        if "worst_drift" in au:
+            lines.append("  worst drift: " + " ".join(
+                f"seg{r['seg']}:{_fmt(r['v_drift'])}"
+                for r in au["worst_drift"]))
+    if "health" in summary:
+        head("health timeline")
+        h = summary["health"]
+        lines.append(f"  checks: {h['n_checks']}  "
+                     f"failed: {h['n_failed']}")
+        lines += ["  " + ln for ln in _table(
+            h["timeline"], ["step", "ok", "verdicts"])]
     if "warnings" in summary:
         head("warnings")
         lines += [f"  {w}" for w in summary["warnings"]]
@@ -321,6 +397,16 @@ def _diff_rows(a: Dict[str, object], b: Dict[str, object]) -> List[dict]:
     db = b.get("drifting", [])
     if "drift" in a or "drift" in b:
         row("drifting", ",".join(da) or "none", ",".join(db) or "none")
+    if "audit" in a or "audit" in b:
+        for field in ("v_ratio_last", "v_drift_max_last",
+                      "cos_sim_min_last", "sign_agree_min_last"):
+            va = (a.get("audit") or {}).get(field)
+            vb = (b.get("audit") or {}).get(field)
+            if va is not None or vb is not None:
+                row(f"audit.{field}", va, vb)
+    if "health" in a or "health" in b:
+        row("health.failed", (a.get("health") or {}).get("n_failed"),
+            (b.get("health") or {}).get("n_failed"))
     return rows
 
 

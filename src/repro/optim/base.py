@@ -67,6 +67,16 @@ LAYOUTS = ("replicated", "local", "zero1")
 STAT_KEYS = ("v_l1", "grad_norm", "momentum_norm", "worker_err_norm",
              "server_err_norm")
 
+# the audit probe's stat set (repro.obs.audit): per-segment vectors of
+# length SegmentInfo.n, then whole-model scalars.  Fixed lists for the
+# same reason as STAT_KEYS — the probe's shard_map out-specs and the
+# ``fidelity`` event schema are derived from them; optimizers may append
+# per-family extras via ``audit_extra_keys`` / ``_audit_extra``.
+AUDIT_SEG_KEYS = ("cos_sim", "sign_agree", "v_drift", "v_l1_seg",
+                  "worker_err_seg", "server_err_seg")
+AUDIT_SCALAR_KEYS = ("v_ratio", "grad_norm", "momentum_norm",
+                     "worker_err_norm", "server_err_norm", "v_live")
+
 
 @dataclasses.dataclass(frozen=True)
 class SegmentInfo:
@@ -118,6 +128,51 @@ def segment_norms(x: jax.Array, seg_ids: jax.Array, n_segments: int,
     if axes:
         sq = jax.lax.psum(sq, tuple(axes))
     return jnp.sqrt(sq)
+
+
+def segment_l1(x: jax.Array, seg_ids: jax.Array, n_segments: int,
+               axes: Sequence[str] = ()) -> jax.Array:
+    """Per-segment L1 mass (the per-layer slice of the paper's fused
+    ``||v||_1``); partial sums are psummed over ``axes`` so sharded
+    vectors get the global value."""
+    s = jax.ops.segment_sum(jnp.abs(x), seg_ids, num_segments=n_segments)
+    if axes:
+        s = jax.lax.psum(s, tuple(axes))
+    return s
+
+
+def segment_cosine(a: jax.Array, b: jax.Array, seg_ids: jax.Array,
+                   n_segments: int, axes: Sequence[str] = ()
+                   ) -> jax.Array:
+    """Per-segment cosine similarity ``<a,b> / (||a|| ||b||)``; the
+    three inner products are psummed over ``axes`` before the division,
+    so sharded vectors get the global similarity.  Segments where either
+    side is all-zero report 1.0 (nothing was lost)."""
+    def seg(x):
+        return jax.ops.segment_sum(x, seg_ids, num_segments=n_segments)
+    dots, na, nb = seg(a * b), seg(jnp.square(a)), seg(jnp.square(b))
+    if axes:
+        ax = tuple(axes)
+        dots, na, nb = (jax.lax.psum(s, ax) for s in (dots, na, nb))
+    denom = jnp.sqrt(na * nb)
+    return jnp.where(denom > 0.0, dots / jnp.maximum(denom, 1e-30), 1.0)
+
+
+def segment_sign_agreement(a: jax.Array, b: jax.Array,
+                           seg_ids: jax.Array, n_segments: int,
+                           axes: Sequence[str] = ()) -> jax.Array:
+    """Per-segment fraction of coordinates where ``sign(a) == sign(b)``
+    (the quantity 1-bit compression preserves by construction when EF is
+    healthy); counts are psummed over ``axes``.  Empty segments report
+    1.0."""
+    agree = (jnp.sign(a) == jnp.sign(b)).astype(jnp.float32)
+    num = jax.ops.segment_sum(agree, seg_ids, num_segments=n_segments)
+    cnt = jax.ops.segment_sum(jnp.ones_like(agree), seg_ids,
+                              num_segments=n_segments)
+    if axes:
+        ax = tuple(axes)
+        num, cnt = jax.lax.psum(num, ax), jax.lax.psum(cnt, ax)
+    return jnp.where(cnt > 0.0, num / jnp.maximum(cnt, 1.0), 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -246,6 +301,27 @@ class TwoStageOptimizer:
         """Host-side: must step ``step`` of the compression stage
         synchronise across dp? Default: every step (1-bit Adam)."""
         return True
+
+    # --- audit hooks (repro.obs.audit reads these) -------------------------
+    def _audit_extra(self, state: StateTree, seg_ids: jax.Array,
+                     n_segments: int, tp_axes: Tuple[str, ...]) -> dict:
+        """Per-family additions to :meth:`audit_stats` (keys must match
+        :attr:`audit_extra_keys` — the probe derives its static
+        out-specs from them).  Default: none."""
+        return {}
+
+    @property
+    def audit_extra_keys(self) -> Tuple[str, ...]:
+        """Names of the extra stats :meth:`_audit_extra` returns."""
+        return ()
+
+    def _audit_v_live(self, state: StateTree) -> jax.Array:
+        """1.0 while the compression-stage variance is still
+        legitimately updating (0/1 Adam's interval refresh), 0.0 once
+        frozen — the HealthMonitor suppresses the variance-drift
+        verdict while live, since drift is then expected, not a
+        violated assumption.  Default: frozen (Alg. 1)."""
+        return jnp.float32(0.0)
 
     def with_kernels(self, enabled: bool) -> "TwoStageOptimizer":
         """This optimizer with the fused Pallas paths toggled — the
@@ -449,6 +525,99 @@ class TwoStageOptimizer:
                             worker_err=errs["worker"],
                             server_err=errs["server"])
         return x_full, state._replace(**repl), stats
+
+    # --- audit probe (observation only; repro.obs.audit builds it) ---------
+    def audit_stats(self, g_local: jax.Array, state: StateTree,
+                    shadow_v: jax.Array, *,
+                    dp_axes: Sequence[str] = (),
+                    pod_axes: Sequence[str] = (),
+                    tp_axes: Sequence[str] = (),
+                    segs: Optional[SegmentInfo] = None,
+                    ) -> Tuple[jax.Array, dict]:
+        """Per-segment compression-fidelity and frozen-variance stats of
+        one WOULD-BE sync step — pure observation: the model state and
+        the EF residuals are read, never written, so the probe can run
+        as its own jitted fn without perturbing training (the
+        telemetry-neutrality pin relies on this).
+
+        Returns ``(new_shadow_v, stats)``:
+
+          * ``new_shadow_v`` — the shadow second-moment EMA advanced one
+            step on the dp-mean gradient: what ``v`` would be were it
+            not frozen (the paper's Sec. 7.1 / Fig. 2 quantity, here per
+            segment);
+          * ``stats`` — the :data:`AUDIT_SEG_KEYS` per-segment vectors,
+            the :data:`AUDIT_SCALAR_KEYS` scalars, and any
+            ``audit_extra_keys`` the family adds.
+
+        Fidelity is measured on EXACTLY what a sync step compresses:
+        the EF-compensated local momentum ``m_local + worker_err`` vs
+        its decompressed wire image.  Needs the full ``v`` slot, i.e.
+        the replicated/local layouts (``launch.train`` never selects
+        zero1, which shards ``v``)."""
+        assert "v" in state, \
+            "audit_stats needs the full 'v' slot (replicated/local)"
+        all_dp = tuple(pod_axes) + tuple(dp_axes)
+        tp = tuple(tp_axes)
+        n_seg = segs.n if segs is not None else 1
+        seg_ids = (segs.ids() if segs is not None
+                   else jnp.zeros(g_local.shape[0], jnp.int32))
+
+        # (a) frozen-variance validity: one shadow-EMA step on the
+        # dp-mean gradient, compared per segment against the frozen v
+        g = comm.allreduce_mean(g_local, all_dp)
+        new_sv = self.b2 * shadow_v + (1.0 - self.b2) * jnp.square(g)
+        sv_seg = segment_l1(new_sv, seg_ids, n_seg, tp)
+        v_seg = segment_l1(state.v, seg_ids, n_seg, tp)
+        # zero-mass segments (the padding tail, untouched layers) have
+        # no drift to report: ratio pinned to 1.0, not 0/0
+        v_drift = jnp.where(v_seg > 0.0,
+                            sv_seg / jnp.maximum(v_seg, 1e-30), 1.0)
+        v_tot, sv_tot = jnp.sum(v_seg), jnp.sum(sv_seg)
+        v_ratio = jnp.where(v_tot > 0.0,
+                            sv_tot / jnp.maximum(v_tot, 1e-30), 1.0)
+
+        # (b) compression fidelity of the would-be momentum exchange
+        m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
+        raw = m_local + state.worker_err
+        payload, _ = self.compressor.ef_compress(m_local,
+                                                 state.worker_err)
+        m_hat = self.compressor.decompress(payload)
+        cos = segment_cosine(raw, m_hat, seg_ids, n_seg, tp)
+        sign = segment_sign_agreement(raw, m_hat, seg_ids, n_seg, tp)
+        if all_dp:   # per-rank quantities: report the honest dp mean
+            cos = jax.lax.pmean(cos, all_dp)
+            sign = jax.lax.pmean(sign, all_dp)
+
+        # EF-residual mass per segment: global L2 over every rank's
+        # residual (squared sums psummed over tp shards AND dp ranks)
+        we_seg = segment_norms(state.worker_err, seg_ids, n_seg,
+                               tp + all_dp)
+        # the server residual is one chunk per intra-pod rank at that
+        # rank's element offset (the all_to_all partition of the server
+        # stage — same indexing as the ZeRO-1 branch of update())
+        inner = tuple(dp_axes)
+        chunk = state.server_err.shape[0]
+        off = jax.lax.axis_index(inner) * chunk if inner else 0
+        ids_chunk = jax.lax.dynamic_slice(seg_ids, (off,), (chunk,))
+        se_seg = segment_norms(state.server_err, ids_chunk, n_seg,
+                               tp + all_dp)
+
+        m_norm = jnp.linalg.norm(m_local)
+        stats = {
+            "cos_sim": cos, "sign_agree": sign, "v_drift": v_drift,
+            "v_l1_seg": v_seg, "worker_err_seg": we_seg,
+            "server_err_seg": se_seg,
+            "v_ratio": v_ratio,
+            "grad_norm": jnp.linalg.norm(g),
+            "momentum_norm": (jax.lax.pmean(m_norm, all_dp) if all_dp
+                              else m_norm),
+            "worker_err_norm": jnp.sqrt(jnp.sum(jnp.square(we_seg))),
+            "server_err_norm": jnp.sqrt(jnp.sum(jnp.square(se_seg))),
+            "v_live": self._audit_v_live(state),
+        }
+        stats.update(self._audit_extra(state, seg_ids, n_seg, tp))
+        return new_sv, stats
 
     @staticmethod
     def _gather_replica(master_shard: jax.Array, all_axes) -> jax.Array:

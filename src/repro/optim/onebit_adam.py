@@ -5,6 +5,12 @@ allreduce, preconditioned momentum SGD — so this registration adds no
 hooks.  The flat-vector reference implementation it matches bit-for-bit
 lives in :mod:`repro.core.onebit_adam` (kept as the paper-faithful oracle
 for tests).
+
+The audit hooks are likewise the base defaults: ``v`` is hard-frozen for
+the whole compression stage (``_audit_v_live`` = 0), so every
+``variance_drift`` verdict the :mod:`repro.obs.audit` probe raises
+against this family is a direct per-segment re-test of the paper's
+Sec. 7.1 assumption — there is no schedule that could legitimise drift.
 """
 from __future__ import annotations
 

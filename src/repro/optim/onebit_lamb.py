@@ -65,3 +65,14 @@ class OneBitLamb(TwoStageOptimizer):
         if seg_ids_fn is None:
             return None
         return scale[seg_ids_fn()]
+
+    # the audit probe (repro.obs.audit) also surfaces the frozen
+    # layerwise trust ratios: a ratio pinned at the clip bounds, or a
+    # still-zero sentinel deep into the compression stage, is exactly
+    # the per-segment pathology the fidelity event should show
+    @property
+    def audit_extra_keys(self):
+        return ("scale_seg",)
+
+    def _audit_extra(self, state, seg_ids, n_segments, tp_axes):
+        return {"scale_seg": state.scale}

@@ -73,6 +73,14 @@ class ZeroneAdam(TwoStageOptimizer):
         v_new = self.b2 * v + (1.0 - self.b2) * jnp.square(g_hat)
         return jnp.where(due, v_new, v), jnp.where(due, count, v_step)
 
+    def _audit_v_live(self, state):
+        # v keeps refreshing on the interval schedule until
+        # var_freeze_step: shadow-vs-live drift is EXPECTED there, and
+        # the HealthMonitor must not call it a violated assumption
+        if self.var_update_interval <= 0:
+            return jnp.float32(0.0)
+        return (state.count <= self.var_freeze_step).astype(jnp.float32)
+
     def sync_due(self, step: int) -> bool:
         if self.sync_double_every <= 0:
             return True

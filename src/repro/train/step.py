@@ -339,6 +339,46 @@ def _select(spec_map: Dict[str, Any], batch: Dict[str, Any]):
 # training step
 # --------------------------------------------------------------------------
 
+def flat_grads(params, batch, cfg: ArchConfig, ctx: ParallelCtx,
+               aux_weight: float, accum_steps: int, d_pad: int):
+    """Per-rank flat f32 training-loss gradient padded to ``d_pad``,
+    with its :class:`SegmentInfo` and the ``(total, metrics)`` aux —
+    the shared front half of the train step and the
+    :mod:`repro.obs.audit` probe (the probe re-runs it on the SAME
+    batch, so the audited gradient is exactly the one the next step
+    consumes).  Gradient accumulation averages over ``accum_steps``
+    microbatches before anything is flattened."""
+    grad_fn = jax.value_and_grad(T.loss_fn, has_aux=True)
+    if accum_steps > 1:
+        a = accum_steps
+        micro = jax.tree.map(
+            lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
+            batch)
+
+        def acc_body(carry, mb):
+            g_acc, tot_acc, met_acc = carry
+            (tot, met), g = grad_fn(params, mb, cfg, ctx, aux_weight)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            met_acc = jax.tree.map(jnp.add, met_acc, met)
+            return (g_acc, tot_acc + tot, met_acc), None
+
+        g0 = jax.tree.map(jnp.zeros_like, params)
+        m0 = {"loss": 0.0, "aux": 0.0, "acc": 0.0}
+        (grads, total, metrics), _ = jax.lax.scan(
+            acc_body, (g0, jnp.float32(0.0),
+                       jax.tree.map(jnp.float32, m0)), micro)
+        grads = jax.tree.map(lambda g: g / a, grads)
+        total = total / a
+        metrics = jax.tree.map(lambda v: v / a, metrics)
+    else:
+        (total, metrics), grads = grad_fn(params, batch, cfg, ctx,
+                                          aux_weight)
+    g_flat, _ = ravel_pytree(grads)
+    d_r = g_flat.shape[0]
+    g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
+    return g_flat, segments_of(grads, d_pad), total, metrics
+
+
 def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
                     donate: bool = True):
     """Returns jitted fn(params, opt_state, batch, lr) -> (params, state,
@@ -381,36 +421,9 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
     def step(params, opt, batch, lr):
         flat0, unravel = ravel_pytree(params)
         d_r = flat0.shape[0]
-
-        grad_fn = jax.value_and_grad(T.loss_fn, has_aux=True)
-        if tsc.accum_steps > 1:
-            a = tsc.accum_steps
-            micro = jax.tree.map(
-                lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]),
-                batch)
-
-            def acc_body(carry, mb):
-                g_acc, tot_acc, met_acc = carry
-                (tot, met), g = grad_fn(params, mb, cfg, ctx,
-                                        tsc.aux_weight)
-                g_acc = jax.tree.map(jnp.add, g_acc, g)
-                met_acc = jax.tree.map(jnp.add, met_acc, met)
-                return (g_acc, tot_acc + tot, met_acc), None
-
-            g0 = jax.tree.map(jnp.zeros_like, params)
-            m0 = {"loss": 0.0, "aux": 0.0, "acc": 0.0}
-            (grads, total, metrics), _ = jax.lax.scan(
-                acc_body, (g0, jnp.float32(0.0),
-                           jax.tree.map(jnp.float32, m0)), micro)
-            grads = jax.tree.map(lambda g: g / a, grads)
-            total = total / a
-            metrics = jax.tree.map(lambda v: v / a, metrics)
-        else:
-            (total, metrics), grads = grad_fn(params, batch, cfg, ctx,
-                                              tsc.aux_weight)
-        g_flat, _ = ravel_pytree(grads)
-        g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
-        segs = segments_of(grads, d_pad)
+        g_flat, segs, total, metrics = flat_grads(
+            params, batch, cfg, ctx, tsc.aux_weight, tsc.accum_steps,
+            d_pad)
 
         # global -> per-rank views: flatten every non-scalar slot (the
         # per-rank shard of any slot is its length with singleton leads)

@@ -1,0 +1,546 @@
+"""Tests for the per-segment compression-fidelity & frozen-variance
+audit (repro.obs.audit + TwoStageOptimizer.audit_stats).
+
+Covers, from the bottom up:
+
+  * the ``fidelity`` / ``health`` event kinds (schema round-trips);
+  * MetricBuffer edge cases the audit path leans on (rank>=1 metrics,
+    window-boundary flushes, host()-then-drain ordering, park-after-
+    flush);
+  * FiniteGuard — the generalisation of the auto-switch's non-finite
+    ``v_l1`` guard to every STAT_KEYS entry, including a real train
+    step with an injected NaN;
+  * ``audit_stats`` semantics against closed-form references (identity
+    compressor => exact fidelity, the shadow-EMA recursion, per-segment
+    drift ratios, per-family ``v_live`` / extras);
+  * the HealthMonitor's four verdicts, each triggered deterministically;
+  * the jitted probe end-to-end on a real model, the telemetry-
+    NEUTRALITY pin (audit on vs off: identical compiled collective
+    signature AND bitwise-equal losses, flat and hier meshes), and the
+    ``launch.train --audit on`` loop producing validated fidelity +
+    health events the report folds.
+"""
+from __future__ import annotations
+
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import events as E
+from repro.obs.audit import (AUDIT_MODES, DRIFT_BAND, FiniteGuard,
+                             HealthMonitor)
+from repro.obs.metrics import MetricBuffer
+from repro.optim import get_optimizer
+from repro.optim.base import (AUDIT_SCALAR_KEYS, AUDIT_SEG_KEYS, STAT_KEYS,
+                              SegmentInfo, segment_cosine, segment_l1,
+                              segment_sign_agreement)
+from repro.state import StateTree
+
+REPO_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = REPO_SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+# --------------------------------------------------------------------------
+# event kinds
+# --------------------------------------------------------------------------
+
+class TestAuditEventSchema:
+    def test_fidelity_event_round_trips(self):
+        rec = E.make_event(
+            "fidelity", step=4, n_segments=3,
+            cos_sim=[0.9, 1.0, 1.0], sign_agree=[0.99, 1.0, 1.0],
+            v_drift=[1.1, 0.9, 1.0], v_l1_seg=[2.0, 3.0, 0.0],
+            worker_err_seg=[0.1, 0.2, 0.0], server_err_seg=[0.0, 0.0, 0.0],
+            v_ratio=1.02, v_drift_max=1.1, cos_sim_min=0.9,
+            stage="compressed", source="launch.train")
+        assert E.validate_event(rec) is rec
+        assert rec["n_segments"] == 3
+
+    def test_health_event_round_trips(self):
+        rec = E.make_event("health", step=4, ok=False,
+                           verdicts=["variance_drift"], v_drift_max=3.2,
+                           detail="seg 10 drifted", source="repro.obs.audit")
+        assert E.validate_event(rec) is rec
+
+    def test_fidelity_requires_n_segments(self):
+        with pytest.raises(ValueError, match="missing required"):
+            E.make_event("fidelity", step=4)
+
+    def test_verdict_vocabulary_pinned(self):
+        assert E.HEALTH_VERDICTS == ("variance_drift", "ef_blowup",
+                                     "non_finite", "loss_spike")
+        assert AUDIT_MODES == ("off", "on")
+
+
+# --------------------------------------------------------------------------
+# MetricBuffer edge cases (the batched path the audit stats ride)
+# --------------------------------------------------------------------------
+
+class TestMetricBufferEdges:
+    def test_array_metrics_become_flat_lists(self):
+        buf = MetricBuffer()
+        buf.push(0, {"v": jnp.arange(3.0), "s": jnp.float32(2.0)})
+        [(s, rec)] = buf.drain()
+        assert s == 0 and rec["v"] == [0.0, 1.0, 2.0]
+        assert isinstance(rec["s"], float) and rec["s"] == 2.0
+
+    def test_window_boundary_flush_keeps_every_step_once(self):
+        """host() mid-window (the log-every print path) must not drop or
+        duplicate the step when the window later drains."""
+        buf = MetricBuffer()
+        for t in range(5):
+            buf.push(t, {"x": jnp.float32(t)})
+        assert buf.host(2)["x"] == 2.0      # mid-window peek
+        out = buf.drain()
+        assert [s for s, _ in out] == [0, 1, 2, 3, 4]
+        assert [r["x"] for _, r in out] == [0.0, 1.0, 2.0, 3.0, 4.0]
+        assert buf.n_pending == 0 and buf.drain() == []
+
+    def test_auto_switch_pattern_host_every_step_then_drain(self):
+        """The auto-warmup switch fetches every step via host(); the
+        window drain must still return each exactly once, in order."""
+        buf = MetricBuffer()
+        for t in range(4):
+            buf.push(t, {"v_l1": jnp.float32(10.0 + t)})
+            assert buf.host(t)["v_l1"] == 10.0 + t
+        out = buf.drain()
+        assert [s for s, _ in out] == [0, 1, 2, 3]
+
+    def test_park_after_flush_starts_a_clean_window(self):
+        buf = MetricBuffer()
+        for t in range(3):
+            buf.push(t, {"x": jnp.float32(t)})
+        assert len(buf.drain()) == 3
+        buf.push(3, {"x": jnp.float32(3.0)})
+        out = buf.drain()
+        assert out == [(3, {"x": 3.0})]
+
+
+# --------------------------------------------------------------------------
+# FiniteGuard
+# --------------------------------------------------------------------------
+
+class TestFiniteGuard:
+    def test_drops_counts_and_reports_non_finite_stats(self):
+        guard = FiniteGuard()
+        assert guard.keys == STAT_KEYS
+        seen = []
+        rec = {"loss": 1.5, "grad_norm": float("nan"),
+               "v_l1": float("inf"), "momentum_norm": 0.5}
+        clean = guard.filter(7, rec, on_reject=lambda s, k, v:
+                             seen.append((s, k)))
+        assert "grad_norm" not in clean and "v_l1" not in clean
+        assert clean["loss"] == 1.5 and clean["momentum_norm"] == 0.5
+        assert rec["v_l1"] == float("inf")       # input not mutated
+        assert guard.n_rejected == 2
+        assert guard.rejected == {"grad_norm": 1, "v_l1": 1}
+        assert sorted(seen) == [(7, "grad_norm"), (7, "v_l1")]
+
+    def test_finite_record_passes_untouched(self):
+        guard = FiniteGuard()
+        rec = {k: 1.0 for k in STAT_KEYS}
+        assert guard.filter(0, rec) == rec and guard.n_rejected == 0
+
+    def test_injected_nan_grad_rejected_from_real_step(self):
+        """A NaN parameter poisons the gradient; every stat norm the
+        step emits goes NaN; the guard drops them all and counts."""
+        from repro.configs import get_config
+        from repro.data import SyntheticStream
+        from repro.configs.base import InputShape
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
+        cfg = get_config("internlm2-1.8b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        step = make_train_step(cfg, mesh,
+                               TrainStepConfig(stage="warmup",
+                                               block_size=512),
+                               donate=False)
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+        leaves, treedef = jax.tree.flatten(params)
+        leaves[0] = leaves[0].at[...].set(jnp.nan)   # the injected NaN
+        params = jax.tree.unflatten(treedef, leaves)
+        opt = init_train_state(cfg, mesh, block=512)
+        stream = SyntheticStream(cfg, InputShape("t", 64, 2, "train"))
+        _, _, metrics = step(params, opt, stream.batch_at(0),
+                             jnp.float32(1e-3))
+        buf = MetricBuffer()
+        buf.push(0, metrics)
+        [(_, rec)] = buf.drain()
+        guard = FiniteGuard()
+        warned = []
+        clean = guard.filter(0, rec, on_reject=lambda s, k, v:
+                             warned.append(k))
+        bad = [k for k in STAT_KEYS if k in rec
+               and not math.isfinite(rec[k])]
+        assert "v_l1" in bad and "grad_norm" in bad   # NaN propagated
+        assert guard.n_rejected == len(bad) >= 2
+        assert sorted(warned) == sorted(bad)
+        assert all(k not in clean for k in bad)
+
+
+# --------------------------------------------------------------------------
+# audit_stats semantics (closed-form references, no mesh)
+# --------------------------------------------------------------------------
+
+def _mk_state(d, rng, n_segments=None, count=None):
+    fields = {
+        "m": jnp.asarray(rng.normal(size=d).astype(np.float32)),
+        "v": jnp.asarray(rng.uniform(0.1, 1.0, d).astype(np.float32)),
+        "worker_err": jnp.asarray(
+            0.1 * rng.normal(size=d).astype(np.float32)),
+        "server_err": jnp.zeros((d,), jnp.float32),
+    }
+    if n_segments is not None:
+        fields["scale"] = jnp.arange(1.0, n_segments + 1.0)
+    if count is not None:
+        fields["count"] = jnp.int32(count)
+    return StateTree(fields)
+
+
+class TestSegmentStats:
+    def test_segment_l1_matches_numpy(self):
+        x = jnp.asarray([1.0, -2.0, 3.0, -4.0, 5.0])
+        ids = jnp.asarray([0, 0, 1, 1, 1])
+        np.testing.assert_allclose(segment_l1(x, ids, 2),
+                                   [3.0, 12.0], rtol=1e-6)
+
+    def test_segment_cosine_identical_and_zero(self):
+        a = jnp.asarray([1.0, 2.0, 0.0, 0.0])
+        ids = jnp.asarray([0, 0, 1, 1])
+        cos = segment_cosine(a, a, ids, 2)
+        np.testing.assert_allclose(cos, [1.0, 1.0], rtol=1e-6)
+        b = jnp.asarray([2.0, -1.0, 0.0, 0.0])   # orthogonal in seg 0
+        np.testing.assert_allclose(segment_cosine(a, b, ids, 2),
+                                   [0.0, 1.0], atol=1e-6)
+
+    def test_sign_agreement_counts(self):
+        a = jnp.asarray([1.0, -1.0, 1.0, 1.0])
+        b = jnp.asarray([1.0, 1.0, 1.0, -1.0])
+        ids = jnp.asarray([0, 0, 1, 1])
+        np.testing.assert_allclose(
+            segment_sign_agreement(a, b, ids, 2), [0.5, 0.5], rtol=1e-6)
+
+
+class TestAuditStats:
+    def test_identity_compressor_is_exactly_faithful(self):
+        """identity's wire image IS m_local + worker_err, so cosine and
+        sign agreement are exactly 1 in every segment."""
+        rng = np.random.default_rng(0)
+        segs = SegmentInfo((4, 6, 2))
+        opt = get_optimizer("onebit_adam", compressor="identity")
+        st = _mk_state(segs.d, rng)
+        g = jnp.asarray(rng.normal(size=segs.d).astype(np.float32))
+        new_sv, stats = opt.audit_stats(g, st, st["v"], segs=segs)
+        np.testing.assert_array_equal(np.asarray(stats["cos_sim"]),
+                                      np.ones(3))
+        np.testing.assert_array_equal(np.asarray(stats["sign_agree"]),
+                                      np.ones(3))
+        # shadow-EMA recursion, elementwise
+        want = opt.b2 * np.asarray(st["v"]) \
+            + (1.0 - opt.b2) * np.square(np.asarray(g))
+        np.testing.assert_allclose(np.asarray(new_sv), want, rtol=1e-6)
+        # per-segment drift = seg-L1(shadow') / seg-L1(frozen v)
+        ids = np.asarray(segs.ids())
+        for i in range(3):
+            m = ids == i
+            ref = np.abs(want[m]).sum() / np.abs(np.asarray(st["v"])[m]).sum()
+            np.testing.assert_allclose(stats["v_drift"][i], ref, rtol=1e-5)
+        assert set(AUDIT_SEG_KEYS) | set(AUDIT_SCALAR_KEYS) <= set(stats)
+
+    def test_zero_grad_drift_converges_to_b2(self):
+        """g = 0 and shadow seeded at v: the shadow EMA decays by b2, so
+        every non-empty segment reports drift exactly b2."""
+        rng = np.random.default_rng(1)
+        segs = SegmentInfo((5, 5))
+        opt = get_optimizer("onebit_adam", compressor="identity")
+        st = _mk_state(segs.d, rng)
+        _, stats = opt.audit_stats(jnp.zeros(segs.d), st, st["v"],
+                                   segs=segs)
+        np.testing.assert_allclose(np.asarray(stats["v_drift"]),
+                                   [opt.b2, opt.b2], rtol=1e-6)
+        np.testing.assert_allclose(float(stats["v_ratio"]), opt.b2,
+                                   rtol=1e-6)
+
+    def test_onebit_compressor_stats_are_finite_and_bounded(self):
+        rng = np.random.default_rng(2)
+        segs = SegmentInfo((512, 512))     # block-aligned for onebit
+        opt = get_optimizer("onebit_adam", compressor="onebit",
+                            compressor_kwargs={"block_size": 512})
+        st = _mk_state(segs.d, rng)
+        g = jnp.asarray(rng.normal(size=segs.d).astype(np.float32))
+        _, stats = opt.audit_stats(g, st, st["v"], segs=segs)
+        for k in AUDIT_SEG_KEYS:
+            a = np.asarray(stats[k])
+            assert a.shape == (2,) and np.isfinite(a).all(), k
+        assert (np.asarray(stats["cos_sim"]) <= 1.0 + 1e-6).all()
+        assert (np.asarray(stats["sign_agree"]) <= 1.0).all()
+        assert float(stats["v_live"]) == 0.0     # 1-bit Adam: hard-frozen
+
+    def test_lamb_surfaces_frozen_trust_ratios(self):
+        rng = np.random.default_rng(3)
+        segs = SegmentInfo((4, 4))
+        opt = get_optimizer("onebit_lamb", compressor="identity")
+        assert opt.audit_extra_keys == ("scale_seg",)
+        st = _mk_state(segs.d, rng, n_segments=segs.n)
+        _, stats = opt.audit_stats(jnp.zeros(segs.d), st, st["v"],
+                                   segs=segs)
+        np.testing.assert_array_equal(np.asarray(stats["scale_seg"]),
+                                      np.asarray(st["scale"]))
+
+    def test_zerone_v_live_follows_the_freeze_schedule(self):
+        rng = np.random.default_rng(4)
+        segs = SegmentInfo((4,))
+        live = get_optimizer("zerone_adam", compressor="identity",
+                             var_update_interval=16, var_freeze_step=100)
+        st = _mk_state(segs.d, rng, count=5)
+        assert float(live.audit_stats(jnp.zeros(4), st, st["v"],
+                                      segs=segs)[1]["v_live"]) == 1.0
+        st2 = _mk_state(segs.d, rng, count=500)
+        assert float(live.audit_stats(jnp.zeros(4), st2, st2["v"],
+                                      segs=segs)[1]["v_live"]) == 0.0
+        frozen = get_optimizer("zerone_adam", compressor="identity",
+                               var_update_interval=0)
+        assert float(frozen.audit_stats(jnp.zeros(4), st, st["v"],
+                                        segs=segs)[1]["v_live"]) == 0.0
+
+
+# --------------------------------------------------------------------------
+# HealthMonitor verdicts
+# --------------------------------------------------------------------------
+
+def _fid(**kw):
+    base = {"v_drift": [1.0, 1.0], "v_live": 0.0, "v_ratio": 1.0,
+            "cos_sim": [0.9, 1.0], "sign_agree": [1.0, 1.0],
+            "worker_err_norm": 1.0, "server_err_norm": 0.5}
+    base.update(kw)
+    return base
+
+
+class TestHealthMonitor:
+    def test_healthy_step_is_ok_and_emits_a_valid_event(self):
+        mon = HealthMonitor()
+        fields, warns = mon.observe(4, _fid())
+        assert fields["ok"] and fields["verdicts"] == [] and not warns
+        assert E.validate_event(E.make_event("health", **fields))
+        assert mon.n_checked == 1 and mon.n_failed == 0
+
+    def test_variance_drift_fires_outside_the_band(self):
+        mon = HealthMonitor(drift_band=DRIFT_BAND)
+        fields, warns = mon.observe(4, _fid(v_drift=[1.0, 5.0]))
+        assert not fields["ok"]
+        assert fields["verdicts"] == ["variance_drift"]
+        assert fields["v_drift_max"] == 5.0
+        assert warns[0]["what"] == "audit.variance_drift"
+        assert "1:5" in fields["detail"]       # worst segment named
+
+    def test_variance_drift_suppressed_while_v_live(self):
+        """0/1 Adam's refresh phase: drift is expected, not a failure."""
+        mon = HealthMonitor()
+        fields, _ = mon.observe(4, _fid(v_drift=[1.0, 5.0], v_live=1.0))
+        assert fields["ok"]
+
+    def test_ef_blowup_needs_two_audits_and_a_growth_spike(self):
+        mon = HealthMonitor(err_growth_max=10.0)
+        f1, _ = mon.observe(2, _fid(worker_err_norm=1.0))
+        assert f1["ok"]                        # no previous audit yet
+        f2, warns = mon.observe(4, _fid(worker_err_norm=25.0))
+        assert f2["verdicts"] == ["ef_blowup"]
+        assert f2["err_growth"] == 25.0
+        assert warns[0]["what"] == "audit.ef_blowup"
+
+    def test_non_finite_stat_is_a_verdict(self):
+        mon = HealthMonitor()
+        fields, _ = mon.observe(4, _fid(cos_sim=[float("nan"), 1.0]))
+        assert "non_finite" in fields["verdicts"]
+        assert "cos_sim" in fields["detail"]
+
+    def test_loss_spike_vs_trailing_median(self):
+        mon = HealthMonitor(loss_spike=3.0)
+        for t in range(5):
+            mon.observe_loss(t, 1.0)
+        mon.observe_loss(5, 10.0)              # 10 > 3 x median(1.0)
+        fields, warns = mon.observe(5, _fid())
+        assert fields["verdicts"] == ["loss_spike"]
+        assert fields["loss"] == 10.0 and fields["loss_median"] == 1.0
+        # non-finite losses are ignored, not folded into the window
+        mon2 = HealthMonitor()
+        for t in range(5):
+            mon2.observe_loss(t, 1.0)
+        mon2.observe_loss(5, float("nan"))
+        fields2, _ = mon2.observe(5, _fid())
+        assert fields2["ok"]
+
+
+# --------------------------------------------------------------------------
+# the jitted probe on a real model
+# --------------------------------------------------------------------------
+
+class TestAuditProbe:
+    def test_probe_emits_per_segment_stats_and_advances_shadow(self):
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.obs.audit import make_audit_probe
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      state_layout_ctx)
+        cfg = get_config("internlm2-1.8b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        tsc = TrainStepConfig(stage="compressed", block_size=512)
+        probe = make_audit_probe(cfg, mesh, tsc)
+        assert probe.stat_keys == AUDIT_SEG_KEYS + AUDIT_SCALAR_KEYS
+        params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+        opt = init_train_state(cfg, mesh, block=512)
+        stream = SyntheticStream(cfg, InputShape("t", 64, 2, "train"))
+        n_seg = state_layout_ctx(cfg, mesh, block=512).n_segments
+        sv = opt["v"]
+        sv2, stats = probe(params, opt, sv, stream.batch_at(0))
+        assert sv2.shape == sv.shape
+        assert bool(jnp.any(sv2 != sv))        # shadow EMA advanced
+        for k in AUDIT_SEG_KEYS:
+            a = np.asarray(stats[k])
+            assert a.shape == (n_seg,), k
+            assert np.isfinite(a).all(), k
+        for k in AUDIT_SCALAR_KEYS:
+            assert np.isfinite(np.asarray(stats[k])).all(), k
+        # padding tail: lossless by construction
+        np.testing.assert_allclose(np.asarray(stats["cos_sim"])[-1], 1.0)
+        np.testing.assert_allclose(np.asarray(stats["v_drift"])[-1], 1.0)
+
+    def test_probe_rejects_the_zero1_layout(self):
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.obs.audit import make_audit_probe
+        from repro.train.step import TrainStepConfig
+        cfg = get_config("internlm2-1.8b").reduced()
+        mesh = make_mesh((1, 1), ("data", "model"))
+        with pytest.raises(AssertionError, match="zero1"):
+            make_audit_probe(cfg, mesh,
+                             TrainStepConfig(stage="compressed",
+                                             layout="zero1",
+                                             block_size=512))
+
+
+# --------------------------------------------------------------------------
+# neutrality + launch end-to-end (forced multi-device subprocesses)
+# --------------------------------------------------------------------------
+
+class TestAuditNeutrality:
+    def test_probe_leaves_training_bitwise_unchanged(self):
+        """Flat (4,1) and hier (2,2,1) compressed training, audit probe
+        interleaved vs absent: identical compiled collective signature
+        AND bitwise-equal losses over 3 steps."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.obs.audit import make_audit_probe
+        from repro.obs.trace import collective_signature
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        shape = InputShape("t", 64, 4, "train")
+
+        def losses_and_sig(mesh, topology, with_probe):
+            tsc = TrainStepConfig(stage="compressed", topology=topology)
+            step = make_train_step(cfg, mesh, tsc, donate=False)
+            params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+            opt = init_train_state(cfg, mesh, topology=topology)
+            stream = SyntheticStream(cfg, shape)
+            batch0 = stream.batch_at(0)
+            lr = jnp.float32(1e-3)
+            jitted = step.build(batch0)
+            sig = collective_signature(
+                jitted.lower(params, opt, batch0, lr).compile().as_text())
+            probe = (make_audit_probe(cfg, mesh, tsc) if with_probe
+                     else None)
+            sv = opt["v"]
+            losses = []
+            for t in range(3):
+                b = stream.batch_at(t)
+                if probe is not None:
+                    sv, stats = probe(params, opt, sv, b)
+                    assert np.isfinite(
+                        np.asarray(stats["v_drift"])).all()
+                params, opt, m = step(params, opt, b, lr)
+                losses.append(np.asarray(m["loss"]).tobytes())
+            return sig, losses
+
+        for dims, axes, topo in (((4, 1), ("data", "model"), "flat"),
+                                 ((2, 2, 1), ("pod", "data", "model"),
+                                  "hier")):
+            mesh = make_mesh(dims, axes)
+            sig_off, loss_off = losses_and_sig(mesh, topo, False)
+            sig_on, loss_on = losses_and_sig(mesh, topo, True)
+            assert sig_off, f"{topo}: no collectives found"
+            assert sig_on == sig_off, (topo, sig_on, sig_off)
+            assert loss_on == loss_off, f"{topo}: losses differ"
+            print(f"{topo}: audit-neutral, {len(sig_off)} collectives, "
+                  f"3 losses bitwise-equal OK")
+        """, n=4)
+        assert "flat:" in out and "hier:" in out
+
+    def test_launch_audit_end_to_end(self):
+        """launch.train --audit on vs off on a (4,1) mesh: identical
+        loss history; fidelity events on every audited step with fully
+        populated per-segment vectors; health timeline + audit section
+        in the folded report."""
+        out = run_with_devices("""
+        import math, os, tempfile
+        from repro.launch.train import run
+        from repro.obs.report import format_report, load, summarize
+
+        tel = os.path.join(tempfile.mkdtemp(), "tel")
+        kw = dict(base_lr=2e-3, lr_warmup=2, warmup_steps=2,
+                  block_size=512, log_every=2, recipe="onebit_adam")
+        _, _, h_off = run("internlm2-1.8b-smoke", 6, 4, 64, (4, 1), **kw)
+        _, _, h_on = run("internlm2-1.8b-smoke", 6, 4, 64, (4, 1),
+                         telemetry=tel, audit="on", audit_every=2, **kw)
+        assert [r["loss"] for r in h_on] == [r["loss"] for r in h_off], \\
+            "audit on changed the training trajectory"
+
+        recs = load(os.path.join(tel, "telemetry.jsonl"), validate=True)
+        fids = [r for r in recs if r["type"] == "fidelity"]
+        assert [f["step"] for f in fids] == [2, 4], fids
+        n_seg = fids[0]["n_segments"]
+        assert n_seg > 1
+        for f in fids:
+            for k in ("cos_sim", "sign_agree", "v_drift", "v_l1_seg",
+                      "worker_err_seg", "server_err_seg"):
+                xs = f[k]
+                assert len(xs) == n_seg, (k, len(xs), n_seg)
+                assert all(math.isfinite(x) for x in xs), (f["step"], k)
+        healths = [r for r in recs if r["type"] == "health"]
+        assert [h["step"] for h in healths] == [2, 4]
+        text = format_report(summarize(recs))
+        assert "compression-fidelity audit" in text
+        assert "health timeline" in text
+        assert "per-segment (last audit):" in text
+        print(f"launch audit e2e OK: {n_seg} segments, "
+              f"{len(fids)} fidelity + {len(healths)} health events")
+        """, n=4)
+        assert "launch audit e2e OK" in out

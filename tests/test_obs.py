@@ -69,6 +69,8 @@ class TestEventSchema:
             "recalibration": dict(op_overhead=5e-6),
             "profile": dict(n_steps=4, t_window=1.0, t_attributed=0.8,
                             t_residual=0.2),
+            "fidelity": dict(step=4, n_segments=3),
+            "health": dict(step=4, ok=True),
         }
         assert sorted(minimal) == sorted(E.EVENT_SCHEMA)
         for etype, fields in minimal.items():
