@@ -45,8 +45,11 @@ _LOWER_IS_BETTER = {"s_per_step", "t_window", "t_residual", "t_comm",
                     "allreduce_ms", "onebit_ms"}
 
 # deterministic (seeded-math) metric prefixes: out-of-band drift is a
-# STRUCTURAL failure, not a timing warning
-_STRUCTURAL_PREFIXES = ("fidelity_",)
+# STRUCTURAL failure, not a timing warning.  ``mem_*`` cells are byte
+# counts off the slot registry / compiled-program stats, deterministic
+# per (config, mesh, pipeline); the live allocator sample deliberately
+# keeps a non-mem_ name (``live_bytes_peak``) so RSS noise stays WARN.
+_STRUCTURAL_PREFIXES = ("fidelity_", "mem_")
 
 
 def _by_key(payload: dict) -> dict:

@@ -343,14 +343,11 @@ def analyze_compiled(compiled, entry: Optional[str] = None,
     except Exception:
         pass
     ab = ob = tb = None
-    try:
-        ma = compiled.memory_analysis()
-        if ma is not None:
-            ab = int(ma.argument_size_in_bytes)
-            ob = int(ma.output_size_in_bytes)
-            tb = int(ma.temp_size_in_bytes)
-    except Exception:
-        pass
+    # the ONE memory_analysis() reader (repro.obs.mem)
+    from repro.obs.mem import compiled_memory
+    cm = compiled_memory(compiled)
+    if cm is not None:
+        ab, ob, tb = cm.argument_bytes, cm.output_bytes, cm.temp_bytes
     return RooflineReport(dot_flops=fl, hbm_bytes=hb, coll_bytes=cb,
                           coll_by_kind=kinds, xla_flops=xf, xla_bytes=xb,
                           arg_bytes=ab, out_bytes=ob, temp_bytes=tb,

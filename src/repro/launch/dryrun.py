@@ -26,6 +26,8 @@ import jax.numpy as jnp
 
 from repro.analysis.roofline import analyze_compiled
 from repro.configs import SHAPES, get_config, input_specs, list_archs
+from repro.obs.mem import (attribute_compiled, compiled_memory,
+                           format_rows, predict_ledger)
 from repro.core import onebit_adam as OB
 from repro.launch.mesh import HBM_BYTES, make_production_mesh
 from repro.models import transformer as T
@@ -121,7 +123,9 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
     t_compile = time.time() - t0
 
     rep = analyze_compiled(compiled)
-    mem = compiled.memory_analysis()
+    # the ONE memory_analysis() reader (repro.obs.mem) — same stats the
+    # driver's --memory attribution and the roofline report use
+    cm = compiled_memory(compiled, program=f"{arch}/{shape_name}")
     n_chips = mesh.devices.size
     out = {
         "arch": arch, "shape": shape_name,
@@ -135,17 +139,27 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
         "memory": None,
         "fits_hbm": None,
     }
-    if mem is not None:
-        per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
-                   - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
-        out["memory"] = {
-            "argument_bytes": int(mem.argument_size_in_bytes),
-            "output_bytes": int(mem.output_size_in_bytes),
-            "alias_bytes": int(mem.alias_size_in_bytes),
-            "temp_bytes": int(mem.temp_size_in_bytes),
-            "per_device_bytes": int(per_dev),
-        }
-        out["fits_hbm"] = bool(per_dev <= HBM_BYTES)
+    if cm is not None:
+        summ = cm.summary()
+        summ.pop("program")
+        out["memory"] = summ
+        out["fits_hbm"] = bool(cm.per_device_bytes <= HBM_BYTES)
+        if shape.kind == "train" and stage != "compressed_zero1":
+            # predicted-vs-compiled ledger rows (repro.obs.mem): the
+            # analytic per-rank model next to what XLA actually allocated
+            try:
+                ledger = predict_ledger(
+                    cfg, mesh, block=4096,
+                    topology="hier" if stage == "compressed_hier"
+                    else "flat",
+                    batch_global=shape.global_batch, seq=shape.seq_len,
+                    capacity_bytes=float(HBM_BYTES))
+                att = attribute_compiled(ledger, cm)
+                out["memory_ledger"] = {"predicted": ledger.summary(),
+                                        "attribution": att}
+                print(format_rows(ledger, [att]))
+            except Exception as e:   # the ledger must not fail the lower
+                out["memory_ledger"] = {"error": str(e)[:200]}
     return out
 
 

@@ -34,6 +34,19 @@ loss spikes).  The probe never touches the train step's compiled
 program: audit on vs off is telemetry-neutral (same collective
 signature, bitwise losses; pinned in tests/test_audit.py).
 
+``--memory on`` (with ``--telemetry``) turns on the per-rank HBM
+ledger (:mod:`repro.obs.mem`): a predicted ``memory`` event at start
+(params/grads from the model math, optimizer slots via the SlotSpec
+registry, the wire live-watermark, an activation estimate, against the
+``--device`` capacity), one live sample per log window
+(``device.memory_stats()`` or host RSS) feeding ``mem_headroom`` /
+``mem_growth`` health verdicts, and a post-run compiled-program
+attribution (``memory_analysis()`` temp+output mapped onto the ledger
+categories with an explicit residual) — plus ``DIR/memory_ledger.json``
+and ``mem_*`` perf-ledger cells when ``--profile`` runs.  Host-side
+only: the train step's compiled program is untouched (neutrality
+pinned in tests/test_mem.py).
+
 ``--profile DIR`` captures a ``jax.profiler`` trace of the last
 ``--profile-steps`` steady-state steps and folds it back onto the plan
 grid (:mod:`repro.obs.profile`): every executor collective attributed
@@ -63,8 +76,8 @@ from repro.data import SyntheticStream
 from repro.launch.mesh import make_mesh
 from repro.models import transformer as T
 from repro.obs import (AUDIT_MODES, FiniteGuard, HealthMonitor,
-                       MetricBuffer, Tracer, as_sink, make_audit_probe,
-                       set_tracing)
+                       MEMORY_MODES, MetricBuffer, Tracer, as_sink,
+                       make_audit_probe, set_tracing)
 from repro.optim import WarmupSwitch, list_compressors, list_optimizers
 from repro.state import load_train_state, save_train_state
 from repro.train.step import (TrainStepConfig, _flat_dim, init_train_state,
@@ -295,11 +308,63 @@ def fold_profile_window(profile_dir: str, hlo_texts, n_steps: int,
                             source="launch.train")
 
 
+def build_memory_ledger(optim, cfg, mesh, topology: str, n_buckets: int,
+                        block_size: int, cluster: str, device: str,
+                        layout: str, batch: int, seq: int):
+    """The predicted per-rank :class:`~repro.obs.mem.MemoryLedger` of
+    THIS run: the same host-side plan/spec reconstruction the plan
+    telemetry uses, priced against the ``--device`` preset's capacity."""
+    from repro.obs.mem import capacity_of, predict_ledger
+    from repro.plan import get_cluster
+    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
+    spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
+                       device=device)
+    _, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
+    return predict_ledger(
+        cfg, mesh, optim=optim, layout=layout, topology=topology,
+        block=block_size, n_buckets=n_buckets, batch_global=batch,
+        seq=seq, plan=comp_plan, spec=spec,
+        capacity_bytes=capacity_of(spec.device))
+
+
+def emit_memory_attribution(steps_fns, sample_args, sink, ledger,
+                            telemetry_dir: Optional[str] = None):
+    """Post-run measured side of the ledger: one ``memory`` event
+    (``kind="compiled"``) per executed step program — temp+output bytes
+    attributed onto the predicted categories with an explicit residual
+    — plus ``memory_ledger.json`` in the telemetry dir.  Returns the
+    largest program's :class:`~repro.obs.mem.CompiledMemory` (the
+    ``mem_compiled_*`` perf-ledger cells)."""
+    from repro.obs.mem import attribution_event_fields, compiled_memory
+    params, opt, batch_data, lr = sample_args
+    biggest, dump = None, []
+    for (stage, sync), fn in steps_fns.items():
+        name = f"{stage}{'' if sync else '_local'}"
+        cm = compiled_memory(
+            fn.build(batch_data).lower(params, opt, batch_data, lr)
+            .compile(), program=name)
+        if cm is None:
+            continue
+        fields = attribution_event_fields(ledger, cm)
+        sink.emit("memory", **fields)
+        dump.append(fields)
+        if biggest is None or cm.per_device_bytes > biggest.per_device_bytes:
+            biggest = cm
+    if telemetry_dir:
+        path = os.path.join(telemetry_dir, "memory_ledger.json")
+        with open(path, "w") as f:
+            json.dump({"predicted": ledger.summary(),
+                       "compiled": dump}, f, indent=2)
+    return biggest
+
+
 def emit_profile_ledger(profile_dir: str, steps_fns, sample_args, sink,
                         optim, cfg, mesh, topology: str, n_buckets: int,
                         block_size: int, cluster: str, device: str,
                         n_steps: int, stage: str, bench: Optional[str],
-                        arch: str, mesh_shape, use_kernel: bool) -> dict:
+                        arch: str, mesh_shape, use_kernel: bool,
+                        extra_metrics: Optional[dict] = None) -> dict:
     """Post-run profile pipeline: compiled-HLO texts of every executed
     step (the op_name bridge the trace join needs), the grid fold +
     attribution (``fold_profile_window``), a ``profile`` telemetry
@@ -324,6 +389,8 @@ def emit_profile_ledger(profile_dir: str, steps_fns, sample_args, sink,
     if fields.get("t_window"):
         metrics["attributed_fraction"] = (fields["t_attributed"]
                                           / fields["t_window"])
+    if extra_metrics:
+        metrics.update({k: float(v) for k, v in extra_metrics.items()})
     name = bench or "train"
     rec = bench_record(name, config=arch,
                        mesh=[int(s) for s in mesh_shape],
@@ -353,8 +420,10 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         device: str = "tpu-v5e", telemetry: Optional[str] = None,
         drift_probe: bool = False, profile: Optional[str] = None,
         profile_steps: int = 4, bench: Optional[str] = None,
-        audit: str = "off", audit_every: int = 10):
+        audit: str = "off", audit_every: int = 10,
+        memory: str = "off"):
     assert audit in AUDIT_MODES, audit
+    assert memory in MEMORY_MODES, memory
     cfg = get_config(arch)
     axes = ("data", "model")[:len(mesh_shape)] if len(mesh_shape) <= 2 else \
         ("pod", "data", "model")
@@ -474,6 +543,18 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                             n_buckets, spec.block_size, cluster, device,
                             drift_probe=drift_probe,
                             telemetry_dir=telemetry)
+
+    # --- per-rank HBM ledger (repro.obs.mem; host-side only — the train
+    # step's compiled program is untouched) -------------------------------
+    memory_on = memory == "on" and sink.enabled
+    mem_ledger, mem_sampler = None, None
+    if memory_on:
+        from repro.obs.mem import LiveSampler
+        mem_ledger = build_memory_ledger(
+            optim, cfg, mesh, topology, n_buckets, spec.block_size,
+            cluster, device, layout, batch, seq)
+        sink.emit("memory", **mem_ledger.event_fields())
+        mem_sampler = LiveSampler()
 
     def on_warning(wstep: int, detail: str) -> None:
         print(f"[warn] step {wstep}: {detail}")
@@ -642,6 +723,19 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                           n=step - win_step0 + 1, step=step)
                 win_t0, win_step0 = now, step + 1
                 drain()
+                if mem_sampler is not None:
+                    mfields = mem_sampler.sample(step)
+                    if mfields:
+                        sink.emit("memory", **mfields)
+                        hfields, warns = health.observe_memory(
+                            step, mfields["bytes_in_use"],
+                            mfields.get("peak_bytes_in_use"),
+                            capacity_bytes=mem_ledger.capacity_bytes)
+                        sink.emit("health", **hfields)
+                        for w in warns:
+                            print(f"[health] step {step}: {w['what']} — "
+                                  f"{w['detail']}")
+                            sink.emit("warning", **w)
             if ckpt and (step + 1) % 100 == 0:
                 with tracer.span("checkpoint.save", step=step):
                     save_train_state(ckpt, params, opt, step + 1,
@@ -649,6 +743,21 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                                      n_buckets=n_buckets,
                                      block=spec.block_size)
         drain()
+        mem_extra = None
+        if memory_on:
+            try:  # a failed attribution must not lose the run
+                from repro.obs.mem import mem_metrics
+                biggest = emit_memory_attribution(
+                    steps_fns, (params, opt, batch_data, lr), sink,
+                    mem_ledger, telemetry_dir=telemetry)
+                mem_extra = mem_metrics(
+                    mem_ledger, compiled=biggest,
+                    live_peak=mem_sampler.peak_bytes
+                    if mem_sampler else None)
+            except Exception as e:
+                sink.emit("warning", what="memory.attribution",
+                          detail=str(e)[:400])
+                print(f"[warn] memory attribution failed: {e}")
         if prof_span is not None:
             # the drain above materialised the window's metrics — a real
             # host sync — so the span's wall clock is honest
@@ -662,7 +771,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                     spec.block_size, cluster, device,
                     n_steps=steps - prof_start, stage=stage,
                     bench=bench, arch=arch, mesh_shape=mesh_shape,
-                    use_kernel=bool(use_kernel))
+                    use_kernel=bool(use_kernel),
+                    extra_metrics=mem_extra)
             except Exception as e:   # a failed fold must not lose the run
                 sink.emit("warning", what="profile.fold",
                           detail=str(e)[:400])
@@ -764,6 +874,14 @@ def main(argv=None):
                          "train step itself")
     ap.add_argument("--audit-every", type=int, default=10,
                     help="audit every N-th compression-stage step")
+    ap.add_argument("--memory", default="off", choices=["off", "on"],
+                    help="per-rank HBM ledger (repro.obs.mem): a "
+                         "predicted memory event (slot registry + wire "
+                         "watermark + activation estimate vs --device "
+                         "capacity), live samples per log window with "
+                         "mem_headroom/mem_growth health verdicts, and "
+                         "post-run compiled-program attribution; "
+                         "host-side only, telemetry-neutral")
     ap.add_argument("--drift-probe", action="store_true",
                     help="with --telemetry: time each compressed-"
                          "exchange collective on the real mesh before "
@@ -795,7 +913,7 @@ def main(argv=None):
         drift_probe=args.drift_probe, log_every=args.log_every,
         profile=args.profile, profile_steps=args.profile_steps,
         bench=args.bench, audit=args.audit,
-        audit_every=args.audit_every)
+        audit_every=args.audit_every, memory=args.memory)
 
 
 if __name__ == "__main__":

@@ -25,6 +25,13 @@ Four modules, one loop:
     writer/reader (schema in :mod:`repro.obs.events`), the record
     stream ``results/bench_compare.py`` and the CI ``perf-ledger`` job
     gate on;
+  * :mod:`repro.obs.mem` — the per-rank HBM ledger: a predicted
+    :class:`MemoryLedger` (params/grads from ``analysis.model_math``,
+    optimizer slots via the ``SlotSpec`` registry, the wire
+    live-watermark over ``pipeline_breakdown``'s intervals, an
+    activation estimate), the ONE ``compiled.memory_analysis()``
+    reader + per-category attribution with an explicit residual, and
+    per-window live samples (``device.memory_stats()`` / host RSS);
   * :mod:`repro.obs.audit` — the per-segment compression-fidelity &
     frozen-variance audit: :func:`make_audit_probe` (a separate jitted
     probe emitting ``fidelity`` stats through the MetricBuffer path),
@@ -72,6 +79,16 @@ _EXPORTS = {
     "HealthMonitor": "repro.obs.audit",
     "make_audit_probe": "repro.obs.audit",
     "HEALTH_VERDICTS": "repro.obs.events",
+    "MEMORY_KINDS": "repro.obs.events",
+    "MEMORY_MODES": "repro.obs.mem",
+    "MEM_CATEGORIES": "repro.obs.mem",
+    "MemoryLedger": "repro.obs.mem",
+    "CompiledMemory": "repro.obs.mem",
+    "LiveSampler": "repro.obs.mem",
+    "attribute_compiled": "repro.obs.mem",
+    "compiled_memory": "repro.obs.mem",
+    "mem_metrics": "repro.obs.mem",
+    "predict_ledger": "repro.obs.mem",
     "bench_record": "repro.obs.bench",
     "load_ledger": "repro.obs.bench",
     "records_from_result": "repro.obs.bench",
@@ -80,7 +97,7 @@ _EXPORTS = {
 }
 
 _SUBMODULES = ("events", "metrics", "trace", "drift", "report",
-               "profile", "bench", "audit")
+               "profile", "bench", "audit", "mem")
 
 __all__ = sorted(_EXPORTS) + list(_SUBMODULES)
 

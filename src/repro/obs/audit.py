@@ -58,6 +58,15 @@ AUDIT_MODES = ("off", "on")
 # over the trailing median
 DRIFT_BAND = 2.0
 ERR_GROWTH_MAX = 10.0
+
+# memory-verdict defaults (HealthMonitor.observe_memory): the fraction
+# of capacity the sampled peak may reach before ``mem_headroom`` fires,
+# how many consecutive log windows of strictly-rising bytes_in_use make
+# a ``mem_growth`` (leak) verdict, and the minimum total rise over that
+# run (allocator jitter is not a leak)
+MEM_HEADROOM_FRAC = 0.92
+MEM_GROWTH_WINDOWS = 4
+MEM_GROWTH_MIN_FRAC = 0.05
 LOSS_SPIKE_FACTOR = 3.0
 
 
@@ -172,12 +181,25 @@ class HealthMonitor:
         than ``err_growth_max`` x since the previous audit;
       * ``loss_spike``     — the latest loss exceeds ``loss_spike`` x
         the trailing-window median.
+
+    Live HBM samples (``launch.train --memory on``, :mod:`repro.obs
+    .mem`) feed :meth:`observe_memory`, which adds two more verdicts:
+
+      * ``mem_headroom``   — the sampled peak reaches
+        ``mem_headroom_frac`` of device capacity (imminent OOM);
+      * ``mem_growth``     — ``bytes_in_use`` rose STRICTLY across the
+        last ``mem_growth_windows`` log windows by more than
+        ``mem_growth_min_frac`` total — leak detection (a healthy run
+        plateaus after the first steady-state window).
     """
 
     def __init__(self, drift_band: float = DRIFT_BAND,
                  err_growth_max: float = ERR_GROWTH_MAX,
                  loss_spike: float = LOSS_SPIKE_FACTOR,
-                 loss_window: int = 16):
+                 loss_window: int = 16,
+                 mem_headroom_frac: float = MEM_HEADROOM_FRAC,
+                 mem_growth_windows: int = MEM_GROWTH_WINDOWS,
+                 mem_growth_min_frac: float = MEM_GROWTH_MIN_FRAC):
         assert drift_band > 1.0, drift_band
         self.drift_band = float(drift_band)
         self.err_growth_max = float(err_growth_max)
@@ -187,6 +209,13 @@ class HealthMonitor:
         self._prev_err: Optional[Tuple[float, float]] = None
         self.n_checked = 0
         self.n_failed = 0
+        assert 0.0 < mem_headroom_frac <= 1.0, mem_headroom_frac
+        self.mem_headroom_frac = float(mem_headroom_frac)
+        self.mem_growth_min_frac = float(mem_growth_min_frac)
+        self._mem_samples: deque = deque(
+            maxlen=max(int(mem_growth_windows), 2) + 1)
+        self.n_mem_checked = 0
+        self.n_mem_failed = 0
 
     def observe_loss(self, step: int, loss) -> None:
         """Record one step's loss (non-finite values are ignored — the
@@ -273,6 +302,63 @@ class HealthMonitor:
         if details:
             fields["detail"] = "; ".join(details)
         warns = [{"what": f"audit.{v}", "step": int(step),
+                  "detail": "; ".join(details)} for v in verdicts]
+        return fields, warns
+
+    def observe_memory(self, step: int, bytes_in_use: float,
+                       peak_bytes_in_use: Optional[float] = None,
+                       capacity_bytes: Optional[float] = None
+                       ) -> Tuple[dict, List[dict]]:
+        """One log window's live HBM sample (repro.obs.mem) -> the
+        ``health`` event fields + one ``warning``'s fields per verdict
+        (``mem_headroom`` / ``mem_growth``)."""
+        verdicts: List[str] = []
+        details: List[str] = []
+        in_use = float(bytes_in_use)
+        peak = (float(peak_bytes_in_use)
+                if isinstance(peak_bytes_in_use, (int, float))
+                and math.isfinite(peak_bytes_in_use) else in_use)
+
+        headroom = None
+        if capacity_bytes and capacity_bytes > 0:
+            headroom = peak / float(capacity_bytes)
+            if headroom >= self.mem_headroom_frac:
+                verdicts.append("mem_headroom")
+                details.append(
+                    f"peak {peak / 2 ** 30:.2f} GiB is {headroom:.1%} of "
+                    f"{capacity_bytes / 2 ** 30:.2f} GiB capacity "
+                    f"(>= {self.mem_headroom_frac:.0%})")
+
+        self._mem_samples.append(in_use)
+        growth = None
+        if len(self._mem_samples) == self._mem_samples.maxlen:
+            xs = list(self._mem_samples)
+            rising = all(b > a for a, b in zip(xs, xs[1:]))
+            if rising and xs[0] > 0:
+                growth = xs[-1] / xs[0] - 1.0
+                if growth > self.mem_growth_min_frac:
+                    verdicts.append("mem_growth")
+                    details.append(
+                        f"bytes_in_use rose {growth:+.1%} over the last "
+                        f"{len(xs) - 1} window(s) with no plateau — "
+                        "possible leak")
+
+        ok = not verdicts
+        self.n_mem_checked += 1
+        self.n_mem_failed += 0 if ok else 1
+        fields: Dict[str, object] = {
+            "step": int(step), "ok": ok, "verdicts": verdicts,
+            "bytes_in_use": in_use, "peak_bytes_in_use": peak,
+            "source": "repro.obs.mem"}
+        if capacity_bytes:
+            fields["capacity_bytes"] = float(capacity_bytes)
+        if headroom is not None:
+            fields["headroom_frac"] = float(headroom)
+        if growth is not None:
+            fields["growth_frac"] = float(growth)
+        if details:
+            fields["detail"] = "; ".join(details)
+        warns = [{"what": f"memory.{v}", "step": int(step),
                   "detail": "; ".join(details)} for v in verdicts]
         return fields, warns
 

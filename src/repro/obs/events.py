@@ -51,7 +51,16 @@ Event kinds
                  folded from one ``fidelity`` record + the trailing
                  loss window: ``ok`` or a list of named verdicts
                  (``variance_drift``, ``ef_blowup``, ``non_finite``,
-                 ``loss_spike``).
+                 ``loss_spike``, ``mem_headroom``, ``mem_growth``).
+``memory``       one per-rank HBM ledger record (:mod:`repro.obs.mem`),
+                 disambiguated by ``kind``: ``predicted`` (the itemized
+                 MemoryLedger — params/grads/opt_state/wire/activations
+                 categories vs device capacity), ``compiled`` (one
+                 jitted program's ``memory_analysis()`` argument/
+                 output/temp/alias bytes, attributed back onto the
+                 ledger categories with an explicit residual), or
+                 ``live`` (a ``device.memory_stats()`` / host-RSS
+                 sample taken once per log window).
 
 Besides the JSONL event stream, this module also owns the **perf-ledger
 record schema** (``BENCH_*.json`` files — :mod:`repro.obs.bench` reads
@@ -174,7 +183,27 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
         {"step": "int", "ok": "bool"},
         {"verdicts": "list", "v_ratio": "num", "v_drift_max": "num",
          "err_growth": "num", "loss": "num", "loss_median": "num",
-         "detail": "str", "source": "str"},
+         "bytes_in_use": "num", "peak_bytes_in_use": "num",
+         "capacity_bytes": "num", "headroom_frac": "num",
+         "growth_frac": "num", "detail": "str", "source": "str"},
+    ),
+    "memory": (
+        # kind: "predicted" | "compiled" | "live"
+        {"kind": "str"},
+        {# predicted: the itemized ledger
+         "categories": "dict", "total_bytes": "num",
+         "capacity_bytes": "num", "headroom_frac": "num",
+         "wire_watermark_bytes": "num", "state_bytes_per_rank": "num",
+         # compiled: one program's memory_analysis() + attribution
+         "program": "str", "argument_bytes": "num",
+         "output_bytes": "num", "temp_bytes": "num",
+         "alias_bytes": "num", "peak_bytes": "num",
+         "attribution": "dict", "attributed_bytes": "num",
+         "residual_bytes": "num", "residual_frac": "num",
+         # live: one per-window sample
+         "step": "int", "bytes_in_use": "num",
+         "peak_bytes_in_use": "num", "device": "str",
+         "source": "str", "stage": "str"},
     ),
 }
 
@@ -182,9 +211,13 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
 TRANSITION_KINDS = ("stage", "sync")
 
 # the verdict names a "health" event's ``verdicts`` list may carry
-# (repro.obs.audit.HealthMonitor emits them)
+# (repro.obs.audit.HealthMonitor emits them); mem_* verdicts come from
+# the live HBM samples (repro.obs.mem), not the fidelity probe
 HEALTH_VERDICTS = ("variance_drift", "ef_blowup", "non_finite",
-                   "loss_spike")
+                   "loss_spike", "mem_headroom", "mem_growth")
+
+# the ``kind`` values a "memory" event may carry (repro.obs.mem)
+MEMORY_KINDS = ("predicted", "compiled", "live")
 
 
 def validate_event(rec: dict) -> dict:

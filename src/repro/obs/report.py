@@ -28,6 +28,11 @@ folds through here.  Sections (each skipped when its events are absent):
     count, the last audit's headline scalars, the per-segment table
     (cosine/sign fidelity, shadow-vs-frozen variance drift, EF-residual
     mass), and the worst-drifting segments ranked by ``|log(drift)|``;
+  * **memory** — the per-rank HBM ledger (``launch.train --memory on``,
+    :mod:`repro.obs.mem`): the predicted category breakdown vs capacity,
+    per-program compiled attribution (temp+output mapped onto the
+    categories with an explicit residual), and the live sample
+    first/last/peak;
   * **health** — the HealthMonitor's verdict timeline (ok/failed per
     audited step, which verdicts fired);
   * **warnings** — host-side anomalies (e.g. non-finite variance).
@@ -39,7 +44,9 @@ CLI (the CI smoke job runs this over a real training log)::
     python -m repro.obs.report run_a.jsonl --diff run_b.jsonl
 
 ``--diff`` prints the two runs side by side — steps/s, per-tier plan
-bytes, drift verdicts, audit fidelity headlines and health failures —
+bytes, drift verdicts, audit fidelity headlines, memory-ledger rows
+(predicted totals, per-program temp bytes, live peak) and health
+failures —
 the manual counterpart of the CI perf-ledger gate
 (``results/bench_compare.py``).
 """
@@ -218,6 +225,41 @@ def summarize(records: List[dict]) -> Dict[str, object]:
                                       for i in ranked[:5]]
         out["audit"] = sec
 
+    memories = by.get("memory", [])
+    if memories:
+        sec = {}
+        predicted = [r for r in memories if r.get("kind") == "predicted"]
+        if predicted:
+            p = predicted[-1]
+            pred = {"categories": p.get("categories", {}),
+                    "total_bytes": p.get("total_bytes")}
+            for k in ("capacity_bytes", "headroom_frac",
+                      "wire_watermark_bytes", "state_bytes_per_rank"):
+                if k in p:
+                    pred[k] = p[k]
+            sec["predicted"] = pred
+        compiled = [r for r in memories if r.get("kind") == "compiled"]
+        if compiled:
+            sec["compiled"] = [
+                {k: r[k] for k in
+                 ("program", "argument_bytes", "output_bytes",
+                  "temp_bytes", "peak_bytes", "attributed_bytes",
+                  "residual_bytes", "residual_frac") if k in r}
+                for r in compiled]
+        live = sorted((r for r in memories if r.get("kind") == "live"),
+                      key=lambda r: r.get("step", 0))
+        if live:
+            sec["live"] = {
+                "n_samples": len(live),
+                "source": live[-1].get("device", "?"),
+                "first_bytes": live[0].get("bytes_in_use"),
+                "last_bytes": live[-1].get("bytes_in_use"),
+                "peak_bytes": max(r.get("peak_bytes_in_use",
+                                        r.get("bytes_in_use", 0.0))
+                                  for r in live),
+            }
+        out["memory"] = sec
+
     healths = by.get("health", [])
     if healths:
         healths = sorted(healths, key=lambda r: r["step"])
@@ -345,6 +387,30 @@ def format_report(summary: Dict[str, object]) -> str:
             lines.append("  worst drift: " + " ".join(
                 f"seg{r['seg']}:{_fmt(r['v_drift'])}"
                 for r in au["worst_drift"]))
+    if "memory" in summary:
+        head("memory ledger")
+        m = summary["memory"]
+        if "predicted" in m:
+            p = m["predicted"]
+            lines.append("  predicted (per rank):")
+            for name, b in p.get("categories", {}).items():
+                lines.append(f"    {name:12s} {_fmt(b)} B")
+            lines += [f"  {k}: {_fmt(p[k])}" for k in
+                      ("total_bytes", "capacity_bytes", "headroom_frac")
+                      if k in p]
+        if "compiled" in m:
+            lines.append("  compiled programs:")
+            lines += ["    " + ln for ln in _table(
+                m["compiled"], ["program", "argument_bytes",
+                                "output_bytes", "temp_bytes",
+                                "peak_bytes", "residual_frac"])]
+        if "live" in m:
+            lv = m["live"]
+            lines.append(f"  live ({lv['source']}): "
+                         f"{lv['n_samples']} sample(s), "
+                         f"first {_fmt(lv['first_bytes'])} B, "
+                         f"last {_fmt(lv['last_bytes'])} B, "
+                         f"peak {_fmt(lv['peak_bytes'])} B")
     if "health" in summary:
         head("health timeline")
         h = summary["health"]
@@ -404,6 +470,29 @@ def _diff_rows(a: Dict[str, object], b: Dict[str, object]) -> List[dict]:
             vb = (b.get("audit") or {}).get(field)
             if va is not None or vb is not None:
                 row(f"audit.{field}", va, vb)
+    if "memory" in a or "memory" in b:
+        def mem(s, *path):
+            node = s.get("memory") or {}
+            for p in path:
+                node = (node or {}).get(p) if isinstance(node, dict) \
+                    else None
+            return node
+        for field in ("total_bytes", "wire_watermark_bytes",
+                      "state_bytes_per_rank", "headroom_frac"):
+            va, vb = mem(a, "predicted", field), mem(b, "predicted", field)
+            if va is not None or vb is not None:
+                row(f"mem.predicted.{field}", va, vb)
+        progs_a = {r["program"]: r for r in mem(a, "compiled") or []}
+        progs_b = {r["program"]: r for r in mem(b, "compiled") or []}
+        for prog in sorted(set(progs_a) | set(progs_b)):
+            for field in ("temp_bytes", "residual_frac"):
+                va = (progs_a.get(prog) or {}).get(field)
+                vb = (progs_b.get(prog) or {}).get(field)
+                if va is not None or vb is not None:
+                    row(f"mem.{prog}.{field}", va, vb)
+        va, vb = mem(a, "live", "peak_bytes"), mem(b, "live", "peak_bytes")
+        if va is not None or vb is not None:
+            row("mem.live.peak_bytes", va, vb)
     if "health" in a or "health" in b:
         row("health.failed", (a.get("health") or {}).get("n_failed"),
             (b.get("health") or {}).get("n_failed"))

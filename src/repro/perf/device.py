@@ -51,6 +51,19 @@ class DeviceSpec:
         return (max(flops / self.peak_flops, hbm_bytes / self.hbm_bw)
                 + kernels * self.kernel_overhead)
 
+    @property
+    def hbm_capacity(self) -> Optional[int]:
+        """Per-rank memory capacity in bytes — what the memory ledger
+        (repro.obs.mem) and the tuner's capacity constraint price
+        against.  TPU presets: the datasheet HBM size (``hbm_bytes``).
+        ``cpu-host``: the machine's REAL installed RAM via psutil —
+        the preset's nominal 64 GiB is a roofline fiction, not this
+        host's capacity — or None when psutil is unavailable (no
+        capacity constraint rather than a wrong one)."""
+        if self.name == "cpu-host":
+            return host_memory_bytes()
+        return self.hbm_bytes
+
     @classmethod
     def from_measured(cls, path: str, name: Optional[str] = None,
                       base: str = "tpu-v5e") -> "DeviceSpec":
@@ -105,6 +118,15 @@ DEVICES: Dict[str, DeviceSpec] = {
                            kernel_overhead=5e-5,
                            hbm_bytes=64 * 1024 ** 3, ici_bw=1e10),
 }
+
+
+def host_memory_bytes() -> Optional[int]:
+    """Total installed host RAM in bytes (psutil), or None."""
+    try:
+        import psutil
+        return int(psutil.virtual_memory().total)
+    except Exception:
+        return None
 
 
 def get_device(name: str) -> DeviceSpec:

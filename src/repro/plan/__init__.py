@@ -14,11 +14,12 @@ cost model prices the SAME plan objects the executor runs, and
 compiled HLO byte-for-byte.
 """
 from repro.plan.cost import (CLUSTERS, ClusterSpec, LinkSpec,
-                             cross_pod_bytes, get_cluster, list_clusters,
-                             op_compute, op_time, pipeline_breakdown,
+                             bucket_staging_bytes, cross_pod_bytes,
+                             get_cluster, list_clusters, op_compute,
+                             op_time, pipeline_breakdown,
                              pipelined_plan_time, plan_compute,
                              plan_compute_time, plan_time,
-                             predict_step_time)
+                             predict_step_time, wire_watermark)
 from repro.plan.executor import execute_plan
 from repro.plan.ir import (AllGather, AllReduce, AllToAll, Broadcast,
                            CollectiveOp, CommPlan, ReduceScatter, WireSpec)
@@ -31,9 +32,11 @@ __all__ = [
     "AllGather", "AllReduce", "AllToAll", "Broadcast", "CLUSTERS",
     "Candidate", "ClusterSpec", "CollectiveOp", "CommPlan", "LinkSpec",
     "ReduceScatter", "TuneResult", "WireSpec", "allreduce_schedule",
-    "autotune", "build_candidate", "cross_pod_bytes", "enumerate_candidates",
+    "autotune", "bucket_staging_bytes", "build_candidate",
+    "cross_pod_bytes", "enumerate_candidates",
     "execute_plan", "flat_schedule", "get_cluster", "hier_schedule",
     "list_clusters", "needs_outer_ef", "op_compute", "op_time",
     "pipeline_breakdown", "pipelined_plan_time", "plan_compute",
     "plan_compute_time", "plan_time", "predict_step_time",
+    "wire_watermark",
 ]

@@ -427,6 +427,48 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
             "intervals": intervals}
 
 
+def bucket_staging_bytes(pplan) -> list:
+    """Per-bucket wire/staging bytes: the sum of each bucket op's
+    per-device operand payload — the buffers alive while that bucket is
+    in flight.  Summing over a bucket's ops (rather than taking the
+    max) is deliberately conservative: consecutive stages' buffers
+    coexist across the stage handoff (a gather operand is built while
+    the exchange result still lives)."""
+    return [float(sum(op.payload_bytes for op in bp.plan.ops))
+            for bp in pplan.buckets]
+
+
+def wire_watermark(intervals, bucket_bytes) -> float:
+    """Peak CONCURRENT wire/staging bytes over a scheduled timeline.
+
+    ``intervals`` is ``pipeline_breakdown``'s record list; bucket ``b``
+    is considered in flight from its first interval's ``t_start`` to its
+    last interval's ``t_end`` and holds ``bucket_bytes[b]`` staging
+    bytes for that whole window.  The watermark is the max over time of
+    the sum of in-flight buckets' bytes — what the pipelined executor
+    actually keeps live at once, NOT the sum over all buckets (deep
+    pipelines retire early buckets' buffers before late ones start)."""
+    spans = {}
+    for rec in intervals:
+        b = rec["bucket"]
+        lo, hi = spans.get(b, (rec["t_start"], rec["t_end"]))
+        spans[b] = (min(lo, rec["t_start"]), max(hi, rec["t_end"]))
+    if not spans:
+        return float(sum(bucket_bytes))
+    events = []
+    for b, (lo, hi) in spans.items():
+        nbytes = float(bucket_bytes[b]) if b < len(bucket_bytes) else 0.0
+        # close-before-open at equal timestamps: back-to-back buckets
+        # on one stream do not stack
+        events.append((lo, 1, nbytes))
+        events.append((hi, 0, -nbytes))
+    peak = cur = 0.0
+    for _, _, delta in sorted(events):
+        cur += delta
+        peak = max(peak, cur)
+    return peak
+
+
 def pipelined_plan_time(pplan, spec: ClusterSpec,
                         include_compute: bool = True) -> float:
     """Predicted seconds for one pipelined execution (overlap priced).

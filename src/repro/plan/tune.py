@@ -88,6 +88,12 @@ class Candidate:
     layout: str = "replicated"   # optimizer-state layout priced
     state_bytes_per_rank: int = 0  # per-rank state bytes from the slot
     #                                registry extents (repro.state)
+    wire_watermark_bytes: float = 0.0  # peak concurrent wire/staging
+    #                                    bytes (live watermark over the
+    #                                    pipelined schedule's intervals)
+    peak_bytes_per_rank: float = 0.0   # state + watermark + the caller's
+    #                                    fixed bytes (params/grads/acts);
+    #                                    filled by autotune's budget pass
 
     @property
     def t_step_avg(self) -> float:
@@ -110,6 +116,8 @@ class Candidate:
                 "t_step_avg_s": self.t_step_avg,
                 "layout": self.layout,
                 "state_bytes_per_rank": self.state_bytes_per_rank,
+                "wire_watermark_bytes": self.wire_watermark_bytes,
+                "peak_bytes_per_rank": self.peak_bytes_per_rank,
                 "hlo_bytes": self.hlo_bytes,
                 "bytes_per_step": self.bytes_per_step,
                 "dci_bytes_per_pod": self.dci_bytes_per_pod,
@@ -216,7 +224,8 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         outer_ef = False
     if n_buckets > 1:
         from repro.pipeline import Bucketer, lower_to_pipelined
-        from repro.plan.cost import pipeline_breakdown
+        from repro.plan.cost import (bucket_staging_bytes,
+                                     pipeline_breakdown, wire_watermark)
         bk = Bucketer.for_exchange(d_pad, spec.n_total, block_size,
                                    n_buckets)
         pplan = lower_to_pipelined(plan, comp, bk)
@@ -225,11 +234,14 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         t_ex = bd["t_total"]
         t_comp = float(bd["busy"].get("compute", 0.0))
         eff_buckets = bk.n_buckets
+        watermark = wire_watermark(bd["intervals"],
+                                   bucket_staging_bytes(pplan))
     else:
         t_comp = (plan_compute_time(plan, comp, spec)
                   if price_compute else 0.0)
         t_ex = plan_time(plan, spec) + t_comp
         eff_buckets = 1
+        watermark = float(sum(op.payload_bytes for op in plan.ops))
     return Candidate(topology, compressor, block_size, plan,
                      t_ex, plan.hlo_bytes(),
                      cross_pod_bytes(plan, spec), d_pad,
@@ -238,7 +250,8 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
                      use_kernel=use_kernel, t_compute=t_comp,
                      layout=layout,
                      state_bytes_per_rank=layout_state_bytes(
-                         spec, d_pad, topology, layout))
+                         spec, d_pad, topology, layout),
+                     wire_watermark_bytes=watermark)
 
 
 def enumerate_candidates(spec: ClusterSpec, d: int,
@@ -313,7 +326,9 @@ def autotune(spec: ClusterSpec, d: int,
              max_bytes_per_step: Optional[float] = None,
              max_t_per_step: Optional[float] = None,
              layouts: Sequence[str] = ("replicated",),
-             max_state_bytes_per_rank: Optional[int] = None) -> TuneResult:
+             max_state_bytes_per_rank: Optional[int] = None,
+             hbm_capacity: Optional[float] = None,
+             fixed_bytes_per_rank: float = 0.0) -> TuneResult:
     """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
 
     Selection order: smallest ``sync_interval`` first (update frequency
@@ -329,6 +344,16 @@ def autotune(spec: ClusterSpec, d: int,
     ``max_state_bytes_per_rank`` does the same against the slot-registry
     state bytes (``why="over state-memory budget"``).
 
+    ``hbm_capacity`` is the capacity-aware generalisation: every
+    candidate's ``peak_bytes_per_rank`` is filled with
+    ``state_bytes_per_rank + wire_watermark_bytes +
+    fixed_bytes_per_rank`` (the caller supplies params/grads/activation
+    bytes — layout-independent — via ``fixed_bytes_per_rank``), and
+    candidates whose peak exceeds the capacity are marked invalid
+    (``why="over hbm capacity"``).  The explicit
+    ``max_state_bytes_per_rank`` override is kept and still applies
+    when stricter.
+
     ``price_compute=False`` reverts to link-only pricing — the pre-
     ``repro.perf`` objective, kept so decision diffs are testable (and
     for fabrics whose compute genuinely runs elsewhere).  Link-only
@@ -340,9 +365,12 @@ def autotune(spec: ClusterSpec, d: int,
         n_buckets_options, sync_intervals, use_kernel_options,
         price_compute, layouts))
     if (max_bytes_per_step is not None or max_t_per_step is not None
-            or max_state_bytes_per_rank is not None):
+            or max_state_bytes_per_rank is not None
+            or hbm_capacity is not None):
         budgeted = []
         for c in table:
+            peak = (c.state_bytes_per_rank + c.wire_watermark_bytes
+                    + float(fixed_bytes_per_rank))
             over = c.valid and (
                 (max_bytes_per_step is not None
                  and c.bytes_per_step > max_bytes_per_step)
@@ -351,11 +379,17 @@ def autotune(spec: ClusterSpec, d: int,
             over_state = c.valid and (
                 max_state_bytes_per_rank is not None
                 and c.state_bytes_per_rank > max_state_bytes_per_rank)
+            over_hbm = c.valid and (
+                hbm_capacity is not None and peak > hbm_capacity)
             budgeted.append(dataclasses.replace(
-                c, valid=c.valid and not over and not over_state,
+                c, peak_bytes_per_rank=peak,
+                valid=(c.valid and not over and not over_state
+                       and not over_hbm),
                 why=c.why or ("over comm budget" if over
                               else "over state-memory budget"
-                              if over_state else "")))
+                              if over_state
+                              else "over hbm capacity"
+                              if over_hbm else "")))
         table = tuple(budgeted)
     valid = [c for c in table if c.valid]
     assert valid, f"no valid plan for {spec.name} (d={d})"

@@ -85,7 +85,8 @@ class TestAuditEventSchema:
 
     def test_verdict_vocabulary_pinned(self):
         assert E.HEALTH_VERDICTS == ("variance_drift", "ef_blowup",
-                                     "non_finite", "loss_spike")
+                                     "non_finite", "loss_spike",
+                                     "mem_headroom", "mem_growth")
         assert AUDIT_MODES == ("off", "on")
 
 

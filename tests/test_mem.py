@@ -1,0 +1,623 @@
+"""Tests for repro.obs.mem — the per-rank HBM ledger.
+
+Four pinned contracts:
+
+  * the slot-registry prediction is EXACT: ``state_bytes`` equals the
+    summed nbytes of the arrays ``init_rank_state`` /
+    ``init_train_state`` actually allocate, per (optimizer x layout x
+    topology);
+  * the wire category is a live WATERMARK over the pipelined schedule
+    (peak concurrent buckets in flight), not a sum over buckets;
+  * compiled attribution is an identity — ``attributed + residual ==
+    output + temp`` — and the residual on a real compiled smoke step
+    stays under 25%;
+  * ``--memory on`` is telemetry-neutral: identical compiled collective
+    signature and bitwise-equal losses, flat and hier.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.obs import events as E
+from repro.obs.mem import (MEM_CATEGORIES, MEMORY_MODES, CompiledMemory,
+                           LiveSampler, MemoryLedger, attribute_compiled,
+                           format_rows, mem_metrics, predict_ledger)
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+REPO_SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n: int = 4, timeout: int = 900) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = REPO_SRC
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env,
+                       timeout=timeout)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}"
+    return r.stdout
+
+
+def load_bench_compare():
+    spec = importlib.util.spec_from_file_location(
+        "bench_compare", os.path.join(REPO, "results", "bench_compare.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# --------------------------------------------------------------------------
+# wire watermark: peak concurrency, not sum
+# --------------------------------------------------------------------------
+
+class TestWireWatermark:
+    def _iv(self, bucket, t0, t1):
+        return {"bucket": bucket, "stage": 0, "phase": "wire",
+                "stream": "intra", "kind": "allreduce", "tier": "intra",
+                "t_start": t0, "t_end": t1}
+
+    def test_empty_intervals_fall_back_to_sum(self):
+        from repro.plan import wire_watermark
+        assert wire_watermark([], [100.0, 50.0]) == 150.0
+
+    def test_disjoint_buckets_peak_is_max_not_sum(self):
+        from repro.plan import wire_watermark
+        ivs = [self._iv(0, 0.0, 1.0), self._iv(1, 2.0, 3.0)]
+        assert wire_watermark(ivs, [100.0, 60.0]) == 100.0
+
+    def test_overlapping_buckets_stack(self):
+        from repro.plan import wire_watermark
+        ivs = [self._iv(0, 0.0, 2.0), self._iv(1, 1.0, 3.0)]
+        assert wire_watermark(ivs, [100.0, 60.0]) == 160.0
+
+    def test_back_to_back_buckets_do_not_stack(self):
+        # bucket 0 ends EXACTLY when bucket 1 starts: close-before-open
+        from repro.plan import wire_watermark
+        ivs = [self._iv(0, 0.0, 1.0), self._iv(1, 1.0, 2.0)]
+        assert wire_watermark(ivs, [100.0, 60.0]) == 100.0
+
+    def test_bucket_span_covers_all_its_intervals(self):
+        # bucket 0's pre+wire+post span [0,3] overlaps bucket 1's [2,4]
+        from repro.plan import wire_watermark
+        ivs = [self._iv(0, 0.0, 1.0), self._iv(0, 2.5, 3.0),
+               self._iv(1, 2.0, 4.0)]
+        assert wire_watermark(ivs, [100.0, 60.0]) == 160.0
+
+    def test_pipelined_exchange_watermark_bounded_by_sum(self):
+        from repro.optim import get_compressor
+        from repro.pipeline import Bucketer, lower_to_pipelined
+        from repro.plan import flat_schedule, get_cluster
+        from repro.plan.cost import (bucket_staging_bytes,
+                                     pipeline_breakdown, wire_watermark)
+        comp = get_compressor("onebit", block_size=512)
+        plan = flat_schedule(comp, 8192, 4, ("data",))
+        bk = Bucketer.for_exchange(8192, 4, 512, 4)
+        pplan = lower_to_pipelined(plan, comp, bk)
+        spec = get_cluster("ethernet-10g", 4)
+        bd = pipeline_breakdown(pplan, spec)
+        per_bucket = bucket_staging_bytes(pplan)
+        wm = wire_watermark(bd["intervals"], per_bucket)
+        assert 0.0 < wm <= sum(per_bucket)
+        assert len(per_bucket) == pplan.n_buckets
+
+
+# --------------------------------------------------------------------------
+# satellite 1: the registry prediction is EXACT per (optimizer x layout
+# x topology)
+# --------------------------------------------------------------------------
+
+PINS = (("onebit_adam", "replicated", "flat"),
+        ("onebit_adam", "replicated", "hier"),
+        ("onebit_adam", "zero1", "flat"),
+        ("onebit_lamb", "replicated", "flat"),
+        ("zerone_adam", "local", "flat"))
+
+
+class TestStateBytesExact:
+    @pytest.mark.parametrize("optname,layout,topology", PINS)
+    def test_rank_state_nbytes_match_registry(self, optname, layout,
+                                              topology):
+        """``state_bytes`` == summed nbytes of the per-rank zeros tree
+        the registry itself allocates — no estimate, an identity."""
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        from repro.optim import get_optimizer
+        from repro.state import init_rank_state, state_bytes
+        from repro.train.step import state_layout_ctx
+        cfg = get_config("bert-base-smoke")
+        mesh = make_mesh((1, 1), ("data", "model"))
+        ctx = state_layout_ctx(cfg, mesh, block=512, topology=topology)
+        slots = get_optimizer(optname).state_slots(layout)
+        tree = init_rank_state(slots, ctx)
+        measured = sum(leaf.nbytes for leaf in tree.values())
+        assert measured == state_bytes(slots, ctx), (optname, layout,
+                                                     topology)
+
+    def test_train_state_shards_match_registry_on_4_devices(self):
+        """The REAL state arrays on a forced (4,1) and hier (2,2,1)
+        mesh: after one train step (which applies the step's shardings
+        — ``init_train_state`` hands back host-placed arrays), device
+        0's shard bytes equal ``state_bytes`` EXACTLY, replicated and
+        zero1."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.optim import get_optimizer
+        from repro.state import state_bytes
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step, state_layout_ctx)
+
+        cfg = get_config("bert-base-smoke")
+        dev0 = jax.local_devices()[0]
+        batch = SyntheticStream(cfg, InputShape("t", 64, 4,
+                                                "train")).batch_at(0)
+        cases = ((((4, 1), ("data", "model")), "flat", "replicated"),
+                 (((4, 1), ("data", "model")), "flat", "zero1"),
+                 (((2, 2, 1), ("pod", "data", "model")), "hier",
+                  "replicated"))
+        for (dims, axes), topology, layout in cases:
+            mesh = make_mesh(dims, axes)
+            optim = get_optimizer("onebit_adam")
+            ctx = state_layout_ctx(cfg, mesh, block=512,
+                                   topology=topology)
+            opt = init_train_state(cfg, mesh, block=512, layout=layout,
+                                   topology=topology, optimizer=optim)
+            params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+            if layout == "zero1":
+                params = jax.tree.map(
+                    lambda a: a.astype(jnp.bfloat16), params)
+            step = make_train_step(
+                cfg, mesh, TrainStepConfig(
+                    stage="compressed", topology=topology,
+                    layout=layout, block_size=512), donate=False)
+            _, opt, _ = step(params, opt, batch, jnp.float32(1e-3))
+            measured = 0
+            for leaf in opt.values():
+                measured += sum(
+                    sh.data.nbytes for sh in leaf.addressable_shards
+                    if sh.device == dev0)
+            predicted = state_bytes(optim.state_slots(layout), ctx)
+            assert measured == predicted, (topology, layout, measured,
+                                           predicted)
+            print(f"{topology}/{layout}: {measured} B exact OK")
+        """, n=4)
+        assert out.count("exact OK") == 3
+
+
+# --------------------------------------------------------------------------
+# the predicted ledger
+# --------------------------------------------------------------------------
+
+class TestPredictLedger:
+    def _ledger(self, **kw):
+        from repro.configs import get_config
+        from repro.launch.mesh import make_mesh
+        cfg = get_config("bert-base-smoke")
+        mesh = make_mesh((1, 1), ("data", "model"))
+        return predict_ledger(cfg, mesh, batch_global=4, seq=64, **kw)
+
+    def test_categories_complete_and_positive(self):
+        led = self._ledger()
+        assert tuple(led.categories) == MEM_CATEGORIES
+        for name in ("params", "grads", "opt_state", "activations"):
+            assert led.categories[name] > 0, name
+        assert led.categories["wire"] == 0.0      # no plan supplied
+        assert led.total_bytes == sum(led.categories.values())
+
+    def test_capacity_and_headroom(self):
+        led = self._ledger(capacity_bytes=float(2 ** 34))
+        assert led.headroom_frac == led.total_bytes / 2 ** 34
+        assert self._ledger().headroom_frac is None
+
+    def test_event_fields_validate_against_schema(self):
+        led = self._ledger(capacity_bytes=float(2 ** 34))
+        rec = E.make_event("memory", **led.event_fields())
+        assert rec["kind"] == "predicted"
+        assert rec["state_bytes_per_rank"] == led.categories["opt_state"]
+
+    def test_format_rows_lists_every_category(self):
+        text = format_rows(self._ledger(capacity_bytes=float(2 ** 34)))
+        for name in MEM_CATEGORIES:
+            assert name in text
+        assert "capacity" in text
+
+
+# --------------------------------------------------------------------------
+# compiled attribution: an identity with an explicit residual
+# --------------------------------------------------------------------------
+
+class TestCompiledAttribution:
+    def _ledger(self, **cats):
+        base = {"params": 100.0, "grads": 50.0, "opt_state": 300.0,
+                "wire": 10.0, "activations": 40.0}
+        base.update(cats)
+        return MemoryLedger(categories=base)
+
+    def test_attributed_plus_residual_is_total(self):
+        cm = CompiledMemory("step", argument_bytes=1000, output_bytes=450,
+                            temp_bytes=250, alias_bytes=0)
+        att = attribute_compiled(self._ledger(), cm, metrics_bytes=8.0)
+        total = float(cm.output_bytes + cm.temp_bytes)
+        assert att["attributed_bytes"] + att["residual_bytes"] == total
+        assert att["residual_bytes"] >= 0.0
+        # prediction (508) covers only part of the 700 B pool
+        assert att["residual_frac"] == pytest.approx(192.0 / 700.0)
+        assert att["over_predicted_bytes"] == 0.0
+
+    def test_over_prediction_is_reported_not_absorbed(self):
+        cm = CompiledMemory("step", argument_bytes=0, output_bytes=100,
+                            temp_bytes=0, alias_bytes=0)
+        att = attribute_compiled(self._ledger(), cm, metrics_bytes=0.0)
+        assert att["attributed_bytes"] == 100.0
+        assert att["residual_bytes"] == 0.0
+        assert att["over_predicted_bytes"] == 400.0
+        # greedy order: params claims first
+        assert att["attribution"]["params"] == 100.0
+        assert att["attribution"]["activations"] == 0.0
+
+    def test_per_device_bytes_formula(self):
+        cm = CompiledMemory("step", argument_bytes=10, output_bytes=7,
+                            temp_bytes=5, alias_bytes=3)
+        assert cm.per_device_bytes == 19
+        rec = E.make_event("memory", **cm.event_fields())
+        assert rec["peak_bytes"] == 19.0
+
+    def test_compiled_smoke_step_residual_under_25_percent(self):
+        """The acceptance pin: lower+compile the real train step on 4
+        forced host devices, read ``memory_analysis()`` through the ONE
+        reader, attribute temp+output onto the predicted ledger —
+        attributed + residual ≡ compiled total and residual < 25%."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.obs.mem import (attribute_compiled, compiled_memory,
+                                   predict_ledger)
+        from repro.plan import get_cluster
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
+
+        cfg = get_config("bert-base-smoke")
+        mesh = make_mesh((4, 1), ("data", "model"))
+        spec = get_cluster("ethernet-10g", 4, device="tpu-v5e")
+        for stage in ("warmup", "compressed"):
+            tsc = TrainStepConfig(stage=stage, block_size=512)
+            step = make_train_step(cfg, mesh, tsc, donate=False)
+            params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+            opt = init_train_state(cfg, mesh, block=512)
+            batch = SyntheticStream(cfg, InputShape("t", 64, 4,
+                                                    "train")).batch_at(0)
+            compiled = step.build(batch).lower(
+                params, opt, batch, jnp.float32(1e-3)).compile()
+            cm = compiled_memory(compiled, program=stage)
+            assert cm is not None, "CPU backend lost memory_analysis()"
+            from repro.launch.train import run_plans
+            from repro.optim import get_optimizer
+            optim = get_optimizer("onebit_adam")
+            _, plan = run_plans(optim, cfg, mesh, "flat", 512)
+            ledger = predict_ledger(cfg, mesh, optim=optim, block=512,
+                                    batch_global=4, seq=64, plan=plan,
+                                    spec=spec)
+            att = attribute_compiled(ledger, cm)
+            total = float(cm.output_bytes + cm.temp_bytes)
+            assert att["attributed_bytes"] + att["residual_bytes"] \\
+                == total
+            assert att["residual_frac"] < 0.25, (stage, att)
+            print(f"{stage}: residual {att['residual_frac']:.1%} OK")
+        """, n=4)
+        assert out.count("OK") == 2
+
+
+# --------------------------------------------------------------------------
+# satellite 4: the memory event schema + report handling
+# --------------------------------------------------------------------------
+
+class TestMemoryEvents:
+    def test_modes_and_kinds_pinned(self):
+        assert MEMORY_MODES == ("off", "on")
+        assert E.MEMORY_KINDS == ("predicted", "compiled", "live")
+        assert MEM_CATEGORIES == ("params", "grads", "opt_state", "wire",
+                                  "activations")
+
+    def test_kind_is_required(self):
+        with pytest.raises(ValueError, match="missing required"):
+            E.make_event("memory", total_bytes=1.0)
+
+    def test_malformed_categories_rejected_with_field_name(self):
+        with pytest.raises(ValueError, match="categories"):
+            E.make_event("memory", kind="predicted",
+                         categories=["params", 1.0])
+
+    def test_unknown_extras_must_be_scalars(self):
+        with pytest.raises(ValueError, match="mystery"):
+            E.make_event("memory", kind="live", mystery=object())
+
+    def test_live_sampler_fields_validate(self):
+        fields = LiveSampler().sample(step=3)
+        assert fields is not None, "no live source on this host"
+        rec = E.make_event("memory", **fields)
+        assert rec["bytes_in_use"] > 0
+        assert rec["peak_bytes_in_use"] >= rec["bytes_in_use"]
+        assert rec["step"] == 3
+
+    def test_report_validates_renders_and_diffs_memory(self, tmp_path):
+        from repro.obs.report import (_diff_rows, format_report, load,
+                                      summarize)
+        led = MemoryLedger(
+            categories={"params": 10.0, "grads": 5.0, "opt_state": 30.0,
+                        "wire": 2.0, "activations": 3.0},
+            capacity_bytes=100.0)
+        cm = CompiledMemory("compressed", 40, 35, 10, 0)
+        from repro.obs.mem import attribution_event_fields
+        records = [E.make_event("memory", **led.event_fields()),
+                   E.make_event("memory",
+                                **attribution_event_fields(led, cm)),
+                   E.make_event("memory", kind="live", step=0,
+                                bytes_in_use=60.0,
+                                peak_bytes_in_use=61.0,
+                                device="host-rss",
+                                source="repro.obs.mem")]
+        path = tmp_path / "tel.jsonl"
+        path.write_text("\n".join(json.dumps(r) for r in records) + "\n")
+        recs = load(str(path), validate=True)      # --validate accepts
+        summ = summarize(recs)
+        assert summ["memory"]["predicted"]["total_bytes"] == 50.0
+        assert summ["memory"]["compiled"][0]["program"] == "compressed"
+        assert summ["memory"]["live"]["peak_bytes"] == 61.0
+        text = format_report(summ)
+        assert "memory ledger" in text and "opt_state" in text
+        metrics = {r["metric"] for r in _diff_rows(summ, summ)}
+        assert "mem.predicted.total_bytes" in metrics
+        assert "mem.compressed.temp_bytes" in metrics
+        assert "mem.live.peak_bytes" in metrics
+
+
+# --------------------------------------------------------------------------
+# health verdicts: headroom + leak detection
+# --------------------------------------------------------------------------
+
+class TestMemoryHealth:
+    def test_headroom_verdict_fires_at_threshold(self):
+        from repro.obs.audit import HealthMonitor
+        mon = HealthMonitor()
+        fields, warns = mon.observe_memory(0, 95.0, 95.0,
+                                           capacity_bytes=100.0)
+        assert fields["verdicts"] == ["mem_headroom"]
+        assert not fields["ok"]
+        assert warns[0]["what"] == "memory.mem_headroom"
+        rec = E.make_event("health", **fields)
+        assert rec["headroom_frac"] == pytest.approx(0.95)
+
+    def test_growth_verdict_needs_strict_rise_over_full_window(self):
+        from repro.obs.audit import HealthMonitor
+        mon = HealthMonitor(mem_growth_windows=3)
+        samples = [100.0, 110.0, 121.0]
+        results = [mon.observe_memory(i, s)[0]
+                   for i, s in enumerate(samples)]
+        assert all(r["ok"] for r in results)       # window not yet full
+        fields, warns = mon.observe_memory(3, 133.0)
+        assert fields["verdicts"] == ["mem_growth"]
+        assert fields["growth_frac"] == pytest.approx(0.33)
+        assert warns[0]["what"] == "memory.mem_growth"
+        assert mon.n_mem_failed == 1
+
+    def test_plateau_is_healthy(self):
+        from repro.obs.audit import HealthMonitor
+        mon = HealthMonitor(mem_growth_windows=3)
+        for i, s in enumerate((100.0, 120.0, 130.0, 130.0, 130.0)):
+            fields, _ = mon.observe_memory(i, s, capacity_bytes=1000.0)
+        assert fields["ok"]
+        assert mon.n_mem_failed == 0
+        assert mon.n_checked == 0      # fidelity counters untouched
+
+
+# --------------------------------------------------------------------------
+# satellite 3: mem_* cells gate structurally, live sample stays WARN
+# --------------------------------------------------------------------------
+
+class TestBenchMemCells:
+    def test_mem_metrics_names(self):
+        led = MemoryLedger(categories={"opt_state": 30.0, "wire": 2.0,
+                                       "params": 10.0})
+        cm = CompiledMemory("step", 5, 4, 3, 0)
+        m = mem_metrics(led, compiled=cm, live_peak=123.0)
+        assert m["mem_state_bytes"] == 30.0
+        assert m["mem_wire_watermark_bytes"] == 2.0
+        assert m["mem_compiled_temp_bytes"] == 3.0
+        assert "live_bytes_peak" in m          # deliberately NOT mem_*
+        for k in m:
+            assert k.startswith("mem_") or k == "live_bytes_peak", k
+
+    def test_mem_drift_fails_live_drift_warns(self, tmp_path):
+        from repro.obs import bench as B
+        bc = load_bench_compare()
+
+        def ledger(name, metrics):
+            path = str(tmp_path / name)
+            B.write_ledger(path, [B.bench_record(
+                "train", "smoke", (4, 1), 2, False, metrics)])
+            return B.load_ledger(path)
+
+        base = ledger("base.json", {"mem_state_bytes": 100.0,
+                                    "live_bytes_peak": 1000.0})
+        cur = ledger("cur.json", {"mem_state_bytes": 300.0,
+                                  "live_bytes_peak": 9000.0})
+        out = bc.compare(base, cur)
+        assert len(out["failures"]) == 1
+        assert "mem_state_bytes" in out["failures"][0]
+        assert any("live_bytes_peak" in w for w in out["warnings"])
+
+
+# --------------------------------------------------------------------------
+# capacity-aware tuning: the pinned replicated -> zero1 flip
+# --------------------------------------------------------------------------
+
+class TestTunerCapacity:
+    D = 1183744
+
+    def _tune(self, **kw):
+        from repro.plan import get_cluster
+        from repro.plan.tune import autotune
+        spec = get_cluster("ethernet-10g", 4, device="tpu-v5e")
+        return autotune(spec, self.D, n_buckets_options=(1, 2),
+                        layouts=("replicated", "zero1"), **kw)
+
+    def test_capacity_blind_prefers_replicated(self):
+        best = self._tune().best
+        assert best.layout == "replicated"
+        assert best.wire_watermark_bytes > 0.0
+
+    def test_capacity_below_replicated_peak_flips_to_zero1(self):
+        blind = self._tune().best
+        cap = blind.state_bytes_per_rank + blind.wire_watermark_bytes - 1
+        res = self._tune(hbm_capacity=cap)
+        assert res.best.layout == "zero1"
+        assert res.best.peak_bytes_per_rank <= cap
+        rejected = [c for c in res.table
+                    if not c.valid and c.why == "over hbm capacity"]
+        assert rejected
+        assert all(c.peak_bytes_per_rank > cap for c in rejected)
+
+    def test_fixed_bytes_tighten_the_budget(self):
+        blind = self._tune().best
+        cap = blind.state_bytes_per_rank + blind.wire_watermark_bytes + 10
+        assert self._tune(hbm_capacity=cap).best.layout == "replicated"
+        res = self._tune(hbm_capacity=cap, fixed_bytes_per_rank=1000.0)
+        assert res.best.layout == "zero1"
+
+    def test_max_state_bytes_still_honoured_when_stricter(self):
+        blind = self._tune().best
+        res = self._tune(hbm_capacity=1e18,
+                         max_state_bytes_per_rank=int(
+                             blind.state_bytes_per_rank) - 1)
+        assert res.best.layout == "zero1"
+        assert any(c.why == "over state-memory budget"
+                   for c in res.table if not c.valid)
+
+
+# --------------------------------------------------------------------------
+# neutrality + launch end-to-end (forced multi-device subprocesses)
+# --------------------------------------------------------------------------
+
+class TestMemoryNeutrality:
+    def test_ledger_leaves_training_bitwise_unchanged(self):
+        """Flat (4,1) and hier (2,2,1) compressed training with the
+        FULL --memory host-side loop interleaved (predicted ledger,
+        live samples, compiled_memory readback) vs absent: identical
+        compiled collective signature AND bitwise-equal losses."""
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.configs.base import InputShape
+        from repro.data import SyntheticStream
+        from repro.launch.mesh import make_mesh
+        from repro.models import transformer as T
+        from repro.obs.mem import (LiveSampler, attribute_compiled,
+                                   compiled_memory, predict_ledger)
+        from repro.obs.trace import collective_signature
+        from repro.train.step import (TrainStepConfig, init_train_state,
+                                      make_train_step)
+
+        cfg = get_config("internlm2-1.8b").reduced()
+        shape = InputShape("t", 64, 4, "train")
+
+        def losses_and_sig(mesh, topology, with_ledger):
+            tsc = TrainStepConfig(stage="compressed", topology=topology)
+            step = make_train_step(cfg, mesh, tsc, donate=False)
+            params = T.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+            opt = init_train_state(cfg, mesh, topology=topology)
+            stream = SyntheticStream(cfg, shape)
+            batch0 = stream.batch_at(0)
+            lr = jnp.float32(1e-3)
+            jitted = step.build(batch0)
+            compiled = jitted.lower(params, opt, batch0, lr).compile()
+            sig = collective_signature(compiled.as_text())
+            sampler = LiveSampler() if with_ledger else None
+            if with_ledger:
+                led = predict_ledger(cfg, mesh, topology=topology,
+                                     batch_global=4, seq=64)
+                cm = compiled_memory(compiled)
+                if cm is not None:
+                    attribute_compiled(led, cm)
+            losses = []
+            for t in range(3):
+                b = stream.batch_at(t)
+                params, opt, m = step(params, opt, b, lr)
+                if sampler is not None:
+                    assert sampler.sample(t) is not None
+                losses.append(np.asarray(m["loss"]).tobytes())
+            return sig, losses
+
+        for dims, axes, topo in (((4, 1), ("data", "model"), "flat"),
+                                 ((2, 2, 1), ("pod", "data", "model"),
+                                  "hier")):
+            mesh = make_mesh(dims, axes)
+            sig_off, loss_off = losses_and_sig(mesh, topo, False)
+            sig_on, loss_on = losses_and_sig(mesh, topo, True)
+            assert sig_off, f"{topo}: no collectives found"
+            assert sig_on == sig_off, (topo, sig_on, sig_off)
+            assert loss_on == loss_off, f"{topo}: losses differ"
+            print(f"{topo}: memory-neutral, {len(sig_off)} collectives, "
+                  f"3 losses bitwise-equal OK")
+        """, n=4)
+        assert "flat:" in out and "hier:" in out
+
+    def test_launch_memory_end_to_end(self):
+        """launch.train --memory on vs off on a (4,1) mesh: identical
+        loss history; predicted + live + compiled memory events;
+        memory_ledger.json; memory health checks; mem section in the
+        folded report."""
+        out = run_with_devices("""
+        import json, os, tempfile
+        from repro.launch.train import run
+        from repro.obs.report import format_report, load, summarize
+
+        tel = os.path.join(tempfile.mkdtemp(), "tel")
+        kw = dict(base_lr=2e-3, lr_warmup=2, warmup_steps=2,
+                  block_size=512, log_every=2, recipe="onebit_adam")
+        _, _, h_off = run("internlm2-1.8b-smoke", 6, 4, 64, (4, 1), **kw)
+        _, _, h_on = run("internlm2-1.8b-smoke", 6, 4, 64, (4, 1),
+                         telemetry=tel, memory="on", **kw)
+        assert [r["loss"] for r in h_on] == [r["loss"] for r in h_off], \\
+            "memory on changed the training trajectory"
+
+        recs = load(os.path.join(tel, "telemetry.jsonl"), validate=True)
+        mems = [r for r in recs if r["type"] == "memory"]
+        kinds = {r["kind"] for r in mems}
+        assert kinds == {"predicted", "compiled", "live"}, kinds
+        pred = next(r for r in mems if r["kind"] == "predicted")
+        assert pred["categories"]["opt_state"] > 0
+        assert pred["capacity_bytes"] > 0
+        for r in mems:
+            if r["kind"] == "compiled":
+                total = r["output_bytes"] + r["temp_bytes"]
+                assert r["attributed_bytes"] + r["residual_bytes"] \\
+                    == total
+                assert r["residual_frac"] < 0.25, r
+        healths = [r for r in recs if r["type"] == "health"
+                   and r.get("source") == "repro.obs.mem"]
+        assert healths and all(h["ok"] for h in healths)
+        ledger = json.load(open(os.path.join(tel,
+                                             "memory_ledger.json")))
+        assert set(ledger) == {"predicted", "compiled"}
+        assert ledger["compiled"], "no compiled attribution dumped"
+        rep = format_report(summarize(recs))
+        assert "memory ledger" in rep
+        print("launch --memory on OK")
+        """, n=4)
+        assert "launch --memory on OK" in out

@@ -71,6 +71,7 @@ class TestEventSchema:
                             t_residual=0.2),
             "fidelity": dict(step=4, n_segments=3),
             "health": dict(step=4, ok=True),
+            "memory": dict(kind="live", step=4, bytes_in_use=1e6),
         }
         assert sorted(minimal) == sorted(E.EVENT_SCHEMA)
         for etype, fields in minimal.items():
