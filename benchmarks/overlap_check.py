@@ -91,6 +91,125 @@ def check_hlo_overlap(hlo: str) -> Dict[str, object]:
             "details": details}
 
 
+def _dot_bearing_calls(hlo: str) -> set:
+    """Names of computations whose body contains a real dot/convolution
+    — so entry ``fusion(...)`` instructions can be classified as
+    matmul-bearing even after the fusion pass swallowed the dots."""
+    names, cur, has, depth = set(), None, False, 0
+    for line in hlo.splitlines():
+        if depth == 0:
+            m = re.match(r"\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m and "{" in line:
+                cur, has = m.group(1), False
+        depth += line.count("{") - line.count("}")
+        if cur is not None and re.search(r"\b(dot|convolution)\(", line):
+            has = True
+        if depth == 0 and cur is not None:
+            if has:
+                names.add(cur)
+            cur = None
+    return names
+
+
+def check_bwd_overlap(hlo: str) -> Dict[str, object]:
+    """Scan one scheduled HLO module for collective async-starts issued
+    BETWEEN matmul ops — i.e. the compressed exchange begins while
+    dot/convolution work (the tail of it necessarily the backward pass:
+    every dot scheduled after the loss reduction is a gradient dot) is
+    still outstanding.
+
+    An async-start counts as backward-overlapped when at least one
+    dot-bearing instruction is scheduled before it AND at least one
+    after it.  Returns ``{pairs, overlapped_bwd, n_dots, details}``;
+    ``pairs == 0`` again means synchronous lowering (nothing to check).
+    """
+    lines = _entry_lines(hlo)
+    dot_calls = _dot_bearing_calls(hlo)
+    dots = []
+    for i, line in enumerate(lines):
+        if re.search(r"\b(dot|convolution)\(", line):
+            dots.append(i)
+            continue
+        if "fusion(" in line:
+            m = re.search(r"calls=%?([\w\.\-]+)", line)
+            if m and m.group(1) in dot_calls:
+                dots.append(i)
+    starts = []
+    for i, line in enumerate(lines):
+        for kind in _ASYNC_KINDS:
+            if re.search(rf"\b{kind}-start\(", line):
+                starts.append((i, kind))
+    details = []
+    overlapped = 0
+    first_dot = dots[0] if dots else None
+    last_dot = dots[-1] if dots else None
+    for i, kind in starts:
+        ok = bool(dots) and first_dot < i < last_dot
+        overlapped += ok
+        details.append({"kind": kind, "index": i,
+                        "dots_after": sum(1 for j in dots if j > i),
+                        "overlapped_bwd": ok})
+    return {"pairs": len(starts), "overlapped_bwd": overlapped,
+            "n_dots": len(dots), "details": details}
+
+
+def build_bwd_exchange(mesh_shape: Sequence[int], block: int,
+                       n_buckets: int, n_layers: int = 4, width: int = 64):
+    """Compile a backward pass + ready-order bucketed exchange: the
+    gradient of a ``n_layers``-deep matmul chain feeds the pipelined
+    exchange as per-bucket parts (``repro.train.step.flat_grad_parts``)
+    so each bucket's compress+wire chain depends only on its own layers'
+    gradients — the schedule the ``--bwd`` check inspects."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.comm import compressed_exchange
+    from repro.launch.mesh import make_mesh
+    from repro.optim import get_compressor
+    from repro.pipeline import Bucketer
+    from repro.train.step import flat_grad_parts
+
+    comp = get_compressor("onebit", block_size=block)
+    n = 1
+    for s in mesh_shape:
+        n *= s
+    d = n_layers * width * width
+    align = n * block
+    d_pad = -(-d // align) * align
+    sizes = Bucketer.for_exchange(d_pad, n, block, n_buckets).sizes
+    mesh = make_mesh((n,), ("data",))
+
+    def loss(ws, x):
+        h = x
+        for w in ws:
+            h = jnp.tanh(h @ w)
+        return jnp.sum(h * h)
+
+    def body(ws, x, we, se):
+        grads = jax.grad(loss)(list(ws), x[0])
+        parts = flat_grad_parts(grads, sizes, d_pad)
+        out, errs = compressed_exchange(
+            parts, {"worker": we[0], "server": se[0]}, ("data",), (),
+            comp, n_buckets=n_buckets)
+        return out[None], errs["worker"][None], errs["server"][None]
+
+    ws = tuple(jax.random.normal(jax.random.PRNGKey(i), (width, width),
+                                 jnp.float32) / width
+               for i in range(n_layers))
+    x = jax.random.normal(jax.random.PRNGKey(99), (n, 8, width),
+                          jnp.float32)
+    we = jnp.zeros((n, d_pad), jnp.float32)
+    se = jnp.zeros((n, d_pad // n), jnp.float32)
+    f = jax.jit(jax.shard_map(
+        body, mesh=mesh,
+        in_specs=((P(),) * n_layers, P("data"), P("data", None),
+                  P("data", None)),
+        out_specs=(P("data", None),) * 3, check_vma=False))
+    args = (ws, x, we, se)
+    compiled = f.lower(*args).compile()
+    return f, args, compiled
+
+
 def build_pipelined_exchange(mesh_shape: Sequence[int], d: int,
                              block: int, n_buckets: int):
     """Compile one pipelined hier/flat exchange on a real mesh; returns
@@ -140,6 +259,46 @@ def build_pipelined_exchange(mesh_shape: Sequence[int], d: int,
             jnp.zeros(lead + (chunk,), jnp.float32))
     compiled = f.lower(*args).compile()
     return f, args, compiled
+
+
+def run_bwd(mesh_shape: Optional[Sequence[int]] = None, block: int = 512,
+            n_buckets: int = 2, trace_dir: Optional[str] = None,
+            verbose: bool = True) -> Dict[str, object]:
+    """``--bwd`` mode: backward-overlap variant of the check — async
+    collective starts must be scheduled between matmul ops, proving the
+    compressed exchange launches while the backward pass still runs."""
+    import jax
+    if mesh_shape is None:
+        mesh_shape = (jax.device_count(),)
+    f, args, compiled = build_bwd_exchange(mesh_shape, block, n_buckets)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
+        with jax.profiler.trace(trace_dir):
+            jax.block_until_ready(f(*args))
+        if verbose:
+            print(f"  wrote jax.profiler trace to {trace_dir}")
+    result = check_bwd_overlap(compiled.as_text())
+    result["mesh"] = tuple(mesh_shape)
+    result["n_buckets"] = n_buckets
+    if verbose:
+        print("== overlap_check --bwd (exchange under backward) ==")
+        if result["pairs"] == 0:
+            print(f"  [SKIP] backend {jax.devices()[0].platform!r} emits "
+                  "no async collective start/done pairs (synchronous "
+                  "lowering) — run on TPU/GPU multi-host to verify "
+                  "backward overlap")
+        else:
+            for det in result["details"]:
+                mark = "PASS" if det["overlapped_bwd"] else "FAIL"
+                print(f"  [{mark}] {det['kind']}-start at {det['index']} "
+                      f"with {det['dots_after']} matmul op(s) still "
+                      f"scheduled after it ({result['n_dots']} total)")
+    if result["pairs"] > 0:
+        assert result["overlapped_bwd"] > 0, (
+            "async collectives found but NONE start between matmul ops "
+            "— the exchange is not hiding under the backward pass",
+            result)
+    return result
 
 
 def run(mesh_shape: Optional[Sequence[int]] = None, d: Optional[int] = None,
@@ -197,9 +356,15 @@ def main(argv=None):
     ap.add_argument("--buckets", type=int, default=2)
     ap.add_argument("--trace-dir", default=None,
                     help="write a jax.profiler trace here")
+    ap.add_argument("--bwd", action="store_true",
+                    help="check the BACKWARD overlap instead: collective "
+                         "async-starts must be scheduled between matmul "
+                         "ops (exchange launched mid-backward)")
     args = ap.parse_args(argv)
     shape = tuple(int(x) for x in args.mesh.split("x")) if args.mesh \
         else None
+    if args.bwd:
+        return run_bwd(shape, args.block, args.buckets, args.trace_dir)
     return run(shape, args.d, args.block, args.buckets, args.trace_dir)
 
 

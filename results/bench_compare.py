@@ -42,14 +42,18 @@ from repro.obs.events import bench_key  # noqa: E402
 # metrics where "bigger is slower" vs "bigger is better" — only used to
 # phrase the WARN line, never to gate
 _LOWER_IS_BETTER = {"s_per_step", "t_window", "t_residual", "t_comm",
-                    "allreduce_ms", "onebit_ms"}
+                    "allreduce_ms", "onebit_ms", "exposed_comm_s"}
 
 # deterministic (seeded-math) metric prefixes: out-of-band drift is a
 # STRUCTURAL failure, not a timing warning.  ``mem_*`` cells are byte
 # counts off the slot registry / compiled-program stats, deterministic
 # per (config, mesh, pipeline); the live allocator sample deliberately
 # keeps a non-mem_ name (``live_bytes_peak``) so RSS noise stays WARN.
-_STRUCTURAL_PREFIXES = ("fidelity_", "mem_")
+# ``overlap_*`` (the hidden-comm fraction under --overlap-bwd) rides the
+# schedule structure, not raw timing: losing it means the ready-order
+# issue regressed — structural, with the collapse gate below as the
+# first line of defense.
+_STRUCTURAL_PREFIXES = ("fidelity_", "mem_", "overlap_")
 
 
 def _by_key(payload: dict) -> dict:

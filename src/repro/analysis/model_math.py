@@ -70,6 +70,74 @@ def activation_bytes(cfg: ArchConfig, batch_local: int, seq: int,
     return float(dtype_bytes) * total
 
 
+def layer_bwd_flops(cfg: ArchConfig, shape: InputShape, tp: int = 1
+                    ) -> list:
+    """Per-layer BACKWARD FLOPs for one train step, layer 0 first.
+
+    The bwd share of the 6ND yardstick is 4ND (grad-wrt-input +
+    grad-wrt-weights), apportioned uniformly across layers; attention
+    layers add their bwd score FLOPs (8 of the 12 in
+    :func:`model_flops`'s causal convention).  This is the producer-side
+    cost model behind ready-order bucketing: backward sweeps layers
+    last->first, so these per-layer costs turn flat-gradient offsets
+    into per-bucket ready times (:func:`bwd_ready_times`)."""
+    n = active_params_no_embed(cfg, tp)
+    b, s = shape.global_batch, shape.seq_len
+    layers = max(cfg.n_layers, 1)
+    per_layer_core = 4.0 * n * b * s / layers
+    hq = cfg.padded_heads(tp)
+    hd = cfg.head_dim
+    out = []
+    for i in range(layers):
+        fl = per_layer_core
+        if hq and cfg.is_attn_layer(i):
+            fl += 8.0 * b * (s ** 2) / 2 * hq * hd
+        out.append(fl)
+    return out
+
+
+def bwd_ready_times(offsets, d: int, cfg: ArchConfig, shape: InputShape,
+                    device, tp: int = 1) -> list:
+    """Seconds (on ``device``, a ``DeviceSpec``) until the gradient
+    element at each flat offset is produced by the backward sweep.
+
+    Ravel order is layer order (layer 0 first) while backward runs
+    last->first, so the element at offset ``x`` exists once the sweep
+    has spent the bwd FLOPs of every layer ABOVE ``x`` — a
+    piecewise-linear offset->time map built from
+    :func:`layer_bwd_flops`, linear within a layer's span.  Evaluated
+    at a bucket's LOWEST offset this is the bucket's ready time (the
+    bucket is complete only when its earliest-layer element lands):
+    trailing buckets come ready first, which is exactly the reversed
+    issue order the pipelined executor uses under ``--overlap-bwd``.
+
+    ``ready[offset=0]`` equals the full backward time
+    (:func:`bwd_total_time`); offsets at ``d`` map to 0.0."""
+    flops = layer_bwd_flops(cfg, shape, tp)
+    layers = len(flops)
+    peak = float(device.peak_flops)
+    d = max(int(d), 1)
+    span = d / layers
+    suffix = [0.0] * (layers + 1)
+    for i in range(layers - 1, -1, -1):
+        suffix[i] = suffix[i + 1] + flops[i]
+    out = []
+    for off in offsets:
+        x = min(max(float(off), 0.0), float(d))
+        i = min(int(x / span), layers - 1)
+        frac = min(max((x - i * span) / span, 0.0), 1.0)
+        produced = suffix[i + 1] + flops[i] * (1.0 - frac)
+        out.append(produced / peak)
+    return out
+
+
+def bwd_total_time(cfg: ArchConfig, shape: InputShape, device,
+                   tp: int = 1) -> float:
+    """Roofline seconds of the whole backward pass on ``device`` — the
+    barrier the pre-overlap executor paid before its first wire byte."""
+    return sum(layer_bwd_flops(cfg, shape, tp)) / float(device.peak_flops)
+
+
 def model_flops(cfg: ArchConfig, shape: InputShape, tp: int = 1
                 ) -> Dict[str, float]:
     n = active_params_no_embed(cfg, tp)

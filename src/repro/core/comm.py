@@ -39,6 +39,7 @@ from __future__ import annotations
 from typing import Dict, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.plan import executor as _exec
 from repro.plan import schedules as _sched
@@ -47,14 +48,37 @@ AxisNames = Tuple[str, ...]
 Errs = Dict[str, jax.Array]
 
 
+def _concat(parts):
+    return parts[0] if len(parts) == 1 else jnp.concatenate(tuple(parts))
+
+
+def flat_dim(x) -> int:
+    """Flat element count of an exchange value: a ``(d,)`` vector or a
+    tuple of per-bucket parts (``--overlap-bwd``) summing to ``d``."""
+    if isinstance(x, (tuple, list)):
+        return int(sum(p.shape[0] for p in x))
+    return int(x.shape[0])
+
+
 def _execute(plan, comp, value, errs, n_buckets: int, n_total: int):
     """Lower a plan serially, or — for ``n_buckets > 1`` — through the
     bucketed pipelined executor (``repro.pipeline``): the plan is split
     into block-aligned per-bucket stages issued in wavefront order so
     XLA can overlap one bucket's cross-pod leg with the next bucket's
     compress + intra-pod work.  ``n_buckets`` clamps to the alignment
-    unit count; 1 is byte-for-byte the serial executor."""
+    unit count; 1 is byte-for-byte the serial executor.
+
+    ``value`` may arrive as a tuple of per-bucket parts (backward
+    overlap): when the parts line up with the bucketer's sizes they are
+    handed to the pipelined executor unconcatenated — each bucket then
+    depends only on its own gradient fragments, not on a whole-vector
+    ravel — and issued in ready (reversed-bucket) order.  Any mismatch
+    (serial path, clamped bucket count) concatenates first, which is
+    bitwise the same exchange."""
+    parts = value if isinstance(value, (tuple, list)) else None
     if n_buckets <= 1:
+        if parts is not None:
+            value = _concat(parts)
         return _exec.execute_plan(plan, comp, value, errs)
     from repro.pipeline import (Bucketer, execute_pipelined,  # no cycle
                                 lower_to_pipelined)
@@ -62,8 +86,13 @@ def _execute(plan, comp, value, errs, n_buckets: int, n_total: int):
     # is what makes per-bucket compression bitwise the serial schedule
     bucketer = Bucketer.for_exchange(plan.d, n_total, comp.block_size,
                                      n_buckets)
-    return execute_pipelined(lower_to_pipelined(plan, comp, bucketer),
-                             comp, value, errs)
+    pplan = lower_to_pipelined(plan, comp, bucketer)
+    if parts is not None:
+        sizes = tuple(p.shape[0] for p in parts)
+        value = (tuple(parts)
+                 if sizes == tuple(bp.size for bp in pplan.buckets)
+                 else _concat(parts))
+    return execute_pipelined(pplan, comp, value, errs)
 
 
 def _as_compressor(cfg):
@@ -165,7 +194,7 @@ def compressed_allreduce_hierarchical(
 
 
 def compressed_exchange(
-    x: jax.Array,
+    x,
     errs: Errs,
     dp_axes: Sequence[str],
     pod_axes: Sequence[str],
@@ -174,12 +203,17 @@ def compressed_exchange(
 ) -> Tuple[jax.Array, Errs]:
     """THE compressed optimizer exchange: flat schedule over ``dp_axes``
     when ``pod_axes`` is empty, hierarchical two-level otherwise.  Takes
-    and returns the full EF slot dict (extra keys untouched)."""
+    and returns the full EF slot dict (extra keys untouched).
+
+    ``x`` is the ``(d,)`` flat value, or — under backward overlap — a
+    tuple of per-bucket parts in bucket (= element) order, which keeps
+    per-bucket data dependencies intact through to the pipelined
+    executor.  The result is always one ``(d,)`` vector."""
     comp = _as_compressor(cfg)
     axes_in = tuple(dp_axes)
     axes_out = tuple(pod_axes)
     n_in = axis_size(axes_in)
-    d = x.shape[0]
+    d = flat_dim(x)
     if not axes_out:
         assert d % n_in == 0, (d, n_in)
         plan = _sched.flat_schedule(comp, d, n_in, axes_in)

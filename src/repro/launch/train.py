@@ -85,37 +85,59 @@ from repro.train.step import (TrainStepConfig, _flat_dim, init_train_state,
                               state_layout_ctx)
 
 
+def bwd_ready_fn(cfg, batch: int, seq: int, device, tp: int = 1):
+    """Closure ``(bucket_offsets, d_pad) -> per-bucket ready times``
+    from the analytic reverse sweep (``analysis.model_math``), plus the
+    total backward seconds — the (ready_times_fn, t_bwd) pair the
+    tuner's four-stream pricing and the plan telemetry both use."""
+    from repro.analysis.model_math import bwd_ready_times, bwd_total_time
+    shape = InputShape("custom", seq, batch, "train")
+
+    def fn(offsets, d_pad):
+        return bwd_ready_times(offsets, d_pad, cfg, shape, device, tp)
+
+    return fn, bwd_total_time(cfg, shape, device, tp)
+
+
 def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
                      compressor: str, block_size: int,
                      compressor_kwargs=None, verbose: bool = True,
-                     use_kernel="off", device: str = "tpu-v5e"):
+                     use_kernel="off", device: str = "tpu-v5e",
+                     overlap_bwd="off", batch: int = 8, seq: int = 128):
     """Resolve the ``"auto"`` axes of the collective schedule with ONE
     joint ``repro.plan.autotune`` search; returns ``(topology,
-    n_buckets, use_kernel)``.
+    n_buckets, use_kernel, overlap_bwd)``.
 
     The mesh fixes the pod split (leading "pod" axis = n_outer); the
     ``cluster`` preset fixes the link speeds; the ``device`` preset (or
     a ``kernel_sweep.py``-measured spec) fixes the compute roofline the
     three-stream coster prices; the recipe's compressor and block size
-    are pinned.  Topology, bucket count and the jnp-vs-Pallas kernel
-    choice are tuned TOGETHER when "auto" — tuning topology on serial
-    plans and then buckets with the topology pinned can miss the joint
-    optimum (e.g. a pipelined hier beating serial flat on a uniform
-    fabric), and the kernel choice only matters through the compute
-    stream the joint search prices.  Explicit values pass through
-    (``pipeline``: "off" -> 1, N -> N; ``use_kernel``: "off"/"on") and
-    pin their axis of the search.
+    are pinned.  Topology, bucket count, the jnp-vs-Pallas kernel
+    choice and backward overlap are tuned TOGETHER when "auto" —
+    tuning topology on serial plans and then buckets with the topology
+    pinned can miss the joint optimum (e.g. a pipelined hier beating
+    serial flat on a uniform fabric), the kernel choice only matters
+    through the compute stream the joint search prices, and ready-order
+    overlap changes which bucket count pays (more buckets = earlier
+    first issue).  Explicit values pass through (``pipeline``: "off" ->
+    1, N -> N; ``use_kernel``/``overlap_bwd``: "off"/"on") and pin
+    their axis of the search.  Overlap candidates are priced with the
+    four-stream schedule on the analytic backward ready times for
+    (``batch``, ``seq``) and charged only the exchange time exposed
+    beyond the backward pass.
     """
     pipe_auto = pipeline == "auto"
     topo_auto = topology == "auto"
     kern_auto = use_kernel == "auto"
+    ob_auto = overlap_bwd == "auto"
     n_buckets = 1
     if not pipe_auto and pipeline not in (None, "off"):
         n_buckets = int(pipeline)
         assert n_buckets >= 1, pipeline
     kernels = use_kernel in ("on", True)
-    if not topo_auto and not pipe_auto and not kern_auto:
-        return topology, n_buckets, kernels
+    overlap = overlap_bwd in ("on", True)
+    if not topo_auto and not pipe_auto and not kern_auto and not ob_auto:
+        return topology, n_buckets, kernels, overlap and n_buckets > 1
     from repro.optim import compressor_has_kernel
     from repro.plan import autotune, get_cluster
     dp_axes, dp_sizes, tp = mesh_axes(mesh)
@@ -135,19 +157,26 @@ def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
                        else (False,))
     else:
         kernel_opts = (kernels,)
+    # forced-on still enumerates False so a pinned serial pipeline
+    # (overlap needs buckets) keeps a valid candidate to price
+    overlap_opts = (False, True) if (ob_auto or overlap) else (False,)
+    ready_fn, t_bwd = bwd_ready_fn(cfg, batch, seq, spec.device, tp)
     res = autotune(spec, d, compressors=[compressor],
                    block_sizes=[block_size], topologies=topos,
                    compressor_kwargs=compressor_kwargs,
                    n_buckets_options=(1, 2, 4, 8) if pipe_auto
                    else (n_buckets,),
-                   use_kernel_options=kernel_opts)
+                   use_kernel_options=kernel_opts,
+                   overlap_bwd_options=overlap_opts,
+                   t_bwd=t_bwd, ready_times_fn=ready_fn)
     best = res.best
     if verbose:
         print(f"[auto-schedule] cluster={spec.name} "
               f"({n_outer} pod(s) x {n_inner} dp, "
               f"device={spec.device.name}): picked "
               f"{best.topology!r} x {best.n_buckets} bucket(s), "
-              f"kernels={'pallas' if best.use_kernel else 'jnp'} "
+              f"kernels={'pallas' if best.use_kernel else 'jnp'}, "
+              f"overlap-bwd={'on' if best.overlap_bwd else 'off'} "
               f"(t_exchange {best.t_exchange*1e3:.3f} ms, compute "
               f"{best.t_compute*1e3:.3f} ms, "
               f"DCI {best.dci_bytes_per_pod} B/pod)")
@@ -155,12 +184,15 @@ def resolve_schedule(topology: str, pipeline, cluster: str, cfg, mesh,
             if c.valid:
                 print(f"    {c.topology:5s} buckets={c.n_buckets} "
                       f"kernels={'pallas' if c.use_kernel else 'jnp':6s} "
+                      f"overlap={'on' if c.overlap_bwd else 'off':3s} "
                       f"t={c.t_exchange*1e3:.3f} ms "
                       f"(compute {c.t_compute*1e3:.3f}) "
                       f"dci={c.dci_bytes_per_pod}")
+    out_nb = best.n_buckets if pipe_auto else n_buckets
+    out_ob = best.overlap_bwd if ob_auto else overlap
     return (best.topology if topo_auto else topology,
-            best.n_buckets if pipe_auto else n_buckets,
-            best.use_kernel if kern_auto else kernels)
+            out_nb, best.use_kernel if kern_auto else kernels,
+            out_ob and out_nb > 1)
 
 
 def resolve_topology(topology: str, cluster: str, cfg, mesh,
@@ -229,31 +261,64 @@ def run_plans(optim, cfg, mesh, topology: str, block_size: int):
     return warm, comp_plan
 
 
+def plan_ready_times(cfg, plan_d: int, n_dp: int, block_size: int,
+                     n_buckets: int, device, batch: int, seq: int,
+                     tp: int = 1):
+    """Per-bucket predicted backward ready times for THIS run's bucket
+    partition (``None`` unless actually bucketed) — the list the plan
+    telemetry, the memory ledger and the profile fold all share so
+    predicted schedules agree everywhere."""
+    if n_buckets <= 1:
+        return None, 0.0
+    from repro.pipeline import Bucketer
+    ready_fn, t_bwd = bwd_ready_fn(cfg, batch, seq, device, tp)
+    bk = Bucketer.for_exchange(plan_d, max(n_dp, 1), block_size,
+                               n_buckets)
+    offs = []
+    off = 0
+    for sz in bk.sizes:
+        offs.append(off)
+        off += sz
+    return [float(r) for r in ready_fn(tuple(offs), plan_d)], t_bwd
+
+
 def emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology: str,
                         n_buckets: int, block_size: int, cluster: str,
                         device: str, drift_probe: bool = False,
-                        telemetry_dir: Optional[str] = None) -> None:
+                        telemetry_dir: Optional[str] = None,
+                        overlap_bwd: bool = False, batch: int = 8,
+                        seq: int = 128) -> None:
     """Emit the run's ``plan`` events (per-tier HLO bytes + predicted
-    α-β times of the executed CommPlans) and, with ``drift_probe``, time
-    each compressed-exchange collective in isolation on the real mesh
-    and run the predicted-vs-measured drift monitor over the samples —
-    writing a ``ClusterSpec.from_measured`` recalibration JSON into the
-    telemetry dir when drift exceeds the threshold."""
+    α-β times of the executed CommPlans — under ``overlap_bwd`` also
+    the per-bucket backward ready times the four-stream schedule is
+    held to) and, with ``drift_probe``, time each compressed-exchange
+    collective in isolation on the real mesh and run the
+    predicted-vs-measured drift monitor over the samples — writing a
+    ``ClusterSpec.from_measured`` recalibration JSON into the telemetry
+    dir when drift exceeds the threshold."""
     from repro.plan import cross_pod_bytes, get_cluster, plan_time
-    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
     _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
     spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
                        device=device)
     warm, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
     for stage, p, nb in (("warmup", warm, 1),
                          ("compressed", comp_plan, n_buckets)):
+        extra = {}
+        if overlap_bwd and stage == "compressed":
+            ready, t_bwd = plan_ready_times(
+                cfg, p.d, n_inner * n_outer, block_size, nb,
+                spec.device, batch, seq, tp)
+            if ready is not None:
+                extra = {"overlap_bwd": True, "t_bwd": float(t_bwd),
+                         "ready_times": ready}
         sink.emit("plan", name=p.name, stage=stage, d=p.d,
                   intra_hlo_bytes=float(p.hlo_bytes("intra")),
                   cross_hlo_bytes=float(p.hlo_bytes("cross")),
                   n_buckets=nb,
                   wire_send_bytes=float(p.wire_send_bytes()),
                   dci_bytes_per_pod=float(cross_pod_bytes(p, spec)),
-                  t_predicted=float(plan_time(p, spec)))
+                  t_predicted=float(plan_time(p, spec)), **extra)
     if not drift_probe:
         return
     from repro.obs import DriftMonitor, probe_plan
@@ -276,56 +341,106 @@ def emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology: str,
                  if recal_path else ""))
 
 
+def ready_order_rows(fold_intervals, predicted_intervals, ready):
+    """The measured-vs-predicted ready-order table: one row per bucket
+    with its predicted backward ready time and the first collective
+    start on each side — did the run really issue buckets in ready
+    order, and did they start when the four-stream schedule said they
+    could?"""
+    def first_starts(intervals):
+        first = {}
+        for iv in intervals:
+            b = iv.get("bucket")
+            if b is None or iv.get("phase") == "bwd":
+                continue
+            t = float(iv["t_start"])
+            if b not in first or t < first[b]:
+                first[b] = t
+        return first
+    meas, pred = first_starts(fold_intervals), \
+        first_starts(predicted_intervals)
+    rows = []
+    for b in sorted(set(meas) | set(pred)):
+        rows.append({"bucket": int(b),
+                     "ready_predicted": (float(ready[b])
+                                         if ready and b < len(ready)
+                                         else 0.0),
+                     "first_start_predicted": pred.get(b, 0.0),
+                     "first_start_measured": meas.get(b, 0.0)})
+    return rows
+
+
 def fold_profile_window(profile_dir: str, hlo_texts, n_steps: int,
                         optim, cfg, mesh, topology: str, n_buckets: int,
                         block_size: int, cluster: str, device: str,
-                        stage: str = "compressed"):
+                        stage: str = "compressed",
+                        overlap_bwd: bool = False, batch: int = 8,
+                        seq: int = 128):
     """Fold the captured profiler trace onto the plan grid and build
     the ``profile`` event fields (:func:`repro.obs.profile.attribution`)
     — measured cells joined via the compiled-HLO op_name bridge, the
     overlap audit diffed against the predicted ``pipeline_breakdown``
-    intervals of THIS run's lowered exchange, and bytes/step from the
-    executed plan's HLO accounting."""
+    intervals of THIS run's lowered exchange (the FOUR-stream schedule
+    when ``overlap_bwd``: per-bucket backward ready times gate the
+    prediction exactly as they gate the executed issue order), and
+    bytes/step from the executed plan's HLO accounting.  Under overlap
+    the fields also carry the per-bucket ``ready_order`` table."""
     from repro.obs import profile as prof
     from repro.pipeline import Bucketer, lower_to_pipelined
     from repro.plan import get_cluster, pipeline_breakdown
-    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
     _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
     spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
                        device=device)
     warm, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
     plan = comp_plan if stage == "compressed" else warm
     comp = optim.compressor if stage == "compressed" else None
+    nb = n_buckets if stage == "compressed" else 1
     bucketer = Bucketer.for_exchange(plan.d, max(n_inner * n_outer, 1),
-                                     block_size,
-                                     n_buckets if stage == "compressed"
-                                     else 1)
+                                     block_size, nb)
+    ready = None
+    if overlap_bwd and stage == "compressed":
+        ready, _ = plan_ready_times(cfg, plan.d, n_inner * n_outer,
+                                    block_size, bucketer.n_buckets,
+                                    spec.device, batch, seq, tp)
     predicted = pipeline_breakdown(
-        lower_to_pipelined(plan, comp, bucketer), spec)
+        lower_to_pipelined(plan, comp, bucketer), spec, ready=ready)
     fold = prof.fold_profile(profile_dir, hlo_texts)
-    return prof.attribution(fold, n_steps=n_steps, predicted=predicted,
-                            bytes_per_step=float(plan.hlo_bytes()),
-                            source="launch.train")
+    fields = prof.attribution(fold, n_steps=n_steps, predicted=predicted,
+                              bytes_per_step=float(plan.hlo_bytes()),
+                              source="launch.train")
+    if ready is not None:
+        fields["ready_order"] = ready_order_rows(
+            fold["intervals"], predicted["intervals"], ready)
+    return fields
 
 
 def build_memory_ledger(optim, cfg, mesh, topology: str, n_buckets: int,
                         block_size: int, cluster: str, device: str,
-                        layout: str, batch: int, seq: int):
+                        layout: str, batch: int, seq: int,
+                        overlap_bwd: bool = False):
     """The predicted per-rank :class:`~repro.obs.mem.MemoryLedger` of
     THIS run: the same host-side plan/spec reconstruction the plan
-    telemetry uses, priced against the ``--device`` preset's capacity."""
+    telemetry uses, priced against the ``--device`` preset's capacity.
+    Under ``overlap_bwd`` the wire watermark is taken over the
+    four-stream (ready-gated) schedule."""
     from repro.obs.mem import capacity_of, predict_ledger
     from repro.plan import get_cluster
-    dp_axes, dp_sizes, _ = mesh_axes(mesh)
+    dp_axes, dp_sizes, tp = mesh_axes(mesh)
     _, _, n_inner, n_outer = pod_split(dp_axes, dp_sizes)
     spec = get_cluster(cluster, n_inner=n_inner, n_outer=n_outer,
                        device=device)
     _, comp_plan = run_plans(optim, cfg, mesh, topology, block_size)
+    ready = None
+    if overlap_bwd:
+        ready, _ = plan_ready_times(cfg, comp_plan.d, n_inner * n_outer,
+                                    block_size, n_buckets, spec.device,
+                                    batch, seq, tp)
     return predict_ledger(
         cfg, mesh, optim=optim, layout=layout, topology=topology,
         block=block_size, n_buckets=n_buckets, batch_global=batch,
         seq=seq, plan=comp_plan, spec=spec,
-        capacity_bytes=capacity_of(spec.device))
+        capacity_bytes=capacity_of(spec.device), ready=ready)
 
 
 def emit_memory_attribution(steps_fns, sample_args, sink, ledger,
@@ -364,7 +479,9 @@ def emit_profile_ledger(profile_dir: str, steps_fns, sample_args, sink,
                         block_size: int, cluster: str, device: str,
                         n_steps: int, stage: str, bench: Optional[str],
                         arch: str, mesh_shape, use_kernel: bool,
-                        extra_metrics: Optional[dict] = None) -> dict:
+                        extra_metrics: Optional[dict] = None,
+                        overlap_bwd: bool = False, batch: int = 8,
+                        seq: int = 128) -> dict:
     """Post-run profile pipeline: compiled-HLO texts of every executed
     step (the op_name bridge the trace join needs), the grid fold +
     attribution (``fold_profile_window``), a ``profile`` telemetry
@@ -379,12 +496,14 @@ def emit_profile_ledger(profile_dir: str, steps_fns, sample_args, sink,
     fields = fold_profile_window(profile_dir, hlo_texts, n_steps, optim,
                                  cfg, mesh, topology, n_buckets,
                                  block_size, cluster, device,
-                                 stage=stage)
+                                 stage=stage, overlap_bwd=overlap_bwd,
+                                 batch=batch, seq=seq)
     sink.emit("profile", **fields)
     metrics = {k: float(fields[k]) for k in
                ("s_per_step", "comm_fraction", "overlap_efficiency",
-                "roofline_fraction", "t_window", "t_attributed",
-                "t_residual", "bytes_per_step") if k in fields}
+                "exposed_comm_s", "roofline_fraction", "t_window",
+                "t_attributed", "t_residual", "bytes_per_step")
+               if k in fields}
     metrics["n_cells"] = int(fields["n_cells"])
     if fields.get("t_window"):
         metrics["attributed_fraction"] = (fields["t_attributed"]
@@ -417,6 +536,7 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         recipe: str = "onebit_adam", optimizer: Optional[str] = None,
         compressor: Optional[str] = None, topology: Optional[str] = None,
         cluster: str = "ethernet-10g", pipeline=None, kernels=None,
+        overlap_bwd: str = "off",
         device: str = "tpu-v5e", telemetry: Optional[str] = None,
         drift_probe: bool = False, profile: Optional[str] = None,
         profile_steps: int = 4, bench: Optional[str] = None,
@@ -451,10 +571,10 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         pipeline = spec.pipeline
     if kernels is None:
         kernels = spec.use_kernel
-    topology, n_buckets, use_kernel = resolve_schedule(
+    topology, n_buckets, use_kernel, overlap_on = resolve_schedule(
         topology, pipeline, cluster, cfg, mesh, spec.compressor,
         spec.block_size, spec.compressor_kwargs, use_kernel=kernels,
-        device=device)
+        device=device, overlap_bwd=overlap_bwd, batch=batch, seq=seq)
     def effective_buckets(nb: int) -> int:
         """The bucket count the executor will actually use on THIS run's
         padded flat dimension (Bucketer clamps to the alignment-unit
@@ -473,7 +593,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         optimizer=spec.optimizer, compressor=spec.compressor,
         block_size=spec.block_size, opt_kwargs=spec.optimizer_kwargs,
         comp_kwargs=spec.compressor_kwargs, topology=topology,
-        pipeline=n_buckets, use_kernel=bool(use_kernel))
+        pipeline=n_buckets, use_kernel=bool(use_kernel),
+        overlap_bwd=bool(overlap_on))
     optim = base_tsc.build_optimizer()
     layout = "local" if optim.may_skip_sync else "replicated"
     base_tsc = dataclasses.replace(base_tsc, layout=layout)
@@ -534,6 +655,7 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                   compressor=spec.compressor, topology=topology,
                   n_buckets=n_buckets, arch=arch, layout=layout,
                   use_kernel=bool(use_kernel),
+                  overlap_bwd=bool(overlap_on),
                   mesh=[int(s) for s in mesh_shape], steps=steps,
                   block_size=spec.block_size, cluster=cluster,
                   device=device, seed=seed, recipe=recipe,
@@ -542,7 +664,9 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         emit_plan_telemetry(sink, tracer, optim, cfg, mesh, topology,
                             n_buckets, spec.block_size, cluster, device,
                             drift_probe=drift_probe,
-                            telemetry_dir=telemetry)
+                            telemetry_dir=telemetry,
+                            overlap_bwd=bool(overlap_on), batch=batch,
+                            seq=seq)
 
     # --- per-rank HBM ledger (repro.obs.mem; host-side only — the train
     # step's compiled program is untouched) -------------------------------
@@ -552,7 +676,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
         from repro.obs.mem import LiveSampler
         mem_ledger = build_memory_ledger(
             optim, cfg, mesh, topology, n_buckets, spec.block_size,
-            cluster, device, layout, batch, seq)
+            cluster, device, layout, batch, seq,
+            overlap_bwd=bool(overlap_on))
         sink.emit("memory", **mem_ledger.event_fields())
         mem_sampler = LiveSampler()
 
@@ -772,7 +897,8 @@ def run(arch: str, steps: int, batch: int, seq: int, mesh_shape,
                     n_steps=steps - prof_start, stage=stage,
                     bench=bench, arch=arch, mesh_shape=mesh_shape,
                     use_kernel=bool(use_kernel),
-                    extra_metrics=mem_extra)
+                    extra_metrics=mem_extra,
+                    overlap_bwd=bool(overlap_on), batch=batch, seq=seq)
             except Exception as e:   # a failed fold must not lose the run
                 sink.emit("warning", what="profile.fold",
                           detail=str(e)[:400])
@@ -847,6 +973,15 @@ def main(argv=None):
                          "on/off, or auto = the repro.perf compute model "
                          "decides per --cluster/--device; default = the "
                          "recipe's")
+    ap.add_argument("--overlap-bwd", default="off",
+                    choices=["off", "on", "auto"],
+                    help="backward-overlap exchange: feed the bucketed "
+                         "pipeline per-bucket gradient parts in backprop "
+                         "ready order (trailing layers first) so the "
+                         "compressed exchange starts under the backward "
+                         "pass; needs --pipeline > 1, bitwise identical "
+                         "losses; auto = the four-stream cost model "
+                         "decides per --cluster/--device")
     ap.add_argument("--device", default="tpu-v5e",
                     help="device preset for the compute-stream pricing "
                          "(repro.perf.list_devices()), used by "
@@ -909,6 +1044,7 @@ def main(argv=None):
         optimizer=args.optimizer, compressor=args.compressor,
         topology=args.topology, cluster=args.cluster,
         pipeline=args.pipeline, kernels=args.kernels,
+        overlap_bwd=args.overlap_bwd,
         device=args.device, telemetry=args.telemetry,
         drift_probe=args.drift_probe, log_every=args.log_every,
         profile=args.profile, profile_steps=args.profile_steps,

@@ -108,6 +108,7 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
         {"optimizer": "str", "compressor": "str", "topology": "str",
          "n_buckets": "int"},
         {"arch": "str", "layout": "str", "use_kernel": "bool",
+         "overlap_bwd": "bool",
          "mesh": "list", "steps": "int", "block_size": "int",
          "cluster": "str", "device": "str", "seed": "int",
          "recipe": "str", "source": "str"},
@@ -118,7 +119,9 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
         {"n_buckets": "int", "wire_send_bytes": "num",
          "dci_bytes_per_pod": "num", "t_predicted": "num",
          "t_compute_predicted": "num", "breakdown": "dict",
-         "ops": "list"},
+         "ops": "list", "overlap_bwd": "bool", "t_bwd": "num",
+         # per-bucket predicted backward ready times, bucket order
+         "ready_times": "list"},
     ),
     "comm": (
         {"t_comm": "num", "t_compute": "num"},
@@ -153,7 +156,10 @@ EVENT_SCHEMA: Dict[str, Tuple[Dict[str, str], Dict[str, str]]] = {
          "overlap_efficiency": "num", "roofline_fraction": "num",
          "bytes_per_step": "num", "n_cells": "int",
          "n_unattributed": "int", "cells": "list", "streams": "dict",
-         "audit_vs_predicted": "list", "source": "str"},
+         "audit_vs_predicted": "list", "source": "str",
+         "exposed_comm_s": "num",
+         # measured-vs-predicted per-bucket ready-order rows
+         "ready_order": "list"},
     ),
     "drift": (
         {"op_kind": "str", "tier": "str", "n_samples": "int",

@@ -117,12 +117,17 @@ def staging_bytes_serial(plan) -> float:
 
 def wire_ledger_bytes(plan, comp=None, n_buckets: int = 1,
                       n_total: int = 1, block: int = 4096,
-                      spec=None) -> Tuple[float, str]:
+                      spec=None, ready=None) -> Tuple[float, str]:
     """(watermark bytes, note) of the wire category for one exchange.
 
     Serial runs (or when the pipelined timeline cannot be priced —
     no compressor / no ClusterSpec) fall back to the serial sum, which
-    is exact for one bucket and conservative otherwise."""
+    is exact for one bucket and conservative otherwise.  ``ready``
+    (per-bucket backward ready times, ``--overlap-bwd``) reprices the
+    timeline with the bwd producer stream: buckets then stage while
+    backward still produces later ones, and the watermark is the peak
+    of THAT schedule — production intervals themselves hold no staging
+    (``wire_watermark`` skips them)."""
     if plan is None:
         return 0.0, "no plan"
     serial = staging_bytes_serial(plan)
@@ -133,11 +138,16 @@ def wire_ledger_bytes(plan, comp=None, n_buckets: int = 1,
                                  wire_watermark)
     bk = Bucketer.for_exchange(plan.d, max(n_total, 1), block, n_buckets)
     pplan = lower_to_pipelined(plan, comp, bk)
-    bd = pipeline_breakdown(pplan, spec)
+    if ready is not None and len(ready) != pplan.n_buckets:
+        ready = None  # bucket clamp changed the count; fall back
+    bd = pipeline_breakdown(pplan, spec, ready=ready)
     per_bucket = bucket_staging_bytes(pplan)
     wm = wire_watermark(bd["intervals"], per_bucket)
-    return wm, (f"live watermark over {pplan.n_buckets} bucket(s) "
-                f"(sum {sum(per_bucket):.0f} B)")
+    note = (f"live watermark over {pplan.n_buckets} bucket(s) "
+            f"(sum {sum(per_bucket):.0f} B)")
+    if ready is not None:
+        note += ", bwd-overlap schedule"
+    return wm, note
 
 
 def predict_ledger(cfg, mesh, *, optim=None, layout: str = "replicated",
@@ -145,7 +155,7 @@ def predict_ledger(cfg, mesh, *, optim=None, layout: str = "replicated",
                    n_buckets: int = 1, batch_global: int = 1,
                    seq: int = 1, plan=None, spec=None,
                    capacity_bytes: Optional[float] = None,
-                   param_dtype_bytes: int = 4) -> MemoryLedger:
+                   param_dtype_bytes: int = 4, ready=None) -> MemoryLedger:
     """Build the predicted per-rank ledger for one training run.
 
     ``plan`` is the compressed-exchange :class:`~repro.plan.CommPlan`
@@ -175,7 +185,7 @@ def predict_ledger(cfg, mesh, *, optim=None, layout: str = "replicated",
     comp = getattr(optim, "compressor", None)
     wbytes, wire_note = wire_ledger_bytes(
         plan, comp, n_buckets=n_buckets, n_total=n_dp, block=block,
-        spec=spec)
+        spec=spec, ready=ready)
     abytes = activation_bytes(cfg, max(batch_global // n_dp, 1), seq, tp)
     cats = {"params": pbytes, "grads": gbytes, "opt_state": sbytes,
             "wire": wbytes, "activations": abytes}

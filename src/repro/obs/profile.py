@@ -376,9 +376,11 @@ def overlap_audit(intervals: Sequence[dict]) -> Dict[str, object]:
     ``busy`` is the union length of the stream's own intervals,
     ``hidden`` the part of it overlapped by ANY other stream, and
     ``exposed = busy - hidden`` — serialized time nothing else covers.
-    ``overlap_efficiency`` aggregates the non-compute (link) streams:
-    hidden comm / busy comm, the fraction of wire time the schedule
-    actually hid (1.0 when there is no comm to hide).
+    ``overlap_efficiency`` aggregates the link streams — everything but
+    ``compute`` and the ``bwd`` gradient-production stream (backward
+    work is a thing comm hides UNDER, not comm to hide): hidden comm /
+    busy comm, the fraction of wire time the schedule actually hid
+    (1.0 when there is no comm to hide).
     """
     by_stream: Dict[str, List[Tuple[float, float]]] = {}
     for iv in intervals:
@@ -394,7 +396,7 @@ def overlap_audit(intervals: Sequence[dict]) -> Dict[str, object]:
         hidden = span_length(intersect_spans(own, others))
         streams[s] = {"busy": busy, "hidden": hidden,
                       "exposed": busy - hidden}
-        if s != "compute":
+        if s not in ("compute", "bwd"):
             comm_busy += busy
             comm_hidden += hidden
     return {"streams": streams, "comm_busy": comm_busy,
@@ -456,6 +458,7 @@ def attribution(fold: Dict[str, object], n_steps: int,
         "comm_fraction": (audit["comm_busy"] / t_window
                           if t_window > 0 else 0.0),
         "overlap_efficiency": audit["overlap_efficiency"],
+        "exposed_comm_s": float(audit["comm_exposed"]),
         "streams": audit["streams"],
         "cells": [
             {"plan": k[0], "bucket": k[1], "stage": k[2], "kind": k[3],

@@ -128,7 +128,9 @@ def summarize(records: List[dict]) -> Dict[str, object]:
         out["plans"] = [{k: r[k] for k in
                          ("name", "stage", "d", "n_buckets",
                           "intra_hlo_bytes", "cross_hlo_bytes",
-                          "wire_send_bytes", "t_predicted") if k in r}
+                          "wire_send_bytes", "t_predicted",
+                          "overlap_bwd", "t_bwd", "ready_times")
+                         if k in r}
                         for r in plans]
 
     comm = by.get("comm", [])
@@ -167,8 +169,8 @@ def summarize(records: List[dict]) -> Dict[str, object]:
         sec = {k: p[k] for k in
                ("n_steps", "t_window", "t_attributed", "t_residual",
                 "s_per_step", "comm_fraction", "overlap_efficiency",
-                "roofline_fraction", "bytes_per_step", "n_cells",
-                "n_unattributed") if k in p}
+                "exposed_comm_s", "roofline_fraction", "bytes_per_step",
+                "n_cells", "n_unattributed") if k in p}
         if p.get("t_window"):
             sec["attributed_fraction"] = p["t_attributed"] / p["t_window"]
         if p.get("streams"):
@@ -176,6 +178,8 @@ def summarize(records: List[dict]) -> Dict[str, object]:
                               for s, row in sorted(p["streams"].items())]
         if p.get("audit_vs_predicted"):
             sec["audit_vs_predicted"] = p["audit_vs_predicted"]
+        if p.get("ready_order"):
+            sec["ready_order"] = p["ready_order"]
         if p.get("cells"):
             sec["cells"] = p["cells"]
         out["profile"] = sec
@@ -340,7 +344,8 @@ def format_report(summary: Dict[str, object]) -> str:
         head("profile (measured trace fold)")
         p = summary["profile"]
         lines += [f"  {k}: {_fmt(v)}" for k, v in p.items()
-                  if k not in ("streams", "cells", "audit_vs_predicted")]
+                  if k not in ("streams", "cells", "audit_vs_predicted",
+                               "ready_order")]
         if "streams" in p:
             lines.append("  per-stream overlap audit:")
             lines += ["    " + ln for ln in _table(
@@ -352,6 +357,13 @@ def format_report(summary: Dict[str, object]) -> str:
                 ["stream", "busy_measured", "busy_predicted",
                  "hidden_measured", "hidden_predicted",
                  "exposed_measured", "exposed_predicted"])]
+        if "ready_order" in p:
+            lines.append("  backward ready order "
+                         "(per-bucket first collective start):")
+            lines += ["    " + ln for ln in _table(
+                p["ready_order"],
+                ["bucket", "ready_predicted", "first_start_predicted",
+                 "first_start_measured"])]
         if "cells" in p:
             lines.append("  grid cells:")
             lines += ["    " + ln for ln in _table(
@@ -446,7 +458,7 @@ def _diff_rows(a: Dict[str, object], b: Dict[str, object]) -> List[dict]:
 
     row("steps/s", steps_per_s(a), steps_per_s(b))
     for field in ("s_per_step", "comm_fraction", "overlap_efficiency",
-                  "t_residual"):
+                  "exposed_comm_s", "t_residual"):
         va = (a.get("profile") or {}).get(field)
         vb = (b.get("profile") or {}).get(field)
         if va is not None or vb is not None:

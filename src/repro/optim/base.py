@@ -408,7 +408,7 @@ class TwoStageOptimizer:
         return new_x, state._replace(m=m, v=v, count=count), stats
 
     # --- compression stage (ONE path, parameterised by the slots) ----------
-    def update(self, g_local: jax.Array, state: StateTree, lr: jax.Array,
+    def update(self, g_local, state: StateTree, lr: jax.Array,
                *,
                x: Optional[jax.Array] = None,
                dp_axes: Sequence[str] = (),
@@ -448,10 +448,37 @@ class TwoStageOptimizer:
         parameter layout of the shard_map step requires).  The per-rank
         momentum itself does diverge between syncs, hence the "local"
         optimizer-state layout requirement (see repro.train.step).
+
+        ``g_local`` may be a tuple of per-bucket gradient parts
+        (backward overlap, ``repro.train.step.flat_grad_parts``): the
+        momentum fold then runs per part against the matching slice of
+        ``state.m`` — elementwise, so bitwise the full-vector fold —
+        and the UNconcatenated parts feed the exchange, keeping each
+        bucket's compress+wire chain dependent only on its own
+        gradient fragments.  A full-vector norm for the stats is taken
+        from a separate concatenation that gates nothing.
         """
         sharded = "master_shard" in state
         all_axes = tuple(pod_axes) + tuple(dp_axes)
-        m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
+        parts = g_local if isinstance(g_local, (tuple, list)) else None
+        if parts is not None and (not sync or n_buckets <= 1):
+            # no exchange to overlap (or a serial one): fold as one
+            g_local = (parts[0] if len(parts) == 1
+                       else jnp.concatenate(tuple(parts)))
+            parts = None
+        if parts is not None:
+            g_norm_in = jnp.concatenate(tuple(parts))
+            m_send, off = [], 0
+            for p in parts:
+                m_prev = jax.lax.slice(state.m, (off,),
+                                       (off + p.shape[0],))
+                m_send.append(self.b1 * m_prev + (1.0 - self.b1) * p)
+                off += p.shape[0]
+            assert off == state.m.shape[0], (off, state.m.shape)
+            m_local = tuple(m_send)
+        else:
+            g_norm_in = g_local
+            m_local = self.b1 * state.m + (1.0 - self.b1) * g_local
         if not sync:
             x_full = self._full_params(state, x, all_axes)
             stats = self._stats(
@@ -520,7 +547,7 @@ class TwoStageOptimizer:
             repl.update(v=v)
             x_full = new_master
         stats = self._stats(v_l1=jnp.sum(jnp.abs(v)),
-                            grad_norm=jnp.linalg.norm(g_local),
+                            grad_norm=jnp.linalg.norm(g_norm_in),
                             momentum_norm=jnp.linalg.norm(m_bar),
                             worker_err=errs["worker"],
                             server_err=errs["server"])

@@ -78,26 +78,51 @@ def scoped_op_names(pplan: PipelinedPlan) -> Tuple[str, ...]:
         for b, s in pplan.issue_order())
 
 
-def execute_pipelined(pplan: PipelinedPlan, comp, value: jax.Array,
-                      errs: Optional[Errs] = None
+def execute_pipelined(pplan: PipelinedPlan, comp, value,
+                      errs: Optional[Errs] = None,
+                      order: Optional[Tuple[int, ...]] = None
                       ) -> Tuple[jax.Array, Errs]:
     """Run ``pplan`` on this rank's ``value``; returns (result, new errs).
 
     Same contract as :func:`repro.plan.executor.execute_plan`: ``errs``
     must contain the keys in ``pplan.err_slots`` (full-size buffers;
     extra keys pass through untouched).
+
+    ``value`` is either the rank's flat ``(d,)`` vector (sliced into
+    per-bucket views here — every bucket then depends on the WHOLE
+    vector, the "grads done" barrier) or a tuple of per-bucket parts
+    matching the bucket sizes.  Parts are consumed as-is: bucket ``b``'s
+    first stage depends only on part ``b``, so when the parts are built
+    from per-leaf gradient fragments (``repro.train.step``) XLA's
+    scheduler may start a bucket's compress+exchange while backward is
+    still producing OTHER buckets' gradients.  In parts mode the grid
+    is issued in ready order — ``order`` defaults to reversed bucket
+    index, backprop's production order (trailing layers first) — which
+    changes trace order only, never bucket contents; results stay
+    bitwise identical (concatenation is by bucket index either way).
     """
     errs = dict(errs or {})
     missing = [s for s in pplan.err_slots if s not in errs]
     assert not missing, f"plan {pplan.name!r} needs EF slots {missing}"
-    assert value.shape == (pplan.d,), (value.shape, pplan.d)
     strides = pplan.slot_strides()
+
+    parts = value if isinstance(value, (tuple, list)) else None
+    if parts is not None:
+        assert len(parts) == pplan.n_buckets, (
+            len(parts), pplan.n_buckets)
+        for bp, part in zip(pplan.buckets, parts):
+            assert part.shape == (bp.size,), (part.shape, bp.size)
+        if order is None:
+            order = tuple(reversed(range(pplan.n_buckets)))
+    else:
+        assert value.shape == (pplan.d,), (value.shape, pplan.d)
 
     vals = []
     bucket_errs = []
-    for bp in pplan.buckets:
-        vals.append(jax.lax.slice(value, (bp.offset,),
-                                  (bp.offset + bp.size,)))
+    for b, bp in enumerate(pplan.buckets):
+        vals.append(parts[b] if parts is not None
+                    else jax.lax.slice(value, (bp.offset,),
+                                       (bp.offset + bp.size,)))
         be = {}
         for slot, f in strides.items():
             lo, hi = bp.offset // f, (bp.offset + bp.size) // f
@@ -106,7 +131,7 @@ def execute_pipelined(pplan: PipelinedPlan, comp, value: jax.Array,
 
     # wavefront issue: stage s of bucket t-s at tick t — ops of one tick
     # are mutually independent, the overlap surface for the scheduler
-    for b, s in pplan.issue_order():
+    for b, s in pplan.issue_order(order):
         op = pplan.buckets[b].plan.ops[s]
         vals[b], bucket_errs[b] = execute_op(op, comp, vals[b],
                                              bucket_errs[b],

@@ -97,15 +97,32 @@ class PipelinedPlan:
                 if b > 0:
                     yield (b, s), (b - 1, s)
 
-    def issue_order(self) -> Iterator[Tuple[int, int]]:
+    def issue_order(self, order: Optional[Tuple[int, ...]] = None
+                    ) -> Iterator[Tuple[int, int]]:
         """(bucket, stage) pairs in wavefront (tick) order: at tick t the
         ready front is {(t-s, s)} — bucket t's first stage issues beside
-        bucket t-1's second stage, double-buffered down the grid."""
-        for tick in range(self.n_buckets + self.n_stages - 1):
+        bucket t-1's second stage, double-buffered down the grid.
+
+        ``order`` (a bucket permutation) runs the SAME wavefront over
+        positions of that order instead of bucket index: position ``p``
+        carries bucket ``order[p]``.  Ready-order issue for backward
+        overlap passes ``reversed(range(n_buckets))`` — trailing layers'
+        gradients land first, so their buckets front the wavefront and
+        their exchanges trace before earlier buckets' gradients exist.
+        Bucket contents are untouched (element-keyed); only the trace
+        order of the grid points changes, so numerics are invariant."""
+        n_b = self.n_buckets
+        if order is None:
+            seq: Tuple[int, ...] = tuple(range(n_b))
+        else:
+            seq = tuple(order)
+            assert sorted(seq) == list(range(n_b)), (
+                "order must be a bucket permutation", seq)
+        for tick in range(n_b + self.n_stages - 1):
             for s in range(self.n_stages):
-                b = tick - s
-                if 0 <= b < self.n_buckets:
-                    yield b, s
+                p = tick - s
+                if 0 <= p < n_b:
+                    yield seq[p], s
 
     def slot_lengths(self) -> Dict[str, Tuple[int, ...]]:
         """Per-bucket EF-slot lengths, keyed by slot name."""

@@ -324,7 +324,8 @@ def plan_compute_time(plan: CommPlan, comp, spec: ClusterSpec) -> float:
 # --------------------------------------------------------------------------
 
 def pipeline_breakdown(pplan, spec: ClusterSpec,
-                       include_compute: bool = True) -> Dict[str, object]:
+                       include_compute: bool = True,
+                       ready=None) -> Dict[str, object]:
     """Price a pipelined plan by list-scheduling its dependency grid.
 
     Each link tier is one *stream* (resource), and — when the lowering
@@ -361,6 +362,19 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
 
     the predicted timeline :mod:`repro.obs.profile` diffs a measured
     ``jax.profiler`` trace against (per-stream hidden/exposed time).
+
+    ``ready`` (per-bucket seconds, len ``n_buckets``) adds a FOURTH
+    stream, ``"bwd"``: the backward pass producing the gradient.  It is
+    busy from 0 to ``max(ready)`` — bucket ``b``'s production interval
+    ends at ``ready[b]`` — and bucket ``b``'s first schedulable unit is
+    additionally gated on ``ready[b]``.  The wavefront then issues
+    buckets in ascending-ready order (trailing layers first, the
+    backprop order), so early-ready buckets' exchanges hide under the
+    production of later ones.  ``ready=None`` prices the pre-overlap
+    executor exactly as before; a uniform ``ready=[T_bwd]*n`` models
+    the old "grads done" barrier (every start shifts by ``T_bwd``), the
+    baseline the staggered schedule is pinned strictly below when
+    backward time exceeds the exchange's fill latency.
     """
     free: Dict[str, float] = {}
     busy: Dict[str, float] = {}
@@ -386,18 +400,43 @@ def pipeline_breakdown(pplan, spec: ClusterSpec,
     n_b, n_units = pplan.n_buckets, 3 * pplan.n_stages
     finish = [[0.0] * n_units for _ in range(n_b)]
     t_total = t_serial = 0.0
+    if ready is not None:
+        ready = [max(float(r), 0.0) for r in ready]
+        if len(ready) != n_b:
+            raise ValueError(
+                f"ready has {len(ready)} entries for {n_b} buckets")
+        # the bwd stream: one production interval per bucket, packed
+        # back-to-back in ascending-ready order (the sweep never idles)
+        order = sorted(range(n_b), key=lambda i: (ready[i], i))
+        t_prev = 0.0
+        for b in order:
+            t = ready[b] - t_prev
+            if t > 0.0:
+                busy["bwd"] = busy.get("bwd", 0.0) + t
+                free["bwd"] = ready[b]
+                intervals.append({
+                    "bucket": b, "stage": -1, "phase": "bwd",
+                    "stream": "bwd", "kind": "Bwd", "tier": "bwd",
+                    "t_start": t_prev, "t_end": ready[b]})
+                t_serial += t
+                t_total = max(t_total, ready[b])
+            t_prev = max(t_prev, ready[b])
+    else:
+        order = list(range(n_b))
     for tick in range(n_b + n_units - 1):
         for sigma in range(n_units):
-            b = tick - sigma
-            if not 0 <= b < n_b:
+            pos = tick - sigma
+            if not 0 <= pos < n_b:
                 continue
+            b = order[pos]
             s, phase = divmod(sigma, 3)
             bp = pplan.buckets[b]
             op = bp.plan.ops[s]
             pre = post = None
             if include_compute and getattr(bp, "compute", ()):
                 pre, post = bp.compute[s]
-            dep = finish[b][sigma - 1] if sigma > 0 else 0.0
+            dep = (finish[b][sigma - 1] if sigma > 0
+                   else (ready[b] if ready is not None else 0.0))
             if phase == 0:
                 t = pre.time(dev) if pre is not None else 0.0
                 stream = "compute"
@@ -447,9 +486,19 @@ def wire_watermark(intervals, bucket_bytes) -> float:
     bytes for that whole window.  The watermark is the max over time of
     the sum of in-flight buckets' bytes — what the pipelined executor
     actually keeps live at once, NOT the sum over all buckets (deep
-    pipelines retire early buckets' buffers before late ones start)."""
+    pipelines retire early buckets' buffers before late ones start).
+
+    ``"bwd"``-phase intervals (the backward-producer stream of a
+    ``ready=`` breakdown) are NOT staging: a bucket holds no wire
+    buffer while its gradient is still being produced, only from its
+    first compress/wire unit on.  They are skipped here — but because
+    ready gating spreads the exchange out under backward, an early
+    bucket's staging window now overlaps later buckets' production,
+    and the event sweep below prices exactly that concurrency."""
     spans = {}
     for rec in intervals:
+        if rec.get("phase") == "bwd":
+            continue
         b = rec["bucket"]
         lo, hi = spans.get(b, (rec["t_start"], rec["t_end"]))
         spans[b] = (min(lo, rec["t_start"]), max(hi, rec["t_end"]))

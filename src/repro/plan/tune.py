@@ -94,6 +94,16 @@ class Candidate:
     peak_bytes_per_rank: float = 0.0   # state + watermark + the caller's
     #                                    fixed bytes (params/grads/acts);
     #                                    filled by autotune's budget pass
+    overlap_bwd: bool = False    # ready-order backward overlap priced:
+    #                              t_exchange is then the EXPOSED seconds
+    #                              beyond backward (four-stream t_total
+    #                              minus t_bwd), comparable head-to-head
+    #                              with the after-backward candidates
+    t_bwd: float = 0.0           # backward seconds the overlap hid under
+    ready_times: Tuple[float, ...] = ()  # per-bucket predicted ready
+    #                                      seconds (the bwd stream's
+    #                                      schedule; plan telemetry
+    #                                      carries these)
 
     @property
     def t_step_avg(self) -> float:
@@ -122,6 +132,8 @@ class Candidate:
                 "bytes_per_step": self.bytes_per_step,
                 "dci_bytes_per_pod": self.dci_bytes_per_pod,
                 "outer_ef": self.outer_ef,
+                "overlap_bwd": self.overlap_bwd,
+                "t_bwd_s": self.t_bwd,
                 "why": self.why}
 
 
@@ -175,9 +187,12 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
                     sync_interval: int = 1,
                     use_kernel: bool = False,
                     price_compute: bool = True,
-                    layout: str = "replicated") -> Candidate:
+                    layout: str = "replicated",
+                    overlap_bwd: bool = False,
+                    t_bwd: float = 0.0,
+                    ready_times_fn=None) -> Candidate:
     """Price one (topology, compressor, block_size, n_buckets,
-    use_kernel) point.
+    use_kernel, overlap_bwd) point.
 
     ``price_compute`` folds the compressor's declared compute
     (``repro.perf``) into the price: serially for ``n_buckets == 1``
@@ -185,7 +200,19 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
     three-stream list schedule otherwise.  ``use_kernel`` prices (and,
     when the plan is executed, runs) the fused Pallas compress path —
     identical wire bytes, fewer HBM passes and launches; compressors
-    without a kernel path yield an invalid candidate."""
+    without a kernel path yield an invalid candidate.
+
+    ``overlap_bwd`` prices ready-order backward overlap through the
+    FOUR-stream breakdown: per-bucket ready times come from
+    ``ready_times_fn(offsets, d_pad)`` (the caller's
+    ``analysis.model_math.bwd_ready_times`` closure, exact per-layer
+    bwd FLOPs) or, absent one, a linear sweep of ``t_bwd`` seconds
+    over the flat vector (uniform-layer approximation).  The
+    candidate's ``t_exchange`` is then the EXPOSED time beyond
+    backward — four-stream ``t_total`` minus the backward time — so
+    overlap and after-backward candidates price the same quantity:
+    seconds the exchange ADDS to a step.  Needs ``n_buckets > 1``
+    (one bucket has no production order to exploit)."""
     from repro.optim.compressors import (compressor_has_kernel,
                                          get_compressor)  # lazy: no cycle
     kw = dict(compressor_kwargs or {})
@@ -222,6 +249,13 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         plan = schedules.flat_schedule(comp, d_pad, spec.n_total, axes,
                                        tier=tier)
         outer_ef = False
+    if overlap_bwd and n_buckets <= 1:
+        return _invalid(topology, compressor, block_size, d_pad,
+                        "overlap-bwd needs a pipelined exchange "
+                        "(n_buckets > 1)", n_buckets, sync_interval,
+                        use_kernel, layout)
+    ready = None
+    t_bwd_eff = 0.0
     if n_buckets > 1:
         from repro.pipeline import Bucketer, lower_to_pipelined
         from repro.plan.cost import (bucket_staging_bytes,
@@ -229,9 +263,21 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
         bk = Bucketer.for_exchange(d_pad, spec.n_total, block_size,
                                    n_buckets)
         pplan = lower_to_pipelined(plan, comp, bk)
+        if overlap_bwd:
+            offs = tuple(bp.offset for bp in pplan.buckets)
+            if ready_times_fn is not None:
+                ready = [max(float(r), 0.0)
+                         for r in ready_times_fn(offs, d_pad)]
+            else:
+                ready = [float(t_bwd) * (d_pad - o) / d_pad
+                         for o in offs]
+            t_bwd_eff = max(ready) if ready else 0.0
         bd = pipeline_breakdown(pplan, spec,
-                                include_compute=price_compute)
-        t_ex = bd["t_total"]
+                                include_compute=price_compute,
+                                ready=ready)
+        # overlap candidates pay only what the bwd stream fails to
+        # hide; after-backward candidates pay the whole exchange
+        t_ex = bd["t_total"] - t_bwd_eff
         t_comp = float(bd["busy"].get("compute", 0.0))
         eff_buckets = bk.n_buckets
         watermark = wire_watermark(bd["intervals"],
@@ -251,7 +297,10 @@ def build_candidate(spec: ClusterSpec, d: int, topology: str,
                      layout=layout,
                      state_bytes_per_rank=layout_state_bytes(
                          spec, d_pad, topology, layout),
-                     wire_watermark_bytes=watermark)
+                     wire_watermark_bytes=watermark,
+                     overlap_bwd=bool(overlap_bwd),
+                     t_bwd=t_bwd_eff,
+                     ready_times=tuple(ready) if ready else ())
 
 
 def enumerate_candidates(spec: ClusterSpec, d: int,
@@ -263,7 +312,10 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
                          sync_intervals: Sequence[int] = (1,),
                          use_kernel_options: Sequence[bool] = (False,),
                          price_compute: bool = True,
-                         layouts: Sequence[str] = ("replicated",)
+                         layouts: Sequence[str] = ("replicated",),
+                         overlap_bwd_options: Sequence[bool] = (False,),
+                         t_bwd: float = 0.0,
+                         ready_times_fn=None
                          ) -> Tuple[Candidate, ...]:
     from repro.optim.compressors import list_compressors
     names = list(compressors) if compressors else list_compressors()
@@ -274,39 +326,46 @@ def enumerate_candidates(spec: ClusterSpec, d: int,
             for block in block_sizes:
                 for nb in n_buckets_options:
                     for uk in use_kernel_options:
-                        # build/price the plan ONCE; the sync interval
-                        # only rescales the derived per-step figures,
-                        # and the layout only swaps the slot-registry
-                        # state bytes — neither re-lowers the plan
-                        base = build_candidate(
-                            spec, d, topo, name, block,
-                            compressor_kwargs, n_buckets=nb,
-                            use_kernel=uk,
-                            price_compute=price_compute,
-                            layout=layouts[0])
-                        for lay in layouts:
-                            c = base if lay == layouts[0] else \
-                                dataclasses.replace(
-                                    base, layout=lay,
-                                    state_bytes_per_rank=(
-                                        layout_state_bytes(
-                                            spec, base.d_padded, topo,
-                                            lay)
-                                        if base.valid else 0))
-                            out.extend(dataclasses.replace(
-                                c, sync_interval=max(si, 1))
-                                for si in sync_intervals)
+                        for ob in overlap_bwd_options:
+                            if ob and nb <= 1:
+                                continue   # nothing to ready-order
+                            # build/price the plan ONCE; the sync
+                            # interval only rescales the derived
+                            # per-step figures, and the layout only
+                            # swaps the slot-registry state bytes —
+                            # neither re-lowers the plan
+                            base = build_candidate(
+                                spec, d, topo, name, block,
+                                compressor_kwargs, n_buckets=nb,
+                                use_kernel=uk,
+                                price_compute=price_compute,
+                                layout=layouts[0],
+                                overlap_bwd=ob, t_bwd=t_bwd,
+                                ready_times_fn=ready_times_fn)
+                            for lay in layouts:
+                                c = base if lay == layouts[0] else \
+                                    dataclasses.replace(
+                                        base, layout=lay,
+                                        state_bytes_per_rank=(
+                                            layout_state_bytes(
+                                                spec, base.d_padded,
+                                                topo, lay)
+                                            if base.valid else 0))
+                                out.extend(dataclasses.replace(
+                                    c, sync_interval=max(si, 1))
+                                    for si in sync_intervals)
     return tuple(out)
 
 
 def _dedupe(cands: Tuple[Candidate, ...]) -> Tuple[Candidate, ...]:
     """Clamped bucket counts collapse onto the same effective candidate;
     keep the first of each (topology, comp, block, buckets, kernel,
-    interval)."""
+    interval, overlap)."""
     seen, out = set(), []
     for c in cands:
         key = (c.topology, c.compressor, c.block_size, c.n_buckets,
-               c.sync_interval, c.use_kernel, c.layout, c.valid)
+               c.sync_interval, c.use_kernel, c.layout, c.overlap_bwd,
+               c.valid)
         if key in seen:
             continue
         seen.add(key)
@@ -328,7 +387,10 @@ def autotune(spec: ClusterSpec, d: int,
              layouts: Sequence[str] = ("replicated",),
              max_state_bytes_per_rank: Optional[int] = None,
              hbm_capacity: Optional[float] = None,
-             fixed_bytes_per_rank: float = 0.0) -> TuneResult:
+             fixed_bytes_per_rank: float = 0.0,
+             overlap_bwd_options: Sequence[bool] = (False,),
+             t_bwd: float = 0.0,
+             ready_times_fn=None) -> TuneResult:
     """Cheapest valid plan on ``spec`` for a ``d``-element exchange.
 
     Selection order: smallest ``sync_interval`` first (update frequency
@@ -359,11 +421,19 @@ def autotune(spec: ClusterSpec, d: int,
     for fabrics whose compute genuinely runs elsewhere).  Link-only
     pricing cannot distinguish ``use_kernel`` candidates (identical
     wire bytes): the tie-break then always keeps the jnp path.
+
+    ``overlap_bwd_options`` adds the backward-overlap axis: overlap
+    candidates are priced with the four-stream schedule (per-bucket
+    ready times from ``ready_times_fn(offsets, d_pad)`` or the linear
+    ``t_bwd`` ramp) and charged only the exchange time EXPOSED beyond
+    the backward pass, so they compete head-to-head with after-backward
+    candidates.  Ties prefer overlap off (simpler trace).
     """
     table = _dedupe(enumerate_candidates(
         spec, d, compressors, block_sizes, topologies, compressor_kwargs,
         n_buckets_options, sync_intervals, use_kernel_options,
-        price_compute, layouts))
+        price_compute, layouts, overlap_bwd_options, t_bwd,
+        ready_times_fn))
     if (max_bytes_per_step is not None or max_t_per_step is not None
             or max_state_bytes_per_rank is not None
             or hbm_capacity is not None):
@@ -398,5 +468,6 @@ def autotune(spec: ClusterSpec, d: int,
                                      c.n_buckets,
                                      TOPOLOGIES.index(c.topology),
                                      -c.block_size, c.use_kernel,
+                                     c.overlap_bwd,
                                      _LAYOUTS.index(c.layout)))
     return TuneResult(best=best, table=table)

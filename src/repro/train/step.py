@@ -109,6 +109,19 @@ class TrainStepConfig:
     #                                must be resolved by the driver
     #                                (launch.train, via the repro.perf
     #                                compute model) before steps build
+    overlap_bwd: Any = "off"        # backward overlap: "off"/False keeps
+    #                                the single "grads done" barrier;
+    #                                "on"/True feeds the pipelined
+    #                                exchange per-bucket gradient PARTS
+    #                                (built from per-leaf fragments, so
+    #                                each bucket depends only on its own
+    #                                layers' grads) issued in ready
+    #                                (reversed-bucket) order — XLA then
+    #                                hides compressed comm under
+    #                                backprop. Bitwise identical either
+    #                                way. "auto" must be resolved by the
+    #                                driver (launch.train, via the
+    #                                four-stream cost model)
     opt_kwargs: Optional[dict] = None   # extra optimizer hyperparams
     comp_kwargs: Optional[dict] = None  # extra compressor kwargs
     # legacy config object; when set it defines the optimizer (onebit_adam)
@@ -183,6 +196,18 @@ class TrainStepConfig:
         n = int(self.pipeline)
         assert n >= 1, self.pipeline
         return n
+
+    @property
+    def overlap_enabled(self) -> bool:
+        """Resolved ``overlap_bwd`` ("off" -> False, "on" -> True)."""
+        if self.overlap_bwd in (None, "off", False):
+            return False
+        assert self.overlap_bwd != "auto", \
+            ("overlap_bwd='auto' must be resolved by the driver "
+             "(launch.train.resolve_schedule, via the four-stream "
+             "pipeline cost model) before building steps")
+        assert self.overlap_bwd in ("on", True), self.overlap_bwd
+        return True
 
     @property
     def opt_block_size(self) -> int:
@@ -339,15 +364,10 @@ def _select(spec_map: Dict[str, Any], batch: Dict[str, Any]):
 # training step
 # --------------------------------------------------------------------------
 
-def flat_grads(params, batch, cfg: ArchConfig, ctx: ParallelCtx,
-               aux_weight: float, accum_steps: int, d_pad: int):
-    """Per-rank flat f32 training-loss gradient padded to ``d_pad``,
-    with its :class:`SegmentInfo` and the ``(total, metrics)`` aux —
-    the shared front half of the train step and the
-    :mod:`repro.obs.audit` probe (the probe re-runs it on the SAME
-    batch, so the audited gradient is exactly the one the next step
-    consumes).  Gradient accumulation averages over ``accum_steps``
-    microbatches before anything is flattened."""
+def _grad_tree(params, batch, cfg: ArchConfig, ctx: ParallelCtx,
+               aux_weight: float, accum_steps: int):
+    """The gradient pytree of one step (accumulation averaged in), with
+    its ``(total, metrics)`` aux — NOTHING flattened yet."""
     grad_fn = jax.value_and_grad(T.loss_fn, has_aux=True)
     if accum_steps > 1:
         a = accum_steps
@@ -373,10 +393,70 @@ def flat_grads(params, batch, cfg: ArchConfig, ctx: ParallelCtx,
     else:
         (total, metrics), grads = grad_fn(params, batch, cfg, ctx,
                                           aux_weight)
+    return grads, total, metrics
+
+
+def flat_grad_parts(grads, sizes, d_pad: int):
+    """Per-bucket f32 gradient parts — the backward-overlap front end.
+
+    ``sizes`` is the bucketer's per-bucket element counts (summing to
+    ``d_pad``).  Each part is the concatenation of the RAVELED LEAF
+    FRAGMENTS its element range covers (leaves in ``ravel_pytree``
+    order, i.e. layer order), plus explicit zeros for any padding tail
+    — so ``concatenate(parts)`` is bitwise ``flat_grads``' padded
+    ravel, while part ``b`` depends ONLY on the leaves it overlaps.
+    That per-bucket dependency is the whole point: fed unconcatenated
+    to the pipelined exchange, a trailing bucket's compress+wire chain
+    needs only the trailing layers' gradients, so XLA's scheduler can
+    start it while backward still produces earlier layers."""
+    leaves = [jnp.ravel(g).astype(jnp.float32)
+              for g in jax.tree.leaves(grads)]
+    bounds, off = [], 0
+    for g in leaves:
+        bounds.append((off, off + g.shape[0]))
+        off += g.shape[0]
+    d_r = off
+    assert sum(sizes) == d_pad >= d_r, (tuple(sizes), d_pad, d_r)
+    parts, lo = [], 0
+    for sz in sizes:
+        hi = lo + sz
+        frags = [jax.lax.slice(g, (max(lo, a) - a,), (min(hi, b) - a,))
+                 for (a, b), g in zip(bounds, leaves)
+                 if min(hi, b) > max(lo, a)]
+        n_pad = hi - max(lo, d_r)
+        if n_pad > 0:
+            frags.append(jnp.zeros((min(n_pad, sz),), jnp.float32))
+        parts.append(frags[0] if len(frags) == 1
+                     else jnp.concatenate(frags))
+        lo = hi
+    return tuple(parts)
+
+
+def flat_grads(params, batch, cfg: ArchConfig, ctx: ParallelCtx,
+               aux_weight: float, accum_steps: int, d_pad: int,
+               bucket_sizes=None):
+    """Per-rank flat f32 training-loss gradient padded to ``d_pad``,
+    with its :class:`SegmentInfo` and the ``(total, metrics)`` aux —
+    the shared front half of the train step and the
+    :mod:`repro.obs.audit` probe (the probe re-runs it on the SAME
+    batch, so the audited gradient is exactly the one the next step
+    consumes).  Gradient accumulation averages over ``accum_steps``
+    microbatches before anything is flattened.
+
+    With ``bucket_sizes`` (backward overlap) the first return value is
+    the tuple of per-bucket parts from :func:`flat_grad_parts` instead
+    of one ``(d_pad,)`` vector — bitwise the same elements, without
+    the whole-vector ravel every bucket would otherwise depend on."""
+    grads, total, metrics = _grad_tree(params, batch, cfg, ctx,
+                                       aux_weight, accum_steps)
+    segs = segments_of(grads, d_pad)
+    if bucket_sizes is not None:
+        return (flat_grad_parts(grads, bucket_sizes, d_pad), segs,
+                total, metrics)
     g_flat, _ = ravel_pytree(grads)
     d_r = g_flat.shape[0]
     g_flat = jnp.pad(g_flat.astype(jnp.float32), (0, d_pad - d_r))
-    return g_flat, segments_of(grads, d_pad), total, metrics
+    return g_flat, segs, total, metrics
 
 
 def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
@@ -418,12 +498,24 @@ def make_train_step(cfg: ArchConfig, mesh: Mesh, tsc: TrainStepConfig,
     # the outer axes — see core/comm.py); matches init_train_state
     d_pad = _flat_dim(cfg, tp, n_dp, block)
 
+    # backward overlap: per-bucket gradient parts replace the whole-
+    # vector ravel, sized by the SAME bucketer the pipelined exchange
+    # lowers with (core/comm._execute) so the parts land on its buckets
+    # exactly. Only a synchronous compressed pipelined exchange has
+    # anything to hide comm under; everything else keeps the flat path.
+    bucket_sizes = None
+    if (tsc.overlap_enabled and tsc.stage == "compressed" and tsc.sync
+            and tsc.n_buckets > 1):
+        from repro.pipeline import Bucketer  # lazy: no cycle
+        bucket_sizes = Bucketer.for_exchange(
+            d_pad, n_dp, block, tsc.n_buckets).sizes
+
     def step(params, opt, batch, lr):
         flat0, unravel = ravel_pytree(params)
         d_r = flat0.shape[0]
         g_flat, segs, total, metrics = flat_grads(
             params, batch, cfg, ctx, tsc.aux_weight, tsc.accum_steps,
-            d_pad)
+            d_pad, bucket_sizes=bucket_sizes)
 
         # global -> per-rank views: flatten every non-scalar slot (the
         # per-rank shard of any slot is its length with singleton leads)

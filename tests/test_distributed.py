@@ -1037,6 +1037,140 @@ class TestPipelinedParity:
         assert out.count("OK") == 2
 
 
+class TestBackwardOverlapParity:
+    """Acceptance pin (a) for backward overlap: feeding the optimizer
+    PER-BUCKET gradient parts (``--overlap-bwd on``: the
+    ``flat_grad_parts`` path, parts sized by the SAME Bucketer the
+    pipelined exchange lowers with, issued trailing-first) must be
+    BITWISE the serial whole-vector path across
+    (flat, hier) x (replicated, zero1) x (onebit, topk, identity) over
+    three chained steps.  Overlap changes WHEN bytes move, never what
+    arrives: the per-part momentum fold is an elementwise re-slicing of
+    the full-vector fold, and the unconcatenated parts land on exactly
+    the pipelined executor's buckets."""
+
+    def test_parts_vs_serial_all_combos(self):
+        out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_mesh
+        from repro.optim import get_compressor, get_optimizer
+        from repro.pipeline import Bucketer
+
+        mesh = make_mesh((2, 4), ("pod", "data"))
+        block = 128
+        d = 6 * 8 * block          # 6 alignment units -> 4 UNEVEN buckets
+        NB = 4
+        sizes = Bucketer.for_exchange(d, 8, block, NB).sizes
+        cuts = np.cumsum(sizes)[:-1].tolist()
+        rng = np.random.default_rng(23)
+        gs = [jnp.asarray(rng.normal(size=(2, 4, d)).astype(np.float32))
+              for _ in range(3)]
+        x0 = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+
+        def stack(a):
+            return jnp.broadcast_to(a, (2, 4) + a.shape)
+
+        def spec_like(tree):
+            return jax.tree.map(
+                lambda a: P("pod", "data", *([None] * (a.ndim - 2))), tree)
+
+        def as_parts(g):
+            # the flat_grad_parts contract: per-bucket contiguous slices
+            return tuple(jnp.split(g, cuts))
+
+        for kind in ("onebit", "topk", "identity"):
+            comp = get_compressor(kind, block_size=block)
+            opt = get_optimizer("onebit_adam", compressor=comp)
+            for topo in ("flat", "hier"):
+                if topo == "hier":
+                    inner, outer, n_in = ("data",), ("pod",), 4
+                else:
+                    inner, outer, n_in = ("pod", "data"), (), None
+
+                # --- replicated layout ------------------------------
+                def run(parts):
+                    st = jax.tree.map(stack,
+                                      opt.init_state(d, 8, n_inner=n_in))
+                    x = stack(x0)
+
+                    def body(g, s, xx):
+                        s1 = jax.tree.map(lambda a: a[0, 0], s)
+                        gin = as_parts(g[0, 0]) if parts else g[0, 0]
+                        nb = NB if parts else 1
+                        nx, ns, _ = opt.update(
+                            gin, s1, jnp.float32(1e-2), x=xx[0, 0],
+                            dp_axes=inner, pod_axes=outer, n_buckets=nb)
+                        lift = lambda a: jnp.broadcast_to(
+                            a, (1, 1) + a.shape)
+                        return lift(nx), jax.tree.map(lift, ns)
+
+                    sp = spec_like(st)
+                    f = jax.jit(jax.shard_map(
+                        body, mesh=mesh,
+                        in_specs=(P("pod", "data", None), sp,
+                                  P("pod", "data", None)),
+                        out_specs=(P("pod", "data", None), sp),
+                        check_vma=False))
+                    for g in gs:
+                        x, st = f(g, st, x)
+                    return x, st
+
+                x1, s1 = run(False)
+                x2, s2 = run(True)
+                np.testing.assert_array_equal(np.asarray(x1),
+                                              np.asarray(x2))
+                np.testing.assert_array_equal(np.asarray(s1.m),
+                                              np.asarray(s2.m))
+                np.testing.assert_array_equal(np.asarray(s1.worker_err),
+                                              np.asarray(s2.worker_err))
+                print("OK", "replicated", topo, kind)
+
+                # --- zero1 layout -----------------------------------
+                def run_z(parts):
+                    st = opt.init_state(d, 8, n_inner=n_in,
+                                        layout="zero1")
+                    chunks = x0.reshape(2, 4, d // 8)
+                    st = st._replace(
+                        v_shard=jnp.ones_like(st.v_shard) * 0.1)
+                    stt = jax.tree.map(stack, st)
+                    stt = stt._replace(master_shard=chunks)
+
+                    def body(g, s):
+                        s1 = jax.tree.map(lambda a: a[0, 0], s)
+                        gin = as_parts(g[0, 0]) if parts else g[0, 0]
+                        nb = NB if parts else 1
+                        xf, ns, _ = opt.update(
+                            gin, s1, jnp.float32(1e-2),
+                            dp_axes=inner, pod_axes=outer, n_buckets=nb)
+                        lift = lambda a: jnp.broadcast_to(
+                            a, (1, 1) + a.shape)
+                        return lift(xf), jax.tree.map(lift, ns)
+
+                    sp = spec_like(stt)
+                    f = jax.jit(jax.shard_map(
+                        body, mesh=mesh, in_specs=(P("pod", "data", None),
+                                                   sp),
+                        out_specs=(P("pod", "data", None), sp),
+                        check_vma=False))
+                    for g in gs:
+                        xf, stt = f(g, stt)
+                    return xf, stt
+
+                x1, s1 = run_z(False)
+                x2, s2 = run_z(True)
+                np.testing.assert_array_equal(np.asarray(x1),
+                                              np.asarray(x2))
+                np.testing.assert_array_equal(np.asarray(s1.m),
+                                              np.asarray(s2.m))
+                np.testing.assert_array_equal(
+                    np.asarray(s1.master_shard),
+                    np.asarray(s2.master_shard))
+                print("OK", "zero1", topo, kind)
+        """, timeout=1800)
+        assert out.count("OK") == 12
+
+
 class TestSeqShardedDecode:
     def test_flash_decoding_matches_single_device(self):
         """long_500k path: KV cache sequence-sharded over dp, partial

@@ -108,6 +108,57 @@ class TestWireWatermark:
         assert 0.0 < wm <= sum(per_bucket)
         assert len(per_bucket) == pplan.n_buckets
 
+    def test_bwd_production_intervals_hold_no_staging(self):
+        """A bwd (gradient-production) interval spanning the whole
+        schedule must not change the watermark: production is compute,
+        the staging buffer only exists once the bucket's wire ops run."""
+        from repro.plan import wire_watermark
+        ivs = [self._iv(0, 0.0, 2.0), self._iv(1, 1.0, 3.0)]
+        bwd = {"bucket": 1, "stage": -1, "phase": "bwd", "stream": "bwd",
+               "kind": "Bwd", "tier": "bwd", "t_start": 0.0, "t_end": 3.0}
+        assert wire_watermark(ivs + [bwd], [100.0, 60.0]) == \
+            wire_watermark(ivs, [100.0, 60.0])
+
+    def test_wire_row_pinned_under_overlap_bwd(self):
+        """The ledger's wire row under ``--overlap-bwd on`` equals the
+        standalone four-stream watermark — same bucketer, same ready
+        times — and stays bounded by the serial sum."""
+        from repro.obs.mem import wire_ledger_bytes
+        from repro.optim import get_compressor
+        from repro.pipeline import Bucketer, lower_to_pipelined
+        from repro.plan import flat_schedule, get_cluster
+        from repro.plan.cost import (bucket_staging_bytes,
+                                     pipeline_breakdown, wire_watermark)
+        comp = get_compressor("onebit", block_size=512)
+        plan = flat_schedule(comp, 8192, 4, ("data",))
+        spec = get_cluster("ethernet-10g", 4)
+        ready = [3e-4, 2e-4, 1e-4, 0.0]   # trailing buckets ready first
+        wm, note = wire_ledger_bytes(plan, comp, n_buckets=4, n_total=4,
+                                     block=512, spec=spec, ready=ready)
+        bk = Bucketer.for_exchange(8192, 4, 512, 4)
+        pplan = lower_to_pipelined(plan, comp, bk)
+        bd = pipeline_breakdown(pplan, spec, ready=ready)
+        per_bucket = bucket_staging_bytes(pplan)
+        assert wm == wire_watermark(bd["intervals"], per_bucket)
+        assert 0.0 < wm <= sum(per_bucket)
+        assert "bwd-overlap" in note
+
+    def test_wire_row_falls_back_when_ready_len_mismatches(self):
+        """A clamped bucket count invalidates the ready list; the ledger
+        must fall back to the barrier schedule, not crash or misprice."""
+        from repro.obs.mem import wire_ledger_bytes
+        from repro.optim import get_compressor
+        from repro.plan import flat_schedule, get_cluster
+        comp = get_compressor("onebit", block_size=512)
+        plan = flat_schedule(comp, 8192, 4, ("data",))
+        spec = get_cluster("ethernet-10g", 4)
+        base, _ = wire_ledger_bytes(plan, comp, n_buckets=4, n_total=4,
+                                    block=512, spec=spec)
+        wrong, _ = wire_ledger_bytes(plan, comp, n_buckets=4, n_total=4,
+                                     block=512, spec=spec,
+                                     ready=[1.0, 2.0])  # wrong length
+        assert wrong == base
+
 
 # --------------------------------------------------------------------------
 # satellite 1: the registry prediction is EXACT per (optimizer x layout

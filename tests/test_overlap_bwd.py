@@ -1,0 +1,234 @@
+"""Backward-overlap pins (ISSUE 10).
+
+The producer-side ready model (``analysis/model_math``), the
+four-stream pricing advantage over the after-backward barrier
+(``plan/cost.pipeline_breakdown``), the autotuner flip on ethernet-10g
+once the exchange hides under backward (``plan/tune``), the overlap
+audit's bwd-stream exclusion (``obs/profile``), and the scheduled-HLO
+backward-overlap classifier (``benchmarks/overlap_check``).
+
+The bitwise-parity side of the feature (overlap parts path vs the
+serial whole-vector path, across topology x layout x compressor) is
+pinned on real devices in tests/test_distributed.py.
+"""
+import math
+import os
+import sys
+
+import numpy as np
+
+from repro.analysis.model_math import (bwd_ready_times, bwd_total_time,
+                                       layer_bwd_flops)
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.optim import get_compressor
+from repro.pipeline import Bucketer, lower_to_pipelined
+from repro.plan import flat_schedule, get_cluster
+from repro.plan.cost import pipeline_breakdown
+from repro.plan.tune import autotune
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "benchmarks"))
+from overlap_check import check_bwd_overlap  # noqa: E402
+
+
+def _shape():
+    return InputShape("t", 32, 4, "train")
+
+
+class TestBwdReadyModel:
+    """The piecewise-linear offset -> ready-time map that prices
+    ready-order bucketing."""
+
+    def setup_method(self):
+        self.cfg = get_config("internlm2-1.8b").reduced()
+        self.dev = get_cluster("ethernet-10g", 4).device
+
+    def test_layer_flops_positive_and_attention_heavier(self):
+        fl = layer_bwd_flops(self.cfg, _shape())
+        assert len(fl) >= 1
+        assert all(f > 0 for f in fl)
+
+    def test_ready_decreasing_in_offset(self):
+        """Backward sweeps last layer -> first while ravel order is
+        layer 0 first: later offsets are produced EARLIER, so ready
+        times must be non-increasing in offset — the whole premise of
+        issuing trailing buckets first."""
+        d = 1 << 20
+        offs = [0, d // 8, d // 4, d // 2, 3 * d // 4, d - 1]
+        ready = bwd_ready_times(offs, d, self.cfg, _shape(), self.dev)
+        assert len(ready) == len(offs)
+        for a, b in zip(ready, ready[1:]):
+            assert a >= b - 1e-18, ready
+        assert all(r >= 0.0 for r in ready)
+
+    def test_ready_at_zero_is_total_bwd_time(self):
+        """Offset 0 (the first layer's first element) exists only once
+        the ENTIRE backward pass has run: its ready time IS the
+        after-backward barrier ``bwd_total_time``."""
+        d = 1 << 20
+        ready = bwd_ready_times([0], d, self.cfg, _shape(), self.dev)
+        total = bwd_total_time(self.cfg, _shape(), self.dev)
+        assert math.isclose(ready[0], total, rel_tol=1e-9)
+        assert total > 0.0
+
+
+class TestFourStreamAdvantage:
+    """Acceptance pin (b): with staggered per-bucket ready times whose
+    span exceeds the pipeline fill latency, the four-stream makespan is
+    STRICTLY below the three-stream prediction (backward barrier, then
+    the exchange)."""
+
+    def _plans(self, nb=4):
+        block, n = 256, 4
+        d = 8 * n * block
+        comp = get_compressor("onebit", block_size=block)
+        plan = flat_schedule(comp, d, n, ("data",))
+        bk = Bucketer.for_exchange(d, n, block, nb)
+        pplan = lower_to_pipelined(plan, comp, bk)
+        spec = get_cluster("ethernet-10g", n)
+        return pplan, spec, bk
+
+    def test_four_stream_strictly_beats_barrier(self):
+        pplan, spec, bk = self._plans()
+        bd3 = pipeline_breakdown(pplan, spec)
+        # backward long enough that its span dwarfs the fill latency:
+        # the exchange of every already-produced bucket hides entirely
+        t_bwd = 10.0 * bd3["t_total"]
+        offs, d = bk.offsets, bk.d
+        ready = [t_bwd * (1.0 - o / d) for o in offs]   # trailing first
+        bd4 = pipeline_breakdown(pplan, spec, ready=ready)
+        barrier = t_bwd + bd3["t_total"]
+        assert bd4["t_total"] < barrier, (bd4["t_total"], barrier)
+        # sanity floor: nothing finishes before backward itself does,
+        # nor faster than the exchange alone
+        assert bd4["t_total"] >= max(t_bwd, bd3["t_total"]) - 1e-15
+
+    def test_exposed_exchange_shrinks_with_overlap(self):
+        """The tuner's pricing quantity — exchange time exposed beyond
+        backward, ``t4 - max(ready)`` — must be below the full serial
+        exchange time when the overlap has room to hide work."""
+        pplan, spec, bk = self._plans()
+        bd3 = pipeline_breakdown(pplan, spec)
+        t_bwd = 10.0 * bd3["t_total"]
+        ready = [t_bwd * (1.0 - o / bk.d) for o in bk.offsets]
+        bd4 = pipeline_breakdown(pplan, spec, ready=ready)
+        exposed = bd4["t_total"] - max(ready)
+        assert exposed < bd3["t_total"]
+        assert exposed >= 0.0
+
+
+class TestTunerFlip:
+    """Acceptance pin: on ethernet-10g the chosen plan flips to
+    overlap (and more buckets) once the exchange hides under bwd."""
+
+    def _tune(self, t_bwd):
+        spec = get_cluster("ethernet-10g", 4)
+        # large enough that wire time dominates per-collective launch
+        # overhead — below ~1M elements bucketing never pays on this
+        # fabric and the serial plan rightly keeps winning
+        d = 2 ** 21
+        return autotune(spec, d, compressors=["onebit"],
+                        block_sizes=[4096], topologies=("flat",),
+                        n_buckets_options=(1, 2, 4, 8),
+                        overlap_bwd_options=(False, True),
+                        t_bwd=t_bwd)
+
+    def test_no_backward_time_prefers_serial(self):
+        best = self._tune(0.0).best
+        assert best.overlap_bwd is False
+        assert best.n_buckets == 1
+
+    def test_long_backward_flips_to_overlap(self):
+        best = self._tune(5e-3).best
+        assert best.overlap_bwd is True
+        assert best.n_buckets > 1
+        # the overlap winner must strictly beat the best non-overlap
+        # candidate in the same priced table
+        table = self._tune(5e-3).table
+        serial = min(c.t_step_avg for c in table
+                     if c.valid and not c.overlap_bwd)
+        assert best.t_step_avg < serial
+
+    def test_more_backward_never_fewer_buckets(self):
+        """A longer backward pass gives the scheduler more to hide
+        under: the chosen bucket count is monotone non-decreasing in
+        ``t_bwd`` across the flip."""
+        nbs = [self._tune(t).best.n_buckets
+               for t in (0.0, 1e-4, 5e-3)]
+        assert nbs == sorted(nbs), nbs
+        assert nbs[-1] > 1
+
+
+class TestOverlapAuditBwdExclusion:
+    """``obs.profile.overlap_audit``: backward production intervals are
+    work comm hides UNDER — they must not be counted as comm."""
+
+    def test_bwd_stream_not_counted_as_comm(self):
+        from repro.obs.profile import overlap_audit
+        ivs = [
+            {"stream": "compute", "t_start": 0.0, "t_end": 1.0},
+            {"stream": "bwd", "t_start": 0.0, "t_end": 2.0},
+            {"stream": "intra", "t_start": 0.5, "t_end": 1.5},
+        ]
+        audit = overlap_audit(ivs)
+        # only the intra interval is comm: 1.0s busy, fully hidden
+        # under compute/bwd
+        assert math.isclose(audit["comm_busy"], 1.0)
+        assert math.isclose(audit["comm_exposed"], 0.0)
+        assert math.isclose(audit["overlap_efficiency"], 1.0)
+        # dropping the bwd interval exposes the second half
+        audit2 = overlap_audit([ivs[0], ivs[2]])
+        assert math.isclose(audit2["comm_exposed"], 0.5)
+
+
+class TestCheckBwdOverlapClassifier:
+    """Unit pins for the scheduled-HLO heuristic on synthetic text —
+    the real compiled-module check runs in
+    ``benchmarks/overlap_check.py --bwd``."""
+
+    HLO_OVERLAPPED = """\
+HloModule m, is_scheduled=true
+
+%grad_fuse (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  ROOT %d = f32[8]{0} dot(%p, %p)
+}
+
+ENTRY %main () -> f32[8] {
+  %a = f32[8]{0} dot(%p0, %p1)
+  %s = f32[8]{0} all-reduce-start(%a)
+  %f = f32[8]{0} fusion(%a), kind=kLoop, calls=%grad_fuse
+  %dn = f32[8]{0} all-reduce-done(%s)
+}
+"""
+
+    HLO_SERIAL = """\
+HloModule m, is_scheduled=true
+
+ENTRY %main () -> f32[8] {
+  %a = f32[8]{0} dot(%p0, %p1)
+  %b = f32[8]{0} dot(%a, %a)
+  %s = f32[8]{0} all-reduce-start(%b)
+  %dn = f32[8]{0} all-reduce-done(%s)
+}
+"""
+
+    def test_start_between_dots_counts(self):
+        out = check_bwd_overlap(self.HLO_OVERLAPPED)
+        assert out["pairs"] == 1
+        assert out["n_dots"] == 2      # raw dot + dot-bearing fusion
+        assert out["overlapped_bwd"] == 1
+        (det,) = out["details"]
+        assert det["overlapped_bwd"] is True
+        assert det["dots_after"] == 1
+
+    def test_start_after_all_dots_does_not(self):
+        out = check_bwd_overlap(self.HLO_SERIAL)
+        assert out["pairs"] == 1
+        assert out["overlapped_bwd"] == 0
+
+    def test_no_async_means_nothing_to_check(self):
+        out = check_bwd_overlap("ENTRY %m () -> f32[] {\n"
+                                "  %a = f32[8]{0} dot(%x, %y)\n}\n")
+        assert out["pairs"] == 0

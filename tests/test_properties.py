@@ -140,6 +140,84 @@ class TestLossInvariances:
         assert v_pad > cfg.vocab
 
 
+class TestFourStreamScheduler:
+    """Properties of the ready-gated (backward-overlap) list scheduler
+    in ``repro.plan.cost.pipeline_breakdown``."""
+
+    def _breakdown(self, nb, raw, include_compute=True, ready=True):
+        from repro.optim import get_compressor
+        from repro.pipeline import Bucketer, lower_to_pipelined
+        from repro.plan import flat_schedule, get_cluster
+        from repro.plan.cost import pipeline_breakdown
+        block, n = 256, 4
+        d = 8 * n * block
+        comp = get_compressor("onebit", block_size=block)
+        plan = flat_schedule(comp, d, n, ("data",))
+        bk = Bucketer.for_exchange(d, n, block, nb)
+        pplan = lower_to_pipelined(plan, comp, bk)
+        spec = get_cluster("ethernet-10g", n)
+        r = [float(x) for x in raw[:pplan.n_buckets]] if ready else None
+        bd = pipeline_breakdown(pplan, spec,
+                                include_compute=include_compute, ready=r)
+        return bd, pplan, r
+
+    @given(nb=st.integers(2, 8),
+           raw=st.lists(st.floats(0.0, 1e-2), min_size=8, max_size=8),
+           compute=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_streams_never_overlap(self, nb, raw, compute):
+        """Each stream is a serial resource: its intervals must tile
+        without overlap, for ANY ready-time vector — including the
+        ``include_compute=False`` link-only pricing."""
+        bd, _, _ = self._breakdown(nb, raw, include_compute=compute)
+        by_stream = {}
+        for iv in bd["intervals"]:
+            by_stream.setdefault(iv["stream"], []).append(iv)
+        for s, ivs in by_stream.items():
+            ivs = sorted(ivs, key=lambda r: (r["t_start"], r["t_end"]))
+            for a, b in zip(ivs, ivs[1:]):
+                assert a["t_end"] <= b["t_start"] + 1e-12, (s, a, b)
+
+    @given(nb=st.integers(2, 8),
+           raw=st.lists(st.floats(0.0, 1e-2), min_size=8, max_size=8))
+    @settings(max_examples=25, deadline=None)
+    def test_no_op_starts_before_its_ready_time(self, nb, raw):
+        """A bucket's gradient does not exist before backward produces
+        it: every non-production interval of bucket *b* must start at or
+        after ``ready[b]``."""
+        bd, _, ready = self._breakdown(nb, raw)
+        for iv in bd["intervals"]:
+            if iv["phase"] == "bwd":
+                continue
+            assert iv["t_start"] >= ready[iv["bucket"]] - 1e-12, iv
+
+    @given(nb=st.integers(2, 8),
+           raw=st.lists(st.floats(1e-6, 1e-2), min_size=8, max_size=8),
+           scale=st.floats(0.0, 1.0))
+    @settings(max_examples=25, deadline=None)
+    def test_t_total_monotone_in_ready_slack(self, nb, raw, scale):
+        """Uniformly earlier ready times (an order-preserving scaling)
+        can only shrink the makespan: the scheduler must exploit slack,
+        never be hurt by it."""
+        bd_full, _, ready = self._breakdown(nb, raw)
+        bd_scaled, _, _ = self._breakdown(
+            nb, [scale * r for r in raw])
+        assert bd_scaled["t_total"] <= bd_full["t_total"] + 1e-12
+
+    @given(nb=st.integers(2, 8), t_bwd=st.floats(0.0, 1e-2))
+    @settings(max_examples=25, deadline=None)
+    def test_barrier_ready_equals_bwd_plus_three_stream(self, nb, t_bwd):
+        """``ready = [T]*nb`` is the after-backward barrier: the
+        four-stream makespan must be T + the three-stream one, to
+        float-summation-order precision (the offset threads through
+        interval chaining rather than one addition)."""
+        import math
+        bd3, pplan, _ = self._breakdown(nb, [], ready=False)
+        bd4, _, _ = self._breakdown(nb, [t_bwd] * pplan.n_buckets)
+        assert math.isclose(bd4["t_total"], t_bwd + bd3["t_total"],
+                            rel_tol=1e-9, abs_tol=1e-15)
+
+
 class TestTracerSpanProperties:
     @given(prog=st.lists(st.integers(0, 3), min_size=1, max_size=30))
     @settings(max_examples=25, deadline=None)
